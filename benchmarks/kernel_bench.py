@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: Pallas peo_check (fused) vs pure-jnp PEO path,
+and the LexBFS step breakdown. CSV rows: name,us_per_call,derived."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def bench_peo_paths(n=2048, p=0.3, repeats=3) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.paper_tables import time_fn, _block
+    from repro.core import generators as G
+    from repro.core.lexbfs import lexbfs
+    from repro.core.peo import peo_check
+    from repro.kernels.peo_check.ops import peo_check_pallas
+
+    adj = jnp.asarray(G.gnp(n, p, seed=0).adj)
+    order = jax.block_until_ready(lexbfs(adj))
+    rows = []
+    t_jnp = time_fn(lambda: _block(peo_check(adj, order)), repeats)
+    # NOTE: interpret=True executes the kernel body in Python per block —
+    # wall time on CPU is NOT the TPU figure; the derived column reports
+    # HBM-traffic ratio (the fused kernel's actual advantage on TPU).
+    t_pal = time_fn(
+        lambda: _block(peo_check_pallas(adj, order)), max(1, repeats - 1))
+    # HBM traffic model: jnp path writes/reads ln + bad + gathers (≥5·N²
+    # bytes beyond Adj); pallas path reads Adj twice + AdjP once (3·N²).
+    rows.append({
+        "name": f"peo_jnp_n{n}", "us_per_call": t_jnp * 1e3,
+        "derived": "hbm_bytes≈6N²",
+    })
+    rows.append({
+        "name": f"peo_pallas_interpret_n{n}", "us_per_call": t_pal * 1e3,
+        "derived": "hbm_bytes≈3N² (fused; interpret-mode wall time)",
+    })
+    return rows
+
+
+def bench_lexbfs(n=2048, repeats=3) -> List[Dict]:
+    import jax.numpy as jnp
+
+    from benchmarks.paper_tables import time_fn, _block
+    from repro.core import generators as G
+    from repro.core.lexbfs import lexbfs
+    from repro.core.mcs import mcs
+
+    rows = []
+    for name, gen in [
+        ("clique", G.clique(n)),
+        ("sparse", G.sparse_random(n, avg_degree=20, seed=0)),
+    ]:
+        adj = jnp.asarray(gen.adj)
+        t = time_fn(lambda: _block(lexbfs(adj)), repeats)
+        rows.append({
+            "name": f"lexbfs_{name}_n{n}", "us_per_call": t * 1e3,
+            "derived": f"{t * 1e3 / n:.2f}us/iter",
+        })
+        t2 = time_fn(lambda: _block(mcs(adj)), repeats)
+        rows.append({
+            "name": f"mcs_{name}_n{n}", "us_per_call": t2 * 1e3,
+            "derived": f"{t2 * 1e3 / n:.2f}us/iter",
+        })
+    return rows

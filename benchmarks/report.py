@@ -1,0 +1,114 @@
+"""Generate the §Dry-run and §Roofline sections of EXPERIMENTS.md from the
+dry-run JSONs. Analysis prose lives in EXPERIMENTS.md itself; this script
+refreshes the generated tables between the BEGIN/END markers.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import fmt_s, load_cells, model_flops_for
+
+EXP = "EXPERIMENTS.md"
+DRY = "experiments/dryrun"
+
+
+def gb(x) -> str:
+    return f"{float(x) / 1e9:.2f}"
+
+
+def dryrun_table(cells) -> str:
+    lines = [
+        "| mesh | arch | shape | status | HLO GFLOPs/chip | GB accessed/chip "
+        "| coll GB/chip | #coll | temp GB (unrolled) | temp GB (scan) "
+        "| compile s |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(
+                f"| {c['mesh']} | {c['arch']} | {c['shape']} | SKIP — "
+                f"{c['reason'][:60]}… | | | | | | | |")
+            continue
+        ma = c.get("memory_analysis", {})
+        mas = c.get("memory_analysis_scan", {})
+        lines.append(
+            f"| {c['mesh']} | {c['arch']} | {c['shape']} | ok "
+            f"| {c['flops'] / 1e9:.1f} | {gb(c['bytes_accessed'])} "
+            f"| {gb(c['collective_bytes'])} "
+            f"| {int(c['collectives'].get('count', 0))} "
+            f"| {gb(ma.get('temp_size_in_bytes', 0))} "
+            f"| {gb(mas['temp_size_in_bytes']) if mas else '—'} "
+            f"| {c.get('compile_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def roofline_table(cells) -> str:
+    lines = [
+        "| mesh | arch | shape | compute | memory | collective | dominant "
+        "| 6ND/HLO | roofline-frac | what moves the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    hints = {
+        ("lm", "train"): "less remat recompute + fused attention kernel "
+                         "(flash) + bf16 master-free optimizer I/O",
+        ("lm", "prefill"): "flash attention (no S×S traffic) + fused "
+                           "collective-matmul on the TP axis",
+        ("lm", "decode"): "KV-cache layout (seq-sharded gather) + batched "
+                          "HBM reads; decode is intrinsically memory-bound",
+        ("gnn", "full"): "edge-index locality (LexBFS reorder) + fused "
+                         "gather/segment_sum; replicate-node cut",
+        ("gnn", "sampled"): "amortize sampler output via bigger seed batch",
+        ("gnn", "batched"): "fuse per-graph vmap bodies",
+        ("recsys", "train"): "row-sharded table gather -> one all-to-all "
+                             "instead of per-feature gathers",
+        ("recsys", "serve"): "same; serve is gather-dominated",
+        ("recsys", "retrieval"): "candidate matmul is near-roofline already",
+        ("chordality", "test"): "batch more graphs per program; fuse the "
+                                "refinement step (see §Perf C1)",
+    }
+    for c in cells:
+        if c.get("status") == "skipped":
+            lines.append(
+                f"| {c['mesh']} | {c['arch']} | {c['shape']} | — | — | — "
+                f"| SKIP | — | — | — |")
+            continue
+        mf = model_flops_for(c)
+        ratio = mf / c["flops"] if c.get("flops") else float("nan")
+        meta = c.get("meta", {})
+        hint = hints.get((meta.get("family"), meta.get("mode")), "")
+        lines.append(
+            f"| {c['mesh']} | {c['arch']} | {c['shape']} "
+            f"| {fmt_s(c['compute_s'])} | {fmt_s(c['memory_s'])} "
+            f"| {fmt_s(c['collective_s'])} | {c['dominant']} "
+            f"| {ratio:.2f} | {c.get('roofline_fraction', 0):.3f} "
+            f"| {hint} |")
+    return "\n".join(lines)
+
+
+def replace_block(text: str, marker: str, payload: str) -> str:
+    begin = f"<!-- BEGIN {marker} -->"
+    end = f"<!-- END {marker} -->"
+    pattern = re.compile(
+        re.escape(begin) + r".*?" + re.escape(end), re.S)
+    return pattern.sub(begin + "\n" + payload + "\n" + end, text)
+
+
+def main():
+    cells = load_cells(DRY)
+    cells.sort(key=lambda c: (c["mesh"], c["arch"], c["shape"]))
+    with open(EXP) as f:
+        text = f.read()
+    text = replace_block(text, "DRYRUN_TABLE", dryrun_table(cells))
+    text = replace_block(text, "ROOFLINE_TABLE", roofline_table(cells))
+    with open(EXP, "w") as f:
+        f.write(text)
+    print(f"updated {EXP} with {len(cells)} cells")
+
+
+if __name__ == "__main__":
+    main()

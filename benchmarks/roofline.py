@@ -1,0 +1,145 @@
+"""Roofline table generator: reads the dry-run JSONs, emits §Roofline.
+
+For each (arch × shape × mesh) cell:
+    compute_s   = HLO_FLOPs(per-device) / peak_FLOPs
+    memory_s    = HLO_bytes(per-device) / HBM_bw
+    collective_s= collective_bytes(per-device) / ICI_bw
+    dominant    = argmax
+    MODEL_FLOPS = 6·N_active·D (LM) — and the useful-compute ratio
+(hardware constants in repro.train.metrics; per-device numbers because the
+SPMD module IS the per-device program).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+Emits markdown to stdout and CSV next to the JSONs.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_cells(dirpath: str) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*", "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_path"] = path
+        if d.get("status") == "ok":
+            # Recompute terms from the raw per-chip numbers (the SPMD module
+            # is the per-device program — divisor 1, not n_chips; early JSONs
+            # stored the wrong divisor).
+            from repro.train.metrics import roofline_terms
+
+            t = roofline_terms(
+                d["flops"], d["bytes_accessed"], d["collective_bytes"], 1)
+            d["compute_s"] = t.compute_s
+            d["memory_s"] = t.memory_s
+            d["collective_s"] = t.collective_s
+            d["dominant"] = t.dominant
+            d["roofline_fraction"] = t.fraction_of_roofline()
+        cells.append(d)
+    return cells
+
+
+def model_flops_for(cell: Dict) -> float:
+    """MODEL_FLOPS per chip (to compare with the per-chip HLO flops)."""
+    meta = cell.get("meta", {})
+    fam = meta.get("family")
+    n_chips = cell.get("n_chips", 1)
+    if fam == "lm":
+        tokens = meta.get("tokens_per_step", 0)
+        n_active = meta.get("active_params", 0)
+        mult = 6.0 if meta.get("mode") == "train" else 2.0
+        return mult * n_active * tokens / n_chips
+    if fam == "gnn":
+        # 2 flops/MAC; message passing ≈ 2·E·d + dense 2·N·d_in·d_out-ish —
+        # use 6·params·nodes as the train-step analogue.
+        return 6.0 * meta.get("params", 0) * 1.0 / n_chips
+    if fam == "recsys":
+        mult = 6.0 if meta.get("mode") == "train" else 2.0
+        return mult * meta.get("params", 0) * 1.0 / n_chips
+    if fam == "chordality":
+        # O(N²) boolean work per graph × batch (the paper's work bound).
+        n = meta.get("n_vertices", 0)
+        return 2.0 * n * n * meta.get("batch", 1) / n_chips
+    return 0.0
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1e-1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+    cells = load_cells(args.dir)
+    if not cells:
+        print("no dry-run JSONs found under", args.dir)
+        return 1
+
+    rows = []
+    for c in cells:
+        if c.get("status") == "skipped":
+            rows.append({
+                "mesh": c["mesh"], "arch": c["arch"], "shape": c["shape"],
+                "status": "SKIP", "reason": c.get("reason", ""),
+            })
+            continue
+        mf = model_flops_for(c)
+        ratio = mf / c["flops"] if c.get("flops") else float("nan")
+        rows.append({
+            "mesh": c["mesh"], "arch": c["arch"], "shape": c["shape"],
+            "status": "ok",
+            "compute_s": c["compute_s"], "memory_s": c["memory_s"],
+            "collective_s": c["collective_s"], "dominant": c["dominant"],
+            "model_flops_per_chip": mf,
+            "useful_ratio": ratio,
+            "roofline_fraction": c.get("roofline_fraction", 0.0),
+            "flops": c["flops"], "bytes": c["bytes_accessed"],
+            "coll_bytes": c["collective_bytes"],
+        })
+
+    # Markdown
+    print("| mesh | arch | shape | compute | memory | collective | "
+          "dominant | 6ND/HLO | roofline-frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "SKIP":
+            print(f"| {r['mesh']} | {r['arch']} | {r['shape']} | — | — | — |"
+                  f" SKIP | — | — |")
+            continue
+        print(
+            f"| {r['mesh']} | {r['arch']} | {r['shape']} "
+            f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+            f"| {fmt_s(r['collective_s'])} | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+
+    csv_path = args.csv or os.path.join(args.dir, "roofline.csv")
+    import csv as _csv
+
+    keys = ["mesh", "arch", "shape", "status", "compute_s", "memory_s",
+            "collective_s", "dominant", "model_flops_per_chip",
+            "useful_ratio", "roofline_fraction", "flops", "bytes",
+            "coll_bytes", "reason"]
+    with open(csv_path, "w", newline="") as f:
+        w = _csv.DictWriter(f, fieldnames=keys)
+        w.writeheader()
+        for r in rows:
+            w.writerow({k: r.get(k, "") for k in keys})
+    print(f"\nCSV -> {csv_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+
+    sys.exit(main())

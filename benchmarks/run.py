@@ -1,0 +1,87 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One section per paper table (Figures 6–10) + kernel micro-benches.
+Prints ``name,us_per_call,derived`` CSV rows (assignment format); the
+derived column carries the parallel-vs-sequential speedup — the paper's
+headline metric.
+
+Flags: --quick shrinks sizes (CI); --tables selects sections.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--tables", default="all",
+                    help="comma list: cliques,dense,sparse,trees,chordal,"
+                         "kernels,lexbfs")
+    args = ap.parse_args(argv)
+
+    from benchmarks import kernel_bench, paper_tables
+
+    which = (
+        ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
+         "lexbfs"]
+        if args.tables == "all" else args.tables.split(",")
+    )
+
+    print("name,us_per_call,derived")
+
+    def emit(rows):
+        for r in rows:
+            if "us_per_call" in r:  # kernel rows are preformatted
+                print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+                continue
+            par = r["parallel_jax_ms"]
+            seq = r.get("seq_habib_ms", float("nan"))
+            seq_np = r.get("seq_numpy_ms", float("nan"))
+            speedup = seq / par if par and seq == seq else float("nan")
+            speedup_np = (
+                seq_np / par if par and seq_np == seq_np else float("nan"))
+            print(
+                f"{r['name']},{par * 1e3:.1f},"
+                f"speedup_vs_habib={speedup:.2f};"
+                f"speedup_vs_numpy={speedup_np:.2f};"
+                f"n={r['n']};m={r['m_undirected']}")
+            sys.stdout.flush()
+
+    sizes = dict(
+        cliques=(256, 512, 1024) if args.quick else (256, 512, 1024, 2048),
+        dense_n=768 if args.quick else 1536,
+        sparse_n=1024 if args.quick else 4096,
+        trees_n=1024 if args.quick else 4096,
+        chordal_n=768 if args.quick else 1536,
+        n_tests=2 if args.quick else 3,
+    )
+
+    if "cliques" in which:
+        print("# paper Fig.6 - cliques", file=sys.stderr)
+        emit(paper_tables.table_cliques(sizes["cliques"]))
+    if "dense" in which:
+        print("# paper Fig.7 - dense random", file=sys.stderr)
+        emit(paper_tables.table_dense(sizes["dense_n"], sizes["n_tests"]))
+    if "sparse" in which:
+        print("# paper Fig.8 - sparse random (M=20N)", file=sys.stderr)
+        emit(paper_tables.table_sparse(sizes["sparse_n"], sizes["n_tests"]))
+    if "trees" in which:
+        print("# paper Fig.9 - trees", file=sys.stderr)
+        emit(paper_tables.table_trees(sizes["trees_n"], sizes["n_tests"]))
+    if "chordal" in which:
+        print("# paper Fig.10 - random chordal", file=sys.stderr)
+        emit(paper_tables.table_chordal(
+            sizes["chordal_n"], 3 if args.quick else 4))
+    if "kernels" in which:
+        print("# kernel micro-bench - peo paths", file=sys.stderr)
+        emit(kernel_bench.bench_peo_paths(n=1024 if args.quick else 2048))
+    if "lexbfs" in which:
+        print("# kernel micro-bench - lexbfs/mcs", file=sys.stderr)
+        emit(kernel_bench.bench_lexbfs(n=1024 if args.quick else 2048))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,107 @@
+"""End-to-end driver: train a GNN with the paper's chordality preprocessing
+in the data pipeline, for a few hundred steps, with checkpointing.
+
+    PYTHONPATH=src python examples/train_gnn_chordal.py [--steps 200]
+
+Task: node-level classification on synthetic graphs where the LABELS depend
+on graph structure (node degree buckets), and each graph is preprocessed by
+``lexbfs_reorder`` (the paper's LexBFS as a locality transform) and tagged
+with its chordality bit as an extra node feature — demonstrating the
+paper's technique as a first-class pipeline stage feeding a GNN.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import generators as G
+from repro.graphs.preprocess import chordality_feature, lexbfs_reorder
+from repro.graphs.structure import edges_from_dense
+from repro.models.common import init_params
+from repro.models.gnn.models import gnn_loss, gnn_param_specs
+from repro.optim import make_adamw, warmup_cosine
+from repro.train.train_loop import make_train_step, train
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+N_NODES = 48
+E_PAD = 8 * N_NODES
+D_FEAT = 9  # 8 random + 1 chordality bit
+
+
+class ChordalGraphTask:
+    """step-indexed source: random graph -> lexbfs reorder + chordal bit."""
+
+    def batch_at(self, step):
+        rng = np.random.default_rng((17, step))
+        kind = step % 3
+        if kind == 0:
+            g = G.random_chordal(N_NODES, k=4, subset_p=0.8, seed=step)
+        elif kind == 1:
+            g = G.sparse_random(N_NODES, avg_degree=6, seed=step)
+        else:
+            g = G.random_tree(N_NODES, seed=step)
+        g.node_feat = rng.normal(size=(N_NODES, D_FEAT - 1)).astype(
+            np.float32)
+        # the paper's technique as pipeline stages:
+        g = lexbfs_reorder(g)
+        g = chordality_feature(g)
+        edges = edges_from_dense(g.adj)
+        ed = np.zeros((2, E_PAD), np.int32)
+        ed[:, : edges.shape[1]] = edges[:, :E_PAD]
+        mask = np.zeros(E_PAD, bool)
+        mask[: edges.shape[1]] = True
+        # Labels = quantile buckets of the neighborhood-mean of feature 0 —
+        # exactly the quantity a mean-aggregator GNN computes in one hop.
+        adj_f = g.adj.astype(np.float32)
+        deg = np.maximum(adj_f.sum(1), 1.0)
+        neigh_mean = (adj_f @ g.node_feat[:, 0]) / deg
+        qs = np.quantile(neigh_mean, [0.25, 0.5, 0.75])
+        labels = np.digitize(neigh_mean, qs).astype(np.int32)
+        return {
+            "node_feat": g.node_feat.astype(np.float32),
+            "edges": ed,
+            "edge_mask": mask,
+            "node_mask": np.ones(N_NODES, bool),
+            "labels": labels,
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="graphsage-reddit")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt")
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    base = spec.make_smoke_config()
+    import dataclasses
+
+    cfg = dataclasses.replace(base, d_in=D_FEAT, d_out=4)
+    params = init_params(jax.random.PRNGKey(0), gnn_param_specs(cfg))
+    opt = make_adamw(warmup_cosine(3e-3, 20, args.steps))
+    opt_state = opt.init(params)
+    loss_fn = lambda p, b: (gnn_loss(p, b, cfg), {})
+    jit_step = jax.jit(make_train_step(loss_fn, opt))
+
+    result = train(
+        jit_step=jit_step, params=params, opt_state=opt_state,
+        source=ChordalGraphTask(), n_steps=args.steps,
+        checkpointer=Checkpointer(args.ckpt_dir), save_every=100,
+        log_every=25,
+    )
+    h = result["history"]
+    first = h[0][1]
+    last = float(np.mean([x[1] for x in h[-3:]]))
+    print(f"\ntrained {args.arch} smoke config with chordality "
+          f"preprocessing: loss {first:.3f} -> {last:.3f} over "
+          f"{result['final_step']} steps "
+          f"(median step {result['median_step_time'] * 1e3:.1f}ms)")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

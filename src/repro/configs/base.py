@@ -1,0 +1,22 @@
+"""Architecture registry plumbing."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                      # lm | gnn | recsys | chordality
+    make_config: Callable[[], Any]   # exact published config
+    make_smoke_config: Callable[[], Any]
+    rules: Dict[str, Any]            # logical-axis sharding rules
+    source: str = ""                 # citation tag from the assignment
+    notes: str = ""
+    skip_cells: Optional[Dict[str, str]] = None  # shape_id -> reason
+    optimizer: str = "adamw"         # adamw | adafactor | sgd
+    train_microbatches: int = 1      # grad-accumulation splits (memory fit)
+
+    def skipped(self, shape_id: str) -> Optional[str]:
+        return (self.skip_cells or {}).get(shape_id)

@@ -1,0 +1,37 @@
+"""The paper's own architecture: the parallel chordality-test pipeline as a
+selectable config (``--arch chordality``). A 'model' here is the batched
+LexBFS+PEO program; shapes are the paper's §7 graph classes at N≈10k."""
+import dataclasses
+
+from repro.configs.base import ArchSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ChordalityConfig:
+    name: str
+    n_pad: int           # padded vertex count (graphs padded to this)
+    batch: int
+    use_pallas_peo: bool = False
+
+
+def make_config() -> ChordalityConfig:
+    return ChordalityConfig(name="chordality", n_pad=10_240, batch=32)
+
+
+def make_smoke_config() -> ChordalityConfig:
+    return ChordalityConfig(name="chordality-smoke", n_pad=64, batch=4)
+
+
+CHORDALITY_RULES = {}  # the batch spec handles everything
+
+
+SPEC = ArchSpec(
+    arch_id="chordality",
+    family="chordality",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=CHORDALITY_RULES,
+    source="[Łupińska 2013/2015 — this paper]",
+    notes="Graph batch sharded over (pod, data); each graph's N-column "
+          "dimension sharded over 'model' for the O(N²) PEO phase.",
+)

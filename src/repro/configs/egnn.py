@@ -1,0 +1,31 @@
+"""egnn [arXiv:2102.09844] — E(n)-equivariant GNN, 4 layers, hidden 64."""
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import GNN_RULES
+from repro.models.gnn.models import GNNConfig
+
+
+def make_config(d_in: int = 16, d_out: int = 2) -> GNNConfig:
+    return GNNConfig(
+        name="egnn", kind="egnn", n_layers=4,
+        d_in=d_in, d_hidden=64, d_out=d_out,
+    )
+
+
+def make_smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="egnn-smoke", kind="egnn", n_layers=2,
+        d_in=8, d_hidden=8, d_out=4,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="egnn",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(GNN_RULES),
+    source="[arXiv:2102.09844; paper]",
+    notes="Coordinates are synthesized for non-molecular shape cells (the "
+          "equivariant update needs (N,3) positions); h-invariance and "
+          "x-equivariance are asserted in tests.",
+)

@@ -1,0 +1,30 @@
+"""gcn-cora [arXiv:1609.02907] — 2-layer GCN, hidden 16, mean/sym-norm."""
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import GNN_RULES
+from repro.models.gnn.models import GNNConfig
+
+
+def make_config(d_in: int = 1433, d_out: int = 7) -> GNNConfig:
+    return GNNConfig(
+        name="gcn-cora", kind="gcn", n_layers=2,
+        d_in=d_in, d_hidden=16, d_out=d_out,
+    )
+
+
+def make_smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="gcn-smoke", kind="gcn", n_layers=2,
+        d_in=8, d_hidden=8, d_out=4,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="gcn-cora",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(GNN_RULES),
+    source="[arXiv:1609.02907; paper]",
+    notes="Symmetric normalization with self-loops; d_in/d_out follow the "
+          "shape cell (cora 1433/7, products 100/47, ...).",
+)

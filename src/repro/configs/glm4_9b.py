@@ -1,0 +1,56 @@
+"""glm4-9b [hf:THUDM/glm-4-9b] — dense LM, RoPE, aggressive GQA (kv=2).
+40L, d_model 4096, 32 heads, d_ff 13696, vocab 151552."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import LM_DENSE_RULES
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="glm4-9b",
+        n_layers=40,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=2,
+        d_ff=13696,
+        vocab_size=151552,
+        head_dim=128,
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.float32,
+        attention_impl="xla_chunked",
+        remat="dots",
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="glm4-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=112,
+        vocab_size=160,
+        head_dim=16,
+        dtype=jnp.float32,
+        attention_impl="naive",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="glm4-9b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(LM_DENSE_RULES),
+    source="[hf:THUDM/glm-4-9b; hf]",
+    notes="kv=2 does not divide the 16-way model axis -> kv replicated "
+          "(rule fallback); q-heads/mlp/vocab TP-sharded.",
+    train_microbatches=8,
+    skip_cells={
+        "long_500k": "pure full-attention arch — 500k decode needs "
+                     "sub-quadratic attention (DESIGN.md §4)",
+    },
+)

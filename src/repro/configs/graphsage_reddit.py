@@ -1,0 +1,32 @@
+"""graphsage-reddit [arXiv:1706.02216] — 2-layer mean-aggregator SAGE,
+hidden 128, fanout sampling 25-10 (training uses the shape cell's fanout)."""
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import GNN_RULES
+from repro.models.gnn.models import GNNConfig
+
+
+def make_config(d_in: int = 602, d_out: int = 41) -> GNNConfig:
+    return GNNConfig(
+        name="graphsage-reddit", kind="graphsage", n_layers=2,
+        d_in=d_in, d_hidden=128, d_out=d_out,
+        sample_sizes=(25, 10),
+    )
+
+
+def make_smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="sage-smoke", kind="graphsage", n_layers=2,
+        d_in=8, d_hidden=8, d_out=4, sample_sizes=(3, 2),
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="graphsage-reddit",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(GNN_RULES),
+    source="[arXiv:1706.02216; paper]",
+    notes="minibatch_lg uses the real host-side neighbor sampler "
+          "(repro.graphs.sampler) with the shape cell's fanout (15, 10).",
+)

@@ -1,0 +1,58 @@
+"""h2o-danube-1.8b [arXiv:2401.16818] — llama/mistral-style dense LM with
+sliding-window attention. 24L, d_model 2560, 32 heads (GQA kv=8, head_dim
+80), d_ff 6912, vocab 32000. The SWA window makes this the one assigned LM
+arch that legitimately runs the long_500k cell (cache = window)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import LM_DENSE_RULES
+from repro.models.transformer import TransformerConfig
+
+SWA_WINDOW = 4096
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="h2o-danube-1.8b",
+        n_layers=24,
+        d_model=2560,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=6912,
+        vocab_size=32000,
+        head_dim=80,
+        swa_window=SWA_WINDOW,
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.float32,
+        attention_impl="xla_chunked",
+        remat="dots",
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="h2o-danube-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab_size=128,
+        head_dim=16,
+        swa_window=16,
+        dtype=jnp.float32,
+        attention_impl="naive",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="h2o-danube-1.8b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(LM_DENSE_RULES),
+    source="[arXiv:2401.16818; hf]",
+    notes="SWA window 4096 on all layers (paper mixes llama+mistral blocks).",
+    train_microbatches=2,
+    skip_cells={},
+)

@@ -1,0 +1,72 @@
+"""llama4-maverick-400b-a17b [meta-llama; unverified] — MoE LM: 48L,
+d_model 5120, 40 heads (GQA kv=8), d_ff 8192, vocab 202048, 128 experts
+top-1 interleaved every other layer, shared (dense) expert on MoE layers.
+"Early fusion" multimodality: the assigned entry is the text BACKBONE; the
+modality frontend is a stub (input_specs provides token ids)."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import LM_DENSE_RULES
+from repro.models.moe import MoEConfig
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-maverick-400b-a17b",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        d_ff=8192,
+        vocab_size=202048,
+        head_dim=128,
+        moe=MoEConfig(
+            n_experts=128, top_k=1, d_model=5120, d_ff=8192,
+            capacity_factor=1.25,
+        ),
+        moe_every=2,                  # alternate MoE / dense layers
+        moe_dense_parallel=True,      # shared expert on MoE layers
+        moe_groups=16,
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.bfloat16,
+        attention_impl="xla_chunked",
+        remat="full",
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab_size=128,
+        head_dim=16,
+        moe=MoEConfig(n_experts=8, top_k=1, d_model=64, d_ff=96),
+        moe_every=2,
+        moe_dense_parallel=True,
+        moe_groups=2,
+        dtype=jnp.float32,
+        attention_impl="naive",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="llama4-maverick-400b-a17b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(LM_DENSE_RULES),
+    source="[hf:meta-llama/Llama-4-Scout-17B-16E config family; unverified]",
+    notes="Text backbone only (early-fusion frontend stubbed). 40 heads "
+          "not divisible by 16 -> heads replicated; EP+mlp+vocab TP'd.",
+    optimizer="adafactor",
+    train_microbatches=8,
+    skip_cells={
+        "long_500k": "assigned config is full attention (chunked-attention "
+                     "variants not in the assignment) — skip per DESIGN.md §4",
+    },
+)

@@ -1,0 +1,38 @@
+"""pna [arXiv:2004.05718] — Principal Neighbourhood Aggregation: 4 layers,
+hidden 75, aggregators mean/max/min/std × scalers identity/amp/attenuation."""
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import GNN_RULES
+from repro.models.gnn.models import GNNConfig
+
+
+def make_config(d_in: int = 16, d_out: int = 2,
+                avg_degree: float = 4.0) -> GNNConfig:
+    return GNNConfig(
+        name="pna", kind="pna", n_layers=4,
+        d_in=d_in, d_hidden=75, d_out=d_out,
+        aggregators=("mean", "max", "min", "std"),
+        scalers=("identity", "amplification", "attenuation"),
+        avg_degree=avg_degree,
+    )
+
+
+def make_smoke_config() -> GNNConfig:
+    return GNNConfig(
+        name="pna-smoke", kind="pna", n_layers=2,
+        d_in=8, d_hidden=8, d_out=4,
+        aggregators=("mean", "max", "min", "std"),
+        scalers=("identity", "amplification", "attenuation"),
+        avg_degree=4.0,
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="pna",
+    family="gnn",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(GNN_RULES),
+    source="[arXiv:2004.05718; paper]",
+    notes="12 aggregator×scaler towers concatenated with the self feature "
+          "before the linear.",
+)

@@ -1,0 +1,61 @@
+"""qwen1.5-4b [hf:Qwen/Qwen1.5 family] — dense LM with QKV bias.
+40L, d_model 2560, 20 heads (kv=20 — full MHA), d_ff 6912, vocab 151936."""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.launch.sharding import LM_DENSE_RULES
+from repro.models.transformer import TransformerConfig
+
+
+def make_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-4b",
+        n_layers=40,
+        d_model=2560,
+        n_heads=20,
+        n_kv_heads=20,
+        d_ff=6912,
+        vocab_size=151936,
+        head_dim=128,
+        qkv_bias=True,
+        dtype=jnp.bfloat16,
+        param_dtype=jnp.float32,
+        attention_impl="xla_chunked",
+        remat="dots",
+        # 20 heads do not divide the 16-way TP axis: shard the attention
+        # region over SEQUENCE instead (EXPERIMENTS.md §Perf B).
+        sequence_parallel=True,
+    )
+
+
+def make_smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen-smoke",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=4,
+        d_ff=96,
+        vocab_size=160,
+        head_dim=16,
+        qkv_bias=True,
+        dtype=jnp.float32,
+        attention_impl="naive",
+    )
+
+
+SPEC = ArchSpec(
+    arch_id="qwen1.5-4b",
+    family="lm",
+    make_config=make_config,
+    make_smoke_config=make_smoke_config,
+    rules=dict(LM_DENSE_RULES),
+    source="[hf:Qwen/Qwen1.5-0.5B scaled per assignment; hf]",
+    notes="20 heads do not divide the 16-way model axis -> heads/kv "
+          "replicated by rule fallback; TP lands on mlp (6912/16) and vocab.",
+    train_microbatches=4,
+    skip_cells={
+        "long_500k": "pure full-attention arch — 500k decode needs "
+                     "sub-quadratic attention (DESIGN.md §4)",
+    },
+)

@@ -1,0 +1,38 @@
+"""The paper's contribution: parallel LexBFS + parallel PEO test ⇒ parallel
+chordality testing (Łupińska 2013/2015), TPU-native JAX implementation.
+
+Public API:
+  is_chordal / is_chordal_batch / chordality_certificate
+  lexbfs / mcs / bfs (order generators)
+  peo_check (order verifier)
+  make_sharded_chordality (production pjit entry point)
+Sequential references (paper baselines) live in ``lexbfs_ref``.
+"""
+from repro.core.lexbfs import lexbfs, lexbfs_batched, lexbfs_numpy_dense, lexbfs_pos
+from repro.core.peo import peo_check, peo_violations, peo_check_numpy
+from repro.core.chordality import (
+    is_chordal,
+    is_chordal_batch,
+    is_chordal_host,
+    chordality_certificate,
+    make_sharded_chordality,
+)
+from repro.core.mcs import mcs, is_chordal_mcs, mcs_numpy
+from repro.core.bfs import bfs
+from repro.core.interval import (
+    is_proper_interval,
+    lexbfs_plus,
+    straight_enumeration_violations,
+)
+from repro.core import generators
+from repro.core import properties
+from repro.core import lexbfs_ref
+
+__all__ = [
+    "lexbfs", "lexbfs_batched", "lexbfs_numpy_dense", "lexbfs_pos",
+    "peo_check", "peo_violations", "peo_check_numpy",
+    "is_chordal", "is_chordal_batch", "is_chordal_host",
+    "chordality_certificate", "make_sharded_chordality",
+    "mcs", "is_chordal_mcs", "mcs_numpy", "bfs",
+    "generators", "properties", "lexbfs_ref",
+]

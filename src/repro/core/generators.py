@@ -1,0 +1,134 @@
+"""Graph generators for the paper's five test classes (§7).
+
+Classes (paper §7): cliques, dense random (M = Θ(N²)), sparse random
+(M = 20N), trees, and random chordal graphs. All generators are seeded and
+host-side (numpy); they return ``Graph`` objects with a dense adjacency.
+
+The chordal generator builds partial k-trees, which are chordal by
+construction (every vertex added adjacent to a clique ⇒ the reverse insertion
+order is a perfect elimination order); sub-sampling the attachment clique
+keeps chordality because the attachment set is still a clique.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graphs.structure import Graph, dense_from_edges
+
+
+def clique(n: int) -> Graph:
+    adj = np.ones((n, n), dtype=bool)
+    np.fill_diagonal(adj, False)
+    return Graph(n_nodes=n, adj=adj)
+
+
+def dense_random(n: int, p: float = 0.5, seed: int = 0) -> Graph:
+    """G(n, p) with p = Θ(1) ⇒ M = Θ(N²) (paper §7.2 uses N=10000)."""
+    rng = np.random.default_rng(seed)
+    upper = rng.random((n, n)) < p
+    upper = np.triu(upper, 1)
+    adj = upper | upper.T
+    return Graph(n_nodes=n, adj=adj)
+
+
+def sparse_random(n: int, avg_degree: int = 40, seed: int = 0) -> Graph:
+    """Uniform random graph with M ≈ avg_degree/2 * N undirected edges.
+
+    Paper §7.3 uses M = 20N undirected edges on N=10000 (avg degree 40).
+    """
+    rng = np.random.default_rng(seed)
+    m = (avg_degree * n) // 2
+    src = rng.integers(0, n, size=2 * m)
+    dst = rng.integers(0, n, size=2 * m)
+    keep = src != dst
+    edges = np.stack([src[keep], dst[keep]]).astype(np.int32)
+    adj = dense_from_edges(n, edges)
+    return Graph(n_nodes=n, adj=adj)
+
+
+def random_tree(n: int, seed: int = 0) -> Graph:
+    """Uniform random recursive tree (each vertex attaches to a random
+    earlier vertex). Trees are chordal (no cycles at all)."""
+    rng = np.random.default_rng(seed)
+    parents = np.array(
+        [rng.integers(0, i) for i in range(1, n)], dtype=np.int32
+    )
+    src = np.arange(1, n, dtype=np.int32)
+    edges = np.stack([src, parents])
+    adj = dense_from_edges(n, edges)
+    return Graph(n_nodes=n, adj=adj)
+
+
+def random_chordal(
+    n: int, k: int = 8, subset_p: float = 1.0, seed: int = 0
+) -> Graph:
+    """Random partial k-tree: chordal by construction.
+
+    Start from a (k+1)-clique. Every new vertex v picks a random existing
+    k-clique K and connects to a random subset of K of expected size
+    ``subset_p * k`` (always at least 1 vertex so the graph is connected).
+    With subset_p = 1 this is an exact k-tree (M ≈ kN, dense-ish for large
+    k); smaller subset_p gives sparser chordal graphs — matching the paper's
+    "chordal random graphs, including dense and sparse" (§7.5).
+    """
+    if n <= k + 1:
+        return clique(n)
+    rng = np.random.default_rng(seed)
+    adj = np.zeros((n, n), dtype=bool)
+    base = np.arange(k + 1)
+    adj[np.ix_(base, base)] = True
+    np.fill_diagonal(adj, False)
+    # Registry of k-cliques to attach to; start with the k+1 subsets of base.
+    cliques = [np.delete(base, i) for i in range(k + 1)]
+    for v in range(k + 1, n):
+        kc = cliques[rng.integers(0, len(cliques))]
+        if subset_p >= 1.0:
+            chosen = kc
+        else:
+            mask = rng.random(len(kc)) < subset_p
+            if not mask.any():
+                mask[rng.integers(0, len(kc))] = True
+            chosen = kc[mask]
+        adj[v, chosen] = True
+        adj[chosen, v] = True
+        # New k-cliques: {v} ∪ (chosen minus one), only if chosen is size k.
+        if len(chosen) == k:
+            for i in range(len(chosen)):
+                cand = np.concatenate([[v], np.delete(chosen, i)])
+                cliques.append(cand)
+        else:
+            cliques.append(np.concatenate([[v], chosen])[: k])
+        if len(cliques) > 4 * n:
+            # Bound memory: keep a random half.
+            idx = rng.permutation(len(cliques))[: 2 * n]
+            cliques = [cliques[i] for i in idx]
+    return Graph(n_nodes=n, adj=adj)
+
+
+def cycle(n: int) -> Graph:
+    """C_n: chordless for n >= 4 — canonical NON-chordal witness."""
+    src = np.arange(n, dtype=np.int32)
+    dst = (src + 1) % n
+    adj = dense_from_edges(n, np.stack([src, dst]))
+    return Graph(n_nodes=n, adj=adj)
+
+
+def path(n: int) -> Graph:
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = src + 1
+    adj = dense_from_edges(n, np.stack([src, dst]))
+    return Graph(n_nodes=n, adj=adj)
+
+
+def gnp(n: int, p: float, seed: int = 0) -> Graph:
+    """Plain G(n,p) — used by property tests (chordality varies)."""
+    return dense_random(n, p=p, seed=seed)
+
+
+PAPER_CLASSES = {
+    "cliques": clique,
+    "dense": dense_random,
+    "sparse": sparse_random,
+    "trees": random_tree,
+    "chordal": random_chordal,
+}

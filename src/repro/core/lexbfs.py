@@ -1,0 +1,202 @@
+"""Parallel Lexicographic Breadth-First Search (paper §6.1), TPU-native.
+
+The paper's CUDA design keeps vertices in a linked list of *classes* (sets of
+equal-label vertices) mutated by N threads with four barrier-separated
+kernels per iteration. On TPU we re-derive the identical partition process on
+a dense **rank representation** (see DESIGN.md §2):
+
+* ``rank[v]`` = index of v's class in the lexicographic (ascending) order of
+  labels. Larger rank ⇔ lexicographically larger label.
+* One iteration of the main (inherently sequential) loop:
+
+  1. ``current = argmax(rank over active)``   — paper kernel 4's selection
+     (any member of the lexicographically last class is valid; fixed argmax
+     tie-breaking makes the order deterministic, which the paper's racy
+     ``current ← x`` write is not).
+  2. ``key = 2·rank + Adj[current]``          — paper kernels 1–3: each class
+     splits; neighbors of ``current`` move into a class inserted right after
+     their old class (paper Lemma 6.1 / Observation 6.2). Arithmetically:
+     ``2r+1 > 2r`` within the class, and ``2·`` preserves inter-class order.
+  3. rank compaction via histogram + prefix sum — paper's empty-set deletion
+     (Lemma 6.3): a key with zero count is an empty class; compaction keeps
+     ranks in ``[0, N)`` so step 2 never overflows int32.
+
+Work: O(N) per iteration, O(N²) total — identical to the paper. Depth per
+iteration is O(log N) on TPU (the prefix sum), vs the paper's O(1) PRAM
+claim; total O(N log N) depth (honest delta, DESIGN.md §7).
+
+Everything runs inside one ``lax.scan`` so the whole LexBFS is a single
+compiled XLA program; the adjacency matrix is the only O(N²) operand.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _lexbfs_step(adj: jnp.ndarray, state, _):
+    """One LexBFS iteration. state = (rank, active)."""
+    rank, active = state
+    n = rank.shape[0]
+    # --- kernel 4 (paper): select current = any vertex of the last class.
+    score = jnp.where(active, rank, jnp.int32(-1))
+    current = jnp.argmax(score).astype(jnp.int32)
+    # --- kernel 1 (paper): mark current visited.
+    active = active.at[current].set(False)
+    # --- kernels 2+3 (paper): split classes — neighbors of current move up.
+    adjrow = jnp.take(adj, current, axis=0)  # (N,) bool
+    key = 2 * rank + (adjrow & active).astype(jnp.int32)  # in [0, 2N)
+    # --- empty-set deletion (paper Lemma 6.3) = dense-rank compaction.
+    cnt = jnp.zeros(2 * n, dtype=jnp.int32).at[key].add(
+        active.astype(jnp.int32)
+    )
+    class_idx = jnp.cumsum((cnt > 0).astype(jnp.int32)) - 1  # (2N,)
+    new_rank = jnp.take(class_idx, key)
+    rank = jnp.where(active, new_rank, rank)
+    return (rank, active), current
+
+
+@functools.partial(jax.jit, static_argnames=("return_pos",))
+def lexbfs(adj: jnp.ndarray, return_pos: bool = False):
+    """Parallel LexBFS over a dense bool adjacency matrix.
+
+    Args:
+      adj: (N, N) bool, symmetric, zero diagonal. Padding vertices (isolated,
+        at the highest indices) are visited last and do not perturb the order
+        of real vertices.
+      return_pos: also return the inverse permutation ``pos`` with
+        ``pos[v] = i ⇔ order[i] = v``.
+
+    Returns:
+      order: (N,) int32 — a valid LexBFS order (satisfies the LB-property).
+    """
+    n = adj.shape[0]
+    adj = adj.astype(bool)
+    rank0 = jnp.zeros(n, dtype=jnp.int32)
+    active0 = jnp.ones(n, dtype=bool)
+    (_, _), order = jax.lax.scan(
+        functools.partial(_lexbfs_step, adj), (rank0, active0), None, length=n
+    )
+    order = order.astype(jnp.int32)
+    if return_pos:
+        pos = jnp.zeros(n, dtype=jnp.int32).at[order].set(
+            jnp.arange(n, dtype=jnp.int32)
+        )
+        return order, pos
+    return order
+
+
+def lexbfs_batched(adj_batch: jnp.ndarray) -> jnp.ndarray:
+    """vmap'd LexBFS over a (B, N, N) batch of graphs."""
+    return jax.vmap(lambda a: lexbfs(a))(adj_batch)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper optimization: LAZY rank compaction (EXPERIMENTS.md §Perf A2).
+#
+# The faithful step compacts ranks every iteration (scatter + 2N-bin prefix
+# sum ≈ 13N of its ≈19N element-ops). But compaction is only needed to keep
+# ``2·rank + bit`` inside int32 — the UN-compacted update
+#     rank' = 2·rank + bit
+# is itself a valid (order-isomorphic) rank assignment: it preserves class
+# order and performs the same split. Since ranks start < N after a
+# compaction, K = 30 − ceil(log2 N) cheap iterations fit before overflow;
+# then one sort-based dense-rank restores rank < N. Per-iteration work drops
+# to ≈6N element-ops + an amortized O(N log N / K) sort.
+#
+# Tie-breaking is UNCHANGED (argmax over order-isomorphic keys picks the
+# same vertex), so lexbfs_fast returns bit-identical orders to lexbfs —
+# asserted in tests.
+# ---------------------------------------------------------------------------
+def _dense_rank(rank: jnp.ndarray) -> jnp.ndarray:
+    """Compact values to [0, #distinct-nonneg); any negative -> -1.
+
+    Visited lanes carry negative sentinels that drift (see §Perf A3: the
+    cheap update is applied unconditionally; negatives map to negatives
+    because 2·r + bit < 0 for every r ≤ -1), so compaction treats ALL
+    negative values as one sentinel class."""
+    s = jnp.sort(rank)
+    distinct_before = jnp.cumsum(
+        jnp.concatenate([jnp.zeros(1, jnp.int32),
+                         (s[1:] != s[:-1]).astype(jnp.int32)]))
+    idx = jnp.searchsorted(s, rank)
+    dense = jnp.take(distinct_before, idx)
+    # shift by the number of distinct negative values so actives start at 0
+    first_nonneg = jnp.searchsorted(s, 0)
+    n_neg_classes = jnp.where(
+        first_nonneg > 0, jnp.take(distinct_before, first_nonneg), 0)
+    dense = dense - n_neg_classes
+    return jnp.where(rank < 0, -1, dense).astype(jnp.int32)
+
+
+def _lexbfs_fast_outer(adj, k_inner, state, _):
+    def cheap(state, __):
+        rank = state
+        current = jnp.argmax(rank).astype(jnp.int32)
+        rank = rank.at[current].set(-1)
+        adjrow = jnp.take(adj, current, axis=0).astype(jnp.int32)
+        # Unconditional update (§Perf A3): for visited lanes (rank < 0)
+        # 2·rank + bit stays negative, so no select is needed — saves ~2N
+        # element-ops per iteration vs the masked form.
+        rank = 2 * rank + adjrow
+        return rank, current
+
+    rank = state
+    rank, currents = jax.lax.scan(cheap, rank, None, length=k_inner)
+    rank = _dense_rank(rank)
+    return rank, currents
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lexbfs_fast(adj: jnp.ndarray) -> jnp.ndarray:
+    """Optimized parallel LexBFS (lazy compaction). Same order as lexbfs."""
+    n = adj.shape[0]
+    adj = adj.astype(bool)
+    # cheap iterations before int32 overflow: rank < n grows 2x per step
+    k_inner = max(1, 30 - int(np.ceil(np.log2(max(n, 2)))))
+    n_outer = -(-n // k_inner)
+    rank0 = jnp.zeros(n, dtype=jnp.int32)
+    _, currents = jax.lax.scan(
+        functools.partial(_lexbfs_fast_outer, adj, k_inner),
+        rank0, None, length=n_outer)
+    # Tail iterations beyond n re-visit inactive lanes; the first n entries
+    # are the true order (duplicates can only appear after all n visited).
+    return currents.reshape(-1)[:n].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Dense numpy reference of the SAME rank-refinement algorithm. Serves as
+# (a) a C-speed sequential CPU baseline for dense graphs in the benchmark
+# harness, and (b) a step-by-step oracle for the JAX implementation
+# (identical tie-breaking ⇒ identical order).
+# ---------------------------------------------------------------------------
+def lexbfs_numpy_dense(adj: np.ndarray) -> np.ndarray:
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    rank = np.zeros(n, dtype=np.int64)
+    active = np.ones(n, dtype=bool)
+    order = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        score = np.where(active, rank, -1)
+        current = int(np.argmax(score))
+        order[i] = current
+        active[current] = False
+        key = 2 * rank + (adj[current] & active)
+        cnt = np.bincount(key[active], minlength=2 * n)
+        class_idx = np.cumsum(cnt > 0) - 1
+        rank = np.where(active, class_idx[key], rank)
+    return order
+
+
+def lexbfs_pos(order: jnp.ndarray) -> jnp.ndarray:
+    """Inverse permutation of an order."""
+    n = order.shape[0]
+    return (
+        jnp.zeros(n, dtype=jnp.int32)
+        .at[order]
+        .set(jnp.arange(n, dtype=jnp.int32))
+    )

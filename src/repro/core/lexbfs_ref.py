@@ -1,0 +1,224 @@
+"""Sequential reference implementations (the paper's baselines).
+
+* ``lexbfs_partition_refinement`` — Habib/McConnell/Paul/Viennot (2000)
+  partition-refinement LexBFS, O(N+M). This is the exact sequential
+  algorithm the paper benchmarks against (§7: "The sequential implementation
+  is the Habib, McConnell, Paul and Viennot algorithm presented in [2]").
+* ``lexbfs_rtl`` — Rose/Tarjan/Lueker (1976) label-bucket LexBFS, O(N+M).
+* ``peo_check_seq`` — the paper's §5.2 sequential PEO test, O(N+M).
+* ``is_chordal_seq`` — sequential chordality test = LexBFS + PEO check.
+
+These run on CSR adjacency (host, pure Python/numpy) and serve two purposes:
+(1) the CPU-side baseline for the paper's timing tables, and (2) an oracle
+for the parallel implementation's correctness tests (any LexBFS order is
+checked via the LB-property rather than demanding order equality, because
+tie-breaking differs).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _csr(adj_or_graph) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Accept a Graph or dense bool matrix; return (indptr, indices, n)."""
+    from repro.graphs.structure import Graph, csr_from_edges, edges_from_dense
+
+    if isinstance(adj_or_graph, Graph):
+        g = adj_or_graph.with_csr()
+        return g.indptr, g.indices, g.n_nodes
+    adj = np.asarray(adj_or_graph)
+    n = adj.shape[0]
+    edges = edges_from_dense(adj)
+    indptr, indices = csr_from_edges(n, edges)
+    return indptr, indices, n
+
+
+def lexbfs_partition_refinement(adj_or_graph) -> np.ndarray:
+    """Habib et al. (2000) partition-refinement LexBFS. Returns order (N,).
+
+    ``order[i]`` = vertex visited at step i. Implementation mirrors the
+    pseudo-code in the paper's §4.2: a list of classes over a vertex array;
+    visiting x splits every class C into (C ∩ N_x, C \\ N_x).
+    """
+    indptr, indices, n = _csr(adj_or_graph)
+    if n == 0:
+        return np.zeros(0, dtype=np.int32)
+
+    # Vertex array + per-vertex position; classes are [start, end) windows.
+    verts = list(range(n))
+    vpos = list(range(n))
+    # Each class: [start, end); stored as list of lists for O(1) splits.
+    class_start = [0]
+    class_end = [n]
+    class_of = [0] * n
+    # Doubly linked list of class ids in lexicographic descending order.
+    nxt = {0: None}
+    prv = {0: None}
+    head = 0
+    n_classes = 1
+
+    order = np.empty(n, dtype=np.int32)
+    visited = [False] * n
+
+    for i in range(n):
+        # Pop the first vertex of the first (lexicographically largest) class.
+        # Empty classes (only ever at the front: vertices are removed solely
+        # by head pops) are *unlinked*, not merely skipped — otherwise a later
+        # split inserting a class before the new head would attach it to the
+        # stale empty predecessor and the class would be lost.
+        while class_start[head] >= class_end[head]:
+            h2 = nxt[head]
+            prv[h2] = None
+            head = h2
+        x = verts[class_start[head]]
+        class_start[head] += 1
+        visited[x] = True
+        order[i] = x
+
+        # Partition: pull each unvisited neighbor to the front of its class,
+        # then split the class at the boundary.
+        touched = {}
+        for j in range(indptr[x], indptr[x + 1]):
+            y = indices[j]
+            if visited[y]:
+                continue
+            c = class_of[y]
+            if c not in touched:
+                touched[c] = class_start[c]
+            # Swap y to the 'pulled' front region of class c.
+            boundary = touched[c]
+            py = vpos[y]
+            other = verts[boundary]
+            verts[boundary], verts[py] = y, other
+            vpos[y], vpos[other] = boundary, py
+            touched[c] = boundary + 1
+        for c, boundary in touched.items():
+            if boundary >= class_end[c] or boundary <= class_start[c]:
+                continue  # whole class (or nothing) pulled: no split
+            # New class = pulled region [start, boundary); it precedes c.
+            nc = n_classes
+            n_classes += 1
+            class_start.append(class_start[c])
+            class_end.append(boundary)
+            class_of_update = range(class_start[c], boundary)
+            for k in class_of_update:
+                class_of[verts[k]] = nc
+            class_start[c] = boundary
+            #
+
+            p = prv[c]
+            nxt[nc] = c
+            prv[nc] = p
+            prv[c] = nc
+            if p is None:
+                head = nc
+            else:
+                nxt[p] = nc
+    return order
+
+
+def lexbfs_rtl(adj_or_graph) -> np.ndarray:
+    """Rose–Tarjan–Lueker (1976) LexBFS with explicit label sets.
+
+    O(N+M) amortized via bucket lists keyed by label; we use a simpler
+    O(N+M log N)-ish dict-of-tuples variant — it is a *reference*, clarity
+    over constant factors. Returns order (N,).
+    """
+    indptr, indices, n = _csr(adj_or_graph)
+    labels: List[tuple] = [() for _ in range(n)]
+    visited = [False] * n
+    order = np.empty(n, dtype=np.int32)
+    import heapq
+
+    # Min-heap on a negated key so the lexicographically LARGEST label pops
+    # first. Plain element negation breaks prefix ordering (label (5,) must
+    # outrank its prefix ()), so every key ends with a sentinel +1 that is
+    # larger than any negated element: key((5,)) = (-5, 1) < key(()) = (1,).
+    def key(label: tuple) -> tuple:
+        return tuple(-x for x in label) + (1,)
+
+    heap = [(key(()), v) for v in range(n)]
+    heapq.heapify(heap)
+
+    for i in range(n):
+        while True:
+            k, x = heapq.heappop(heap)
+            if not visited[x] and k == key(labels[x]):
+                break
+        visited[x] = True
+        order[i] = x
+        stamp = n - (i + 1) + 1  # paper's N-i with 1-based i: always >= 1
+        for j in range(indptr[x], indptr[x + 1]):
+            y = indices[j]
+            if not visited[y]:
+                labels[y] = labels[y] + (stamp,)
+                heapq.heappush(heap, (key(labels[y]), y))
+    return order
+
+
+def peo_check_seq(adj_or_graph, order: np.ndarray) -> bool:
+    """Paper §5.2: test whether ``order`` is a perfect elimination order.
+
+    For each v: LN_v = left neighborhood, p_v = rightmost of LN_v;
+    check LN_v − {p_v} ⊆ LN_{p_v}. O(N+M) with the visited-array trick.
+    """
+    indptr, indices, n = _csr(adj_or_graph)
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+
+    # LN lists + parent p_v.
+    ln: List[List[int]] = [[] for _ in range(n)]
+    parent = np.full(n, -1, dtype=np.int64)
+    for v in range(n):
+        best = -1
+        for j in range(indptr[v], indptr[v + 1]):
+            y = indices[j]
+            if pos[y] < pos[v]:
+                ln[v].append(y)
+                if best == -1 or pos[y] > pos[best]:
+                    best = y
+        parent[v] = best
+
+    visited = np.zeros(n, dtype=bool)
+    for x in range(n):
+        for j in range(indptr[x], indptr[x + 1]):
+            visited[indices[j]] = True
+        for j in range(indptr[x], indptr[x + 1]):
+            y = indices[j]
+            if parent[y] == x:
+                for z in ln[y]:
+                    if z != x and not visited[z]:
+                        return False
+        for j in range(indptr[x], indptr[x + 1]):
+            visited[indices[j]] = False
+    return True
+
+
+def is_chordal_seq(adj_or_graph) -> bool:
+    """Sequential chordality test (paper §5.2): LexBFS + PEO check."""
+    order = lexbfs_partition_refinement(adj_or_graph)
+    return peo_check_seq(adj_or_graph, order)
+
+
+def mcs_seq(adj_or_graph) -> np.ndarray:
+    """Tarjan–Yannakakis Maximum Cardinality Search (paper §5.1).
+
+    Returns an MCS order; for chordal graphs it is a PEO (Theorem 5.2).
+    """
+    indptr, indices, n = _csr(adj_or_graph)
+    weight = np.zeros(n, dtype=np.int64)
+    visited = np.zeros(n, dtype=bool)
+    order = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        # argmax over unvisited weights (O(N) per step; reference clarity).
+        w = np.where(visited, -1, weight)
+        x = int(np.argmax(w))
+        visited[x] = True
+        order[i] = x
+        for j in range(indptr[x], indptr[x + 1]):
+            y = indices[j]
+            if not visited[y]:
+                weight[y] += 1
+    return order

@@ -1,0 +1,90 @@
+"""Parallel test for perfect elimination order (paper §6.2), vectorized.
+
+The paper's two GPU kernels map to dense array ops directly:
+
+* ``preparationLNandP`` — for each x: ``LN_x`` (left neighborhood in the
+  order) and ``p_x`` (rightmost member of LN_x):
+      ``LN[v, u] = Adj[v, u] ∧ (pos[u] < pos[v])``
+      ``p_v     = argmax_u(pos[u] · LN[v, u])``
+* ``testing`` — flag := false if some ``y ∈ LN_x`` with ``y ≠ p_x`` is not in
+  ``LN_{p_x}``. Because every ``z ∈ LN_v − {p_v}`` is left of ``p_v`` in the
+  order, ``z ∈ LN_{p_v} ⇔ Adj[p_v, z]``, so the violation matrix is
+      ``bad[v, z] = LN[v, z] ∧ (z ≠ p_v) ∧ ¬Adj[p_v, z]``
+  and the answer is ``¬any(bad)``.
+
+O(N²) work, O(log N) depth. The fused block form of this test (never
+materializing LN/bad in HBM) is the Pallas kernel ``repro.kernels.peo_check``;
+this module is the pure-jnp implementation, which doubles as that kernel's
+oracle (ref.py delegates here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def peo_prepare(adj: jnp.ndarray, pos: jnp.ndarray):
+    """Compute (p, has_ln): parent vertex and LN-nonempty mask, per vertex."""
+    n = adj.shape[0]
+    posu = pos[None, :]
+    posv = pos[:, None]
+    ln = adj & (posu < posv)  # (N, N): ln[v, u] = u ∈ LN_v
+    # Rightmost (max position) left-neighbor. Inactive lanes get -1.
+    scored = jnp.where(ln, posu, -1)  # (N, N)
+    p = jnp.argmax(scored, axis=1).astype(jnp.int32)  # (N,)
+    has_ln = jnp.any(ln, axis=1)
+    return ln, p, has_ln
+
+
+@jax.jit
+def peo_check(adj: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
+    """True iff ``order`` is a perfect elimination order of ``adj``.
+
+    Pure-jnp vectorized version of the paper's parallel test (O(N²) work).
+    """
+    adj = adj.astype(bool)
+    n = adj.shape[0]
+    pos = (
+        jnp.zeros(n, dtype=jnp.int32)
+        .at[order]
+        .set(jnp.arange(n, dtype=jnp.int32))
+    )
+    ln, p, has_ln = peo_prepare(adj, pos)
+    adj_p = jnp.take(adj, p, axis=0)  # (N, N): adj_p[v, z] = Adj[p_v, z]
+    z_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    bad = ln & (z_ids != p[:, None]) & (~adj_p) & has_ln[:, None]
+    return ~jnp.any(bad)
+
+
+@jax.jit
+def peo_violations(adj: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
+    """Count of (v, z) violations — used by tests and the Pallas kernel ref."""
+    adj = adj.astype(bool)
+    n = adj.shape[0]
+    pos = (
+        jnp.zeros(n, dtype=jnp.int32)
+        .at[order]
+        .set(jnp.arange(n, dtype=jnp.int32))
+    )
+    ln, p, has_ln = peo_prepare(adj, pos)
+    adj_p = jnp.take(adj, p, axis=0)
+    z_ids = jnp.arange(n, dtype=jnp.int32)[None, :]
+    bad = ln & (z_ids != p[:, None]) & (~adj_p) & has_ln[:, None]
+    return jnp.sum(bad.astype(jnp.int32))
+
+
+def peo_check_numpy(adj: np.ndarray, order: np.ndarray) -> bool:
+    """Numpy twin (dense, C-speed) for the benchmark CPU baseline."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = np.empty(n, dtype=np.int64)
+    pos[order] = np.arange(n)
+    ln = adj & (pos[None, :] < pos[:, None])
+    scored = np.where(ln, pos[None, :], -1)
+    p = np.argmax(scored, axis=1)
+    has_ln = ln.any(axis=1)
+    adj_p = adj[p]
+    z_ids = np.arange(n)[None, :]
+    bad = ln & (z_ids != p[:, None]) & (~adj_p) & has_ln[:, None]
+    return not bad.any()

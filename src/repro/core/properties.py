@@ -1,0 +1,89 @@
+"""Order-property checkers (paper §4.1) — test oracles.
+
+* B-property  (Lemma 4.1):  π is a BFS order    ⇔ B holds.
+* LB-property (Lemma 4.2):  π is a LexBFS order ⇔ LB holds.
+
+These let the test suite validate ANY order our parallel algorithms emit
+without demanding equality with a specific sequential run (tie-breaking is
+implementation-defined; the paper itself notes "we cannot predict which"
+vertex wins a tie).
+
+Vectorized numpy, O(N³) worst case via N passes of N×N ops — fine for the
+property-test sizes (N ≤ ~300).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+_INF = np.int64(1 << 40)
+
+
+def _pos_of(order: np.ndarray) -> np.ndarray:
+    n = len(order)
+    pos = np.empty(n, dtype=np.int64)
+    pos[np.asarray(order)] = np.arange(n)
+    return pos
+
+
+def has_lb_property(adj: np.ndarray, order: np.ndarray) -> bool:
+    """LB: a<b<c, ac∈E, ab∉E ⇒ ∃d<a: db∈E, dc∉E (positions in π)."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = _pos_of(order)
+    ok = True
+    for b in range(n):
+        # amin[c] = min position of a with: a<b (pos), ac∈E, ab∉E.
+        mask_a = (~adj[:, b]) & (pos < pos[b])  # (a,)
+        cand = np.where(mask_a[:, None] & adj, pos[:, None], _INF)  # (a, c)
+        amin = cand.min(axis=0)  # (c,)
+        # dmin[c] = min position of d with db∈E, dc∉E.
+        cand_d = np.where(adj[:, b][:, None] & (~adj), pos[:, None], _INF)
+        dmin = cand_d.min(axis=0)  # (c,)
+        applies = (pos[b] < pos) & (amin < _INF)  # c with b<c and A nonempty
+        viol = applies & ~(dmin < amin)
+        if viol.any():
+            ok = False
+            break
+    return ok
+
+
+def has_b_property(adj: np.ndarray, order: np.ndarray) -> bool:
+    """B: a<b<c, ac∈E, ab∉E ⇒ ∃d<a: db∈E."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = _pos_of(order)
+    # dminB[b] = min position of any neighbor of b.
+    cand = np.where(adj, pos[:, None], _INF)
+    dminb = cand.min(axis=0)  # (b,)
+    for b in range(n):
+        mask_a = (~adj[:, b]) & (pos < pos[b])
+        cand_a = np.where(mask_a[:, None] & adj, pos[:, None], _INF)
+        amin = cand_a.min(axis=0)  # (c,)
+        applies = (pos[b] < pos) & (amin < _INF)
+        viol = applies & ~(dminb[b] < amin)
+        if viol.any():
+            return False
+    return True
+
+
+def is_peo_bruteforce(adj: np.ndarray, order: np.ndarray) -> bool:
+    """Direct definition check: every LN_v induces a clique. O(sum |LN|²)."""
+    adj = np.asarray(adj, dtype=bool)
+    pos = _pos_of(order)
+    n = adj.shape[0]
+    for v in range(n):
+        ln = np.where(adj[v] & (pos < pos[v]))[0]
+        if len(ln) > 1:
+            sub = adj[np.ix_(ln, ln)]
+            off = ~np.eye(len(ln), dtype=bool)
+            if not sub[off].all():
+                return False
+    return True
+
+
+def is_chordal_bruteforce(adj: np.ndarray) -> bool:
+    """Oracle via networkx (independent implementation)."""
+    import networkx as nx
+
+    g = nx.from_numpy_array(np.asarray(adj, dtype=int))
+    return nx.is_chordal(g)

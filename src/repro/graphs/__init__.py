@@ -1,0 +1,18 @@
+"""Graph substrate: structures, generators, sampling, preprocessing."""
+from repro.graphs.structure import (
+    Graph,
+    dense_from_edges,
+    edges_from_dense,
+    csr_from_edges,
+    pad_graph,
+    batch_graphs,
+)
+
+__all__ = [
+    "Graph",
+    "dense_from_edges",
+    "edges_from_dense",
+    "csr_from_edges",
+    "pad_graph",
+    "batch_graphs",
+]

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for flash attention (naive materialized softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jnp.ndarray:
+    """q: (Sq, D), k/v: (Skv, D) -> (Sq, D). fp32 math."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = (qf @ kf.T) / math.sqrt(d)  # (Sq, Skv)
+    q_ids = jnp.arange(sq)[:, None]
+    kv_ids = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask = mask & (kv_ids <= q_ids)
+    if window is not None:
+        mask = mask & (kv_ids > q_ids - window)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = (p / denom) @ vf
+    return out.astype(q.dtype)

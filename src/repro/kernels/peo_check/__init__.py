@@ -1,0 +1,3 @@
+from repro.kernels.peo_check.ops import peo_check_pallas, peo_violations_count
+
+__all__ = ["peo_check_pallas", "peo_violations_count"]

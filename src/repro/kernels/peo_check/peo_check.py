@@ -1,0 +1,169 @@
+"""Pallas TPU kernels for the parallel PEO test (paper §6.2).
+
+The PEO test is the paper's O(N²)-work hot spot: an N×N boolean tensor
+computation. The pure-jnp version (``repro.core.peo``) materializes three
+N×N intermediates in HBM (``ln``, ``adj_p`` selection mask, ``bad``). These
+kernels tile the computation over VMEM blocks so that only the adjacency
+matrix (and the gathered parent rows) are ever read from HBM, and nothing
+N×N is written back:
+
+* ``parent_kernel``  — paper's ``preparationLNandP``: running blockwise
+  argmax of ``pos[u]`` over the left-neighbor mask ⇒ ``p_v`` (+ max pos).
+* ``violation_kernel`` — paper's ``testing``: blockwise fused
+  ``LN ∧ (z ≠ p_v) ∧ ¬Adj[p_v, z]`` reduced to a single violation count.
+
+Block shapes are (128, 128) by default — aligned to the TPU VPU lane/sublane
+tiling for int8/int32 operands (the mask math is all VPU; no MXU use).
+Both kernels run in ``interpret=True`` mode on CPU for validation; the
+BlockSpecs below are the real TPU tiling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_V = 128
+DEFAULT_BLOCK_Z = 128
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: parents (preparationLNandP)
+# ---------------------------------------------------------------------------
+def _parent_kernel(n, adj_ref, pos_v_ref, pos_z_ref, best_pos_ref, p_ref):
+    """Grid (nv, nz), z fastest. Running argmax over z-blocks.
+
+    adj_ref:   (BV, BZ) int8     adjacency block
+    pos_v_ref: (1, BV) int32     positions of the v-tile
+    pos_z_ref: (1, BZ) int32     positions of the z-tile
+    best_pos_ref, p_ref: (1, BV) int32 accumulators (same block ∀ z-steps)
+    ``n`` (static) masks the ragged edge blocks — we do not rely on Pallas
+    zero-padding out-of-bounds loads.
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_pos_ref[...] = jnp.full_like(best_pos_ref, -1)
+        p_ref[...] = jnp.zeros_like(p_ref)
+
+    adj = adj_ref[...] != 0  # (BV, BZ)
+    pos_v = pos_v_ref[0, :]  # (BV,)
+    pos_z = pos_z_ref[0, :]  # (BZ,)
+    bz_ids = j * adj.shape[1] + jax.lax.broadcasted_iota(
+        jnp.int32, adj.shape, 1
+    )
+    adj = adj & (bz_ids < n)
+    ln = adj & (pos_z[None, :] < pos_v[:, None])  # (BV, BZ)
+    cand = jnp.where(ln, pos_z[None, :], -1)  # (BV, BZ)
+    row_best = jnp.max(cand, axis=1)  # (BV,)
+    # index of the max within the block → global vertex id
+    bz = adj.shape[1]
+    z_ids = j * bz + jax.lax.broadcasted_iota(jnp.int32, adj.shape, 1)
+    row_arg = jnp.max(jnp.where(cand == row_best[:, None], z_ids, -1), axis=1)
+    better = row_best > best_pos_ref[0, :]
+    best_pos_ref[0, :] = jnp.where(better, row_best, best_pos_ref[0, :])
+    p_ref[0, :] = jnp.where(better, row_arg, p_ref[0, :])
+
+
+def peo_parents_pallas(
+    adj_i8: jnp.ndarray,
+    pos: jnp.ndarray,
+    *,
+    block_v: int = DEFAULT_BLOCK_V,
+    block_z: int = DEFAULT_BLOCK_Z,
+    interpret: bool = True,
+):
+    """(p, best_pos) per vertex. adj_i8: (N, N) int8; pos: (N,) int32."""
+    n = adj_i8.shape[0]
+    nv, nz = pl.cdiv(n, block_v), pl.cdiv(n, block_z)
+    pos2 = pos.reshape(1, n)
+    out_shape = [
+        jax.ShapeDtypeStruct((1, n), jnp.int32),  # best_pos
+        jax.ShapeDtypeStruct((1, n), jnp.int32),  # p
+    ]
+    best_pos, p = pl.pallas_call(
+        functools.partial(_parent_kernel, n),
+        grid=(nv, nz),
+        in_specs=[
+            pl.BlockSpec((block_v, block_z), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_z), lambda i, j: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(adj_i8, pos2, pos2)
+    return p[0], best_pos[0]
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: violations (testing)
+# ---------------------------------------------------------------------------
+def _violation_kernel(
+    n, adj_ref, adjp_ref, pos_v_ref, pos_z_ref, p_ref, count_ref
+):
+    """Grid (nv, nz). Fused LN ∧ (z≠p_v) ∧ ¬Adj[p_v,z] count-reduce.
+
+    adj_ref:  (BV, BZ) int8   Adj[vtile, ztile]
+    adjp_ref: (BV, BZ) int8   Adj[p[vtile], ztile]  (rows pre-gathered)
+    count_ref: (1, 1) int32   global violation count accumulator
+    ``n`` (static) masks ragged edge blocks in both dimensions.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    adj = adj_ref[...] != 0
+    adjp = adjp_ref[...] != 0
+    pos_v = pos_v_ref[0, :]
+    pos_z = pos_z_ref[0, :]
+    p_v = p_ref[0, :]
+    bv, bz = adj.shape
+    v_ids = i * bv + jax.lax.broadcasted_iota(jnp.int32, adj.shape, 0)
+    z_ids = j * bz + jax.lax.broadcasted_iota(jnp.int32, adj.shape, 1)
+    valid = (v_ids < n) & (z_ids < n)
+    ln = adj & (pos_z[None, :] < pos_v[:, None]) & valid
+    bad = ln & (z_ids != p_v[:, None]) & (~adjp)
+    count_ref[0, 0] += jnp.sum(bad.astype(jnp.int32))
+
+
+def peo_violations_pallas(
+    adj_i8: jnp.ndarray,
+    adjp_i8: jnp.ndarray,
+    pos: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    block_v: int = DEFAULT_BLOCK_V,
+    block_z: int = DEFAULT_BLOCK_Z,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Violation count. All inputs device arrays; adj/adjp int8 (N, N)."""
+    n = adj_i8.shape[0]
+    nv, nz = pl.cdiv(n, block_v), pl.cdiv(n, block_z)
+    pos2 = pos.reshape(1, n)
+    p2 = p.reshape(1, n)
+    count = pl.pallas_call(
+        functools.partial(_violation_kernel, n),
+        grid=(nv, nz),
+        in_specs=[
+            pl.BlockSpec((block_v, block_z), lambda i, j: (i, j)),
+            pl.BlockSpec((block_v, block_z), lambda i, j: (i, j)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_z), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_v), lambda i, j: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(adj_i8, adjp_i8, pos2, pos2, p2)
+    return count[0, 0]

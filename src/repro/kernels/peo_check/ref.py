@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the peo_check Pallas kernels.
+
+Delegates to ``repro.core.peo`` — the vectorized implementation of the
+paper's §6.2 test — so the kernel is validated against the exact module the
+rest of the system uses.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.peo import peo_prepare, peo_violations
+
+
+def parents_ref(adj: jnp.ndarray, pos: jnp.ndarray):
+    """(p, best_pos) reference. adj: (N, N) bool-ish; pos: (N,) int32."""
+    ln, p, has_ln = peo_prepare(adj.astype(bool), pos)
+    best_pos = jnp.max(jnp.where(ln, pos[None, :], -1), axis=1)
+    return p, best_pos
+
+
+def violations_ref(adj: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
+    """Violation count reference (int32 scalar)."""
+    return peo_violations(adj.astype(bool), order)

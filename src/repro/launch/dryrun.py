@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks the device count on first
+#   initialization). 512 host placeholder devices back both production
+#   meshes: (16, 16) single pod and (2, 16, 16) multi-pod.
+
+"""Multi-pod dry-run: lower + compile EVERY (arch × shape) cell on the
+production meshes, print memory/cost analyses, record roofline inputs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b
+    PYTHONPATH=src python -m repro.launch.dryrun --multi-pod ...
+    PYTHONPATH=src python -m repro.launch.dryrun --out experiments/dryrun
+
+Each cell writes experiments/dryrun/<mesh>/<arch>__<shape>.json with
+flops / bytes / collective bytes / memory analysis / roofline terms.
+A sharding-mismatch, compile-OOM or unsupported collective here is a bug in
+the system (per the assignment) — failures exit nonzero.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, all_cells, get_arch
+from repro.configs.shapes import CHORDALITY_SHAPES, shapes_for_family
+from repro.launch.hlo_analysis import analyze_compiled
+from repro.launch.mesh import make_production_mesh, mesh_chip_count
+from repro.launch.specs import build_cell
+
+
+def run_cell(arch_id: str, shape_id: str, mesh, out_dir: str,
+             mesh_tag: str, verbose: bool = True) -> dict:
+    n_chips = mesh_chip_count(mesh)
+    t0 = time.time()
+    cell = build_cell(arch_id, shape_id, mesh)
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=cell.in_shardings,
+            out_shardings=cell.out_shardings,
+        )
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        if verbose:
+            print(f"  memory_analysis: {mem}")
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            print(
+                "  cost_analysis: flops=%.3e bytes=%.3e"
+                % (float(ca.get("flops", 0)), float(ca.get("bytes accessed", 0)))
+            )
+        stats = analyze_compiled(lowered, compiled, n_chips)
+    # LM train cells: second compile with scan-over-layers for a realistic
+    # memory fit (unrolled HLO defeats the CPU buffer-assigner's reuse; the
+    # production program scans, so its temp size is the honest number).
+    if cell.meta.get("family") == "lm" and cell.meta.get("mode") == "train":
+        cell_scan = build_cell(arch_id, shape_id, mesh, scan_layers=True)
+        with mesh:
+            comp2 = jax.jit(
+                cell_scan.fn,
+                in_shardings=cell_scan.in_shardings,
+                out_shardings=cell_scan.out_shardings,
+            ).lower(*cell_scan.args).compile()
+            ma2 = comp2.memory_analysis()
+            stats["memory_analysis_scan"] = {
+                "argument_size_in_bytes": int(ma2.argument_size_in_bytes),
+                "output_size_in_bytes": int(ma2.output_size_in_bytes),
+                "temp_size_in_bytes": int(ma2.temp_size_in_bytes),
+            }
+            if verbose:
+                print(
+                    "  scan-mode temp: %.2f GB"
+                    % (ma2.temp_size_in_bytes / 1e9))
+    stats.update({
+        "arch": arch_id,
+        "shape": shape_id,
+        "mesh": mesh_tag,
+        "n_chips": n_chips,
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "meta": cell.meta,
+        "status": "ok",
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_id}__{shape_id}.json")
+    with open(path, "w") as f:
+        json.dump(stats, f, indent=1)
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="single arch id")
+    ap.add_argument("--shape", default=None, help="single shape id")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--include-chordality", action="store_true",
+                    help="also run the paper's own chordality cells")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [(False, "pod1_16x16"), (True, "pod2_2x16x16")]
+    else:
+        meshes = [(args.multi_pod,
+                   "pod2_2x16x16" if args.multi_pod else "pod1_16x16")]
+
+    cells = []
+    for arch_id, shape_id, skip in all_cells():
+        if args.arch and arch_id != args.arch:
+            continue
+        if args.shape and shape_id != args.shape:
+            continue
+        cells.append((arch_id, shape_id, skip))
+    if args.include_chordality or args.arch == "chordality":
+        for shape_id in CHORDALITY_SHAPES:
+            if args.shape and shape_id != args.shape:
+                continue
+            cells.append(("chordality", shape_id, None))
+
+    failures = []
+    for multi_pod, tag in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        out_dir = os.path.join(args.out, tag)
+        for arch_id, shape_id, skip in cells:
+            label = f"[{tag}] {arch_id} × {shape_id}"
+            if skip is not None:
+                print(f"{label}: SKIP ({skip})")
+                os.makedirs(out_dir, exist_ok=True)
+                with open(os.path.join(
+                        out_dir, f"{arch_id}__{shape_id}.json"), "w") as f:
+                    json.dump({
+                        "arch": arch_id, "shape": shape_id, "mesh": tag,
+                        "status": "skipped", "reason": skip,
+                    }, f, indent=1)
+                continue
+            print(f"{label}: lowering...", flush=True)
+            try:
+                stats = run_cell(arch_id, shape_id, mesh, out_dir, tag)
+                print(
+                    f"{label}: OK  compute={stats['compute_s']*1e3:.2f}ms "
+                    f"memory={stats['memory_s']*1e3:.2f}ms "
+                    f"collective={stats['collective_s']*1e3:.2f}ms "
+                    f"dominant={stats['dominant']} "
+                    f"(compile {stats['compile_s']:.0f}s)",
+                    flush=True,
+                )
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tag, arch_id, shape_id, repr(e)))
+                print(f"{label}: FAIL {e!r}", flush=True)
+
+    print(f"\n{len(failures)} failures")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,126 @@
+"""Post-compile HLO analysis: collective bytes + roofline term extraction.
+
+``compiled.cost_analysis()`` gives flops / bytes-accessed but NOT collective
+traffic — we parse the optimized HLO text and sum the result-shape sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (result size ≈ bytes landed per participating device;
+for all-reduce it equals the operand, for all-gather it upper-bounds the
+wire bytes by n/(n−1) — methodology noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(pred|[sufc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum sizes of every dtype[shape] group in a (possibly tuple) shape."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str, top_k: int = 0) -> Dict[str, float]:
+    """Per-collective-kind byte totals from optimized HLO text.
+
+    With ``top_k`` > 0, also returns ``top``: the top-k (op, result-shape)
+    signatures aggregated by total bytes — the §Perf diagnosis view."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    agg: Dict[tuple, list] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # "%name = <shape> <op>(" — find the op name after the shape.
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        # op names carry variants like all-reduce-start / all-gather-done
+        base = None
+        for k in _COLLECTIVES:
+            if op == k or op.startswith(k + "-start"):
+                base = k
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(shape_txt)
+        out[base] += nbytes
+        out["count"] += 1
+        if top_k:
+            key = (base, shape_txt.strip()[:80])
+            if key not in agg:
+                agg[key] = [0, 0]
+            agg[key][0] += nbytes
+            agg[key][1] += 1
+    out["total"] = float(sum(out[k] for k in _COLLECTIVES))
+    if top_k:
+        top = sorted(agg.items(), key=lambda kv: -kv[1][0])[:top_k]
+        out["top"] = [
+            {"op": k[0], "shape": k[1], "bytes": v[0], "n": v[1]}
+            for k, v in top
+        ]
+    return out
+
+
+def analyze_compiled(lowered, compiled, n_chips: int) -> Dict[str, float]:
+    """All roofline inputs from one compiled cell."""
+    from repro.train.metrics import roofline_terms
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    coll = collective_bytes(hlo, top_k=12)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception:
+        pass
+    # The SPMD module IS the per-device program: cost_analysis flops/bytes
+    # and the parsed collective bytes are already PER-CHIP, so the roofline
+    # divisor is 1 (dividing by n_chips again would undercount 256x — the
+    # assignment's formula assumes global HLO totals).
+    terms = roofline_terms(flops, bytes_accessed, coll["total"], 1)
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collective_bytes": coll["total"],
+        "collectives": {
+            k: (v if k == "top" else float(v)) for k, v in coll.items()
+        },
+        "memory_analysis": mem,
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "roofline_fraction": terms.fraction_of_roofline(),
+    }

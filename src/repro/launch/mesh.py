@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod = (16, 16) (data, model) = 256 chips (one v5e
+pod); multi-pod = (2, 16, 16) (pod, data, model) = 512 chips. The dry-run
+launcher sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before
+any jax import so these meshes materialize on host placeholder devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh for in-process tests (1 device)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,130 @@
+"""Logical-axis → mesh sharding rules (MaxText/t5x-style, dependency-free).
+
+Every parameter carries logical axis names (repro.models.common.ParamSpec).
+A per-config *rules* dict maps logical names to mesh axes; this module turns
+(specs, rules, mesh) into NamedSharding trees, with two safety passes:
+
+* divisibility — a dim that does not divide by the mapped mesh-axis product
+  falls back to replication (recorded, not fatal: e.g. qwen's 20 heads on a
+  16-way model axis);
+* conflict — a mesh axis may appear once per param; later dims lose.
+
+Optimizer state shardings are derived from the parameter shardings by path
+matching (AdamW m/v mirror params exactly; Adafactor's factored vr/vc leaves
+fall back to replication — they are O(rows+cols), negligible).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ParamSpec, logical_axes
+
+
+# Default rule-sets.
+LM_DENSE_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "embed": ("data",),       # FSDP / ZeRO-3 over the data axis
+    "heads": ("model",),      # tensor parallel
+    "kv": ("model",),
+    "qkv": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "layers": None,
+    "experts": ("model",),    # EP (MoE archs)
+    "table": ("model",),      # recsys rows
+}
+
+GNN_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    # GNN params are tiny — replicate; the graph shards over data axes.
+}
+
+RECSYS_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "table": ("model",),
+}
+
+
+def spec_for(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    rules: Dict[str, Optional[Tuple[str, ...]]],
+    mesh: Mesh,
+) -> P:
+    used = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            entries.append(None)
+            continue
+        mapped = tuple(m for m in mapped if m in mesh.shape)
+        mapped = tuple(m for m in mapped if m not in used)
+        total = int(np.prod([mesh.shape[m] for m in mapped])) if mapped else 1
+        if not mapped or dim % total != 0:
+            entries.append(None)
+            continue
+        used.update(mapped)
+        entries.append(mapped if len(mapped) > 1 else mapped[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(specs, rules, mesh: Mesh):
+    """NamedSharding tree parallel to a ParamSpec tree."""
+    def one(s: ParamSpec):
+        return NamedSharding(mesh, spec_for(s.axes, s.shape, rules, mesh))
+
+    return jax.tree_util.tree_map(
+        one, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _path_str(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def state_shardings(state_abstract, params_shardings, params_abstract,
+                    mesh: Mesh):
+    """Shard optimizer state: leaves whose (path-suffix, shape) match a param
+    inherit its sharding; everything else replicates."""
+    pleaves = jax.tree_util.tree_flatten_with_path(params_abstract)[0]
+    pshards = jax.tree_util.tree_leaves(params_shardings)
+    by_path = {
+        _path_str(path): (leaf.shape, sh)
+        for (path, leaf), sh in zip(pleaves, pshards)
+    }
+
+    def match(path, leaf):
+        pp = _path_str(path)
+        # try all contiguous subpaths of the state path
+        for i in range(len(pp)):
+            for j in range(len(pp), i, -1):
+                hit = by_path.get(pp[i:j])
+                if hit is not None and tuple(hit[0]) == tuple(leaf.shape):
+                    return hit[1]
+        return replicated(mesh)
+
+    sleaves, sdef = jax.tree_util.tree_flatten_with_path(state_abstract)
+    out = [match(path, leaf) for path, leaf in sleaves]
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(state_abstract), out
+    )
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,394 @@
+"""Dry-run cell builder: (arch × shape × mesh) → lowerable jit function.
+
+For every assigned cell this produces
+    Cell(fn, args (ShapeDtypeStruct tree), in_shardings, out_shardings, meta)
+with weak-type-correct stand-ins and NO device allocation — the shannon/
+kernels ``input_specs`` pattern. ``jax.jit(fn, in_shardings=...)``.lower(
+*args).compile() succeeding for the production meshes is the multi-pod
+dry-run deliverable; its cost/memory analyses feed the roofline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.shapes import (
+    CHORDALITY_SHAPES,
+    GNN_SHAPES,
+    LM_SHAPES,
+    RECSYS_SHAPES,
+    sampled_pad_sizes,
+)
+from repro.launch.sharding import (
+    batch_axes as mesh_batch_axes,
+    param_shardings,
+    replicated,
+    state_shardings,
+)
+from repro.models.common import abstract_params, logical_axes
+from repro.optim import make_adafactor, make_adamw, warmup_cosine
+from repro.train.train_loop import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_id: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _make_optimizer(name: str):
+    sched = warmup_cosine(3e-4, 200, 10_000)
+    if name == "adafactor":
+        return make_adafactor(sched)
+    if name == "adamw":
+        return make_adamw(sched)
+    raise ValueError(name)
+
+
+def _batch_shard_count(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in mesh_batch_axes(mesh)]))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(spec, shape, mesh: Mesh, scan_layers: bool = False) -> Cell:
+    from repro.models.transformer import (
+        cache_spec,
+        transformer_decode_step,
+        transformer_loss,
+        transformer_param_specs,
+        transformer_prefill,
+    )
+
+    baxes = mesh_batch_axes(mesh)
+    nb = _batch_shard_count(mesh)
+    cfg = spec.make_config()
+    # Default: unroll layers for the dry-run — cost_analysis counts a
+    # lax.scan body once, so the roofline needs the fully-inlined HLO (exact
+    # flops/bytes/collective counts). scan_layers=True is used by a second
+    # compile pass for memory_analysis (buffer reuse across layers matches
+    # the production scan program). remat="full" is the production memory
+    # posture at these batch sizes.
+    cfg = dataclasses.replace(
+        cfg, scan_layers=scan_layers, remat="full")
+    if cfg.moe is not None:
+        # dispatch groups = data-shard count (local dispatch per shard)
+        groups = nb if (shape.global_batch * max(shape.seq_len, 1)) % nb == 0 \
+            else 1
+        if shape.mode == "decode":
+            groups = 1
+        cfg = dataclasses.replace(cfg, moe_groups=groups)
+    pspecs = transformer_param_specs(cfg)
+    params_abs = abstract_params(pspecs)
+    params_sh = param_shardings(pspecs, spec.rules, mesh)
+
+    meta = {
+        "family": "lm",
+        "mode": shape.mode,
+        "params": int(cfg.param_count()),
+        "active_params": int(cfg.active_param_count()),
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+
+    if shape.mode == "train":
+        opt = _make_optimizer(spec.optimizer)
+        state_abs = jax.eval_shape(opt.init, params_abs)
+        state_sh = state_shardings(state_abs, params_sh, params_abs, mesh)
+        loss_fn = lambda p, b: transformer_loss(p, b, cfg)
+        # Microbatching only in the scan (memory) pass: per-step cost totals
+        # are microbatch-invariant, and the unrolled cost pass must not hide
+        # work inside a scan body (cost_analysis counts it once).
+        n_micro = spec.train_microbatches if scan_layers else 1
+        step_fn = make_train_step(loss_fn, opt, n_microbatches=n_micro)
+        batch_abs = {
+            "tokens": _sds((shape.global_batch, shape.seq_len), jnp.int32),
+            "labels": _sds((shape.global_batch, shape.seq_len), jnp.int32),
+        }
+        batch_sh = {
+            k: NamedSharding(mesh, P(baxes, None)) for k in batch_abs
+        }
+        step_abs = _sds((), jnp.int32)
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+        return Cell(
+            spec.arch_id, shape.shape_id, step_fn,
+            (params_abs, state_abs, batch_abs, step_abs),
+            (params_sh, state_sh, batch_sh, None),
+            None,
+            meta,
+        )
+
+    if shape.mode == "prefill":
+        fn = lambda p, toks: transformer_prefill(p, toks, cfg)
+        toks_abs = _sds((shape.global_batch, shape.seq_len), jnp.int32)
+        toks_sh = NamedSharding(mesh, P(baxes, None))
+        meta["tokens_per_step"] = shape.global_batch * shape.seq_len
+        return Cell(
+            spec.arch_id, shape.shape_id, fn,
+            (params_abs, toks_abs), (params_sh, toks_sh), None, meta,
+        )
+
+    # decode: one new token against a seq_len cache
+    cache_abs = cache_spec(cfg, shape.global_batch, shape.seq_len)
+    s_cache = cache_abs["k"].shape[3]
+    batch_entry = baxes if shape.global_batch % nb == 0 and nb > 1 else None
+    seq_entry = "model" if s_cache % mesh.shape["model"] == 0 else None
+    cache_sh = {
+        k: NamedSharding(mesh, P(None, batch_entry, None, seq_entry, None))
+        for k in cache_abs
+    }
+    toks_abs = _sds((shape.global_batch, 1), jnp.int32)
+    toks_sh = NamedSharding(mesh, P(batch_entry, None))
+    pos_abs = _sds((), jnp.int32)
+    fn = lambda p, cache, toks, pos: transformer_decode_step(
+        p, cache, toks, pos, cfg)
+    meta["tokens_per_step"] = shape.global_batch
+    meta["cache_len"] = s_cache
+    return Cell(
+        spec.arch_id, shape.shape_id, fn,
+        (params_abs, cache_abs, toks_abs, pos_abs),
+        (params_sh, cache_sh, toks_sh, None),
+        None,
+        meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _gnn_batch_abs(n_nodes, n_edges, d_feat, with_coords, mesh: Mesh,
+                   batched: Optional[int] = None):
+    """ShapeDtypeStructs + shardings for one (padded) graph batch."""
+    all_axes = tuple(mesh.axis_names)
+    total = int(np.prod(list(mesh.shape.values())))
+    e_pad = _round_up(n_edges, total)
+    lead = () if batched is None else (batched,)
+    abs_ = {
+        "node_feat": _sds(lead + (n_nodes, d_feat), jnp.float32),
+        "edges": _sds(lead + (2, e_pad), jnp.int32),
+        "edge_mask": _sds(lead + (e_pad,), jnp.bool_),
+        "node_mask": _sds(lead + (n_nodes,), jnp.bool_),
+        "labels": _sds(lead + (n_nodes,), jnp.int32),
+    }
+    if with_coords:
+        abs_["coords"] = _sds(lead + (n_nodes, 3), jnp.float32)
+    if batched is None:
+        # edge-parallel: shard E over every mesh axis; node arrays replicated
+        sh = {
+            "node_feat": NamedSharding(mesh, P()),
+            "edges": NamedSharding(mesh, P(None, all_axes)),
+            "edge_mask": NamedSharding(mesh, P(all_axes)),
+            "node_mask": NamedSharding(mesh, P()),
+            "labels": NamedSharding(mesh, P()),
+        }
+        if with_coords:
+            sh["coords"] = NamedSharding(mesh, P())
+    else:
+        baxes = mesh_batch_axes(mesh)
+        sh = {k: NamedSharding(mesh, P(baxes)) for k in abs_}
+    return abs_, sh
+
+
+def _gnn_cell(spec, shape, mesh: Mesh) -> Cell:
+    from repro.models.gnn.models import (
+        gnn_loss, gnn_param_specs)
+
+    d_out = shape.n_classes
+    cfg = spec.make_config(d_in=shape.d_feat, d_out=d_out)
+    with_coords = cfg.kind == "egnn"
+    pspecs = gnn_param_specs(cfg)
+    params_abs = abstract_params(pspecs)
+    params_sh = param_shardings(pspecs, spec.rules, mesh)
+    opt = _make_optimizer(spec.optimizer)
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    state_sh = state_shardings(state_abs, params_sh, params_abs, mesh)
+
+    if shape.mode == "sampled":
+        n_pad, e_pad = sampled_pad_sizes(shape)
+        batch_abs, batch_sh = _gnn_batch_abs(
+            n_pad, e_pad, shape.d_feat, with_coords, mesh)
+        n_for_meta, e_for_meta = n_pad, e_pad
+    elif shape.mode == "batched":
+        batch_abs, batch_sh = _gnn_batch_abs(
+            shape.n_nodes, shape.n_edges, shape.d_feat, with_coords, mesh,
+            batched=shape.batch_graphs)
+        n_for_meta = shape.n_nodes * shape.batch_graphs
+        e_for_meta = shape.n_edges * shape.batch_graphs
+    else:  # full graph
+        batch_abs, batch_sh = _gnn_batch_abs(
+            shape.n_nodes, shape.n_edges, shape.d_feat, with_coords, mesh)
+        n_for_meta, e_for_meta = shape.n_nodes, shape.n_edges
+
+    if shape.mode == "batched":
+        loss_fn = lambda p, b: jnp.mean(
+            jax.vmap(lambda bb: gnn_loss(p, bb, cfg))(b))
+    else:
+        loss_fn = lambda p, b: gnn_loss(p, b, cfg)
+
+    step_fn = make_train_step(
+        lambda p, b: (loss_fn(p, b), {}), opt)
+    step_abs = _sds((), jnp.int32)
+    meta = {
+        "family": "gnn", "mode": shape.mode,
+        "params": sum(
+            int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(params_abs)),
+        "n_nodes": n_for_meta, "n_edges": e_for_meta,
+    }
+    return Cell(
+        spec.arch_id, shape.shape_id, step_fn,
+        (params_abs, state_abs, batch_abs, step_abs),
+        (params_sh, state_sh, batch_sh, None),
+        None, meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Recsys cells
+# ---------------------------------------------------------------------------
+def _recsys_cell(spec, shape, mesh: Mesh) -> Cell:
+    from repro.models.recsys.dcn import (
+        dcn_forward, dcn_loss, dcn_param_specs, dcn_retrieval_score)
+
+    cfg = spec.make_config()
+    offsets = cfg.embedding.offsets()
+    pspecs = dcn_param_specs(cfg)
+    params_abs = abstract_params(pspecs)
+    params_sh = param_shardings(pspecs, spec.rules, mesh)
+    baxes = mesh_batch_axes(mesh)
+    nb = _batch_shard_count(mesh)
+    offsets_j = jnp.asarray(offsets)  # closed-over constant
+
+    meta = {
+        "family": "recsys", "mode": shape.mode,
+        "params": sum(
+            int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(params_abs)),
+        "batch": shape.batch,
+    }
+
+    if shape.mode == "train":
+        opt = _make_optimizer(spec.optimizer)
+        state_abs = jax.eval_shape(opt.init, params_abs)
+        state_sh = state_shardings(state_abs, params_sh, params_abs, mesh)
+        loss_fn = lambda p, b: (dcn_loss(p, b, cfg, offsets_j), {})
+        step_fn = make_train_step(loss_fn, opt)
+        batch_abs = {
+            "dense": _sds((shape.batch, cfg.n_dense), jnp.float32),
+            "sparse_ids": _sds(
+                (shape.batch, cfg.embedding.n_tables), jnp.int32),
+            "labels": _sds((shape.batch,), jnp.int32),
+        }
+        batch_sh = {
+            "dense": NamedSharding(mesh, P(baxes, None)),
+            "sparse_ids": NamedSharding(mesh, P(baxes, None)),
+            "labels": NamedSharding(mesh, P(baxes)),
+        }
+        return Cell(
+            spec.arch_id, shape.shape_id, step_fn,
+            (params_abs, state_abs, batch_abs, _sds((), jnp.int32)),
+            (params_sh, state_sh, batch_sh, None),
+            None, meta,
+        )
+
+    if shape.mode == "serve":
+        fn = lambda p, b: dcn_forward(p, b, cfg, offsets_j)
+        batch_abs = {
+            "dense": _sds((shape.batch, cfg.n_dense), jnp.float32),
+            "sparse_ids": _sds(
+                (shape.batch, cfg.embedding.n_tables), jnp.int32),
+        }
+        b_entry = baxes if shape.batch % nb == 0 else None
+        batch_sh = {
+            k: NamedSharding(mesh, P(b_entry, None)) for k in batch_abs
+        }
+        return Cell(
+            spec.arch_id, shape.shape_id, fn,
+            (params_abs, batch_abs), (params_sh, batch_sh), None, meta,
+        )
+
+    # retrieval: 1 query vs n_candidates item vectors
+    fn = lambda p, b: dcn_retrieval_score(p, b, cfg, offsets_j, top_k=100)
+    batch_abs = {
+        "dense": _sds((1, cfg.n_dense), jnp.float32),
+        "sparse_ids": _sds((1, cfg.embedding.n_tables), jnp.int32),
+        "candidates": _sds(
+            (shape.n_candidates, cfg.mlp_dims[-1]), jnp.float32),
+    }
+    batch_sh = {
+        "dense": NamedSharding(mesh, P()),
+        "sparse_ids": NamedSharding(mesh, P()),
+        "candidates": NamedSharding(mesh, P(baxes, None)),
+    }
+    meta["n_candidates"] = shape.n_candidates
+    return Cell(
+        spec.arch_id, shape.shape_id, fn,
+        (params_abs, batch_abs), (params_sh, batch_sh), None, meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Chordality cells (the paper's own workload)
+# ---------------------------------------------------------------------------
+def _chordality_cell(spec, shape, mesh: Mesh) -> Cell:
+    from repro.core.chordality import is_chordal_batch
+
+    baxes = mesh_batch_axes(mesh)
+    n = shape.n_vertices
+    col_entry = "model" if n % mesh.shape["model"] == 0 else None
+    adj_abs = _sds((shape.batch, n, n), jnp.bool_)
+    adj_sh = NamedSharding(mesh, P(baxes, None, col_entry))
+    meta = {
+        "family": "chordality", "mode": "test",
+        "n_vertices": n, "batch": shape.batch,
+        "graph_class": shape.graph_class,
+    }
+    return Cell(
+        spec.arch_id, shape.shape_id, is_chordal_batch,
+        (adj_abs,), (adj_sh,), None, meta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, shape_id: str, mesh: Mesh,
+               scan_layers: bool = False) -> Cell:
+    spec = get_arch(arch_id)
+    if spec.family == "lm":
+        return _lm_cell(spec, LM_SHAPES[shape_id], mesh,
+                        scan_layers=scan_layers)
+    if spec.family == "gnn":
+        return _gnn_cell(spec, GNN_SHAPES[shape_id], mesh)
+    if spec.family == "recsys":
+        return _recsys_cell(spec, RECSYS_SHAPES[shape_id], mesh)
+    if spec.family == "chordality":
+        return _chordality_cell(spec, CHORDALITY_SHAPES[shape_id], mesh)
+    raise ValueError(spec.family)
+
+
+def input_specs(arch_id: str, shape_id: str, mesh: Mesh):
+    """The assignment-named API: ShapeDtypeStruct stand-ins for every input
+    of the cell's step function (no allocation)."""
+    return build_cell(arch_id, shape_id, mesh).args

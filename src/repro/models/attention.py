@@ -1,0 +1,177 @@
+"""Attention layer: GQA / MQA / MHA, RoPE, SWA, KV cache, 3 impls.
+
+Implementations (selected via config ``attention_impl``):
+  "naive"        — materialized (S, S) scores; small shapes / tests.
+  "xla_chunked"  — lax.scan over query chunks with online softmax; HBM-safe
+                   at 32k+ sequence (default for the CPU dry-run and large
+                   XLA runs; generates identical FLOPs to flash).
+  "pallas"       — the repro.kernels.flash_attention blockwise kernel
+                   (TPU target; interpret=True on CPU).
+
+Decode (``decode_step``) updates a KV cache in-place (functional .at[] set)
+and runs a 1-token attention — a matvec against the cache; flash is not
+used there (memory-bound gather, XLA handles it).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_rope
+
+
+def _mask(sq, skv, q_offset, causal, window, dtype=jnp.float32):
+    q_ids = q_offset + jnp.arange(sq)[:, None]
+    kv_ids = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        m = m & (kv_ids <= q_ids)
+    if window is not None:
+        m = m & (kv_ids > q_ids - window)
+    return m
+
+
+def attention_naive(q, k, v, *, causal=True, window=None, q_offset=0):
+    """q: (B, Hq, Sq, D); k/v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, d)
+    s = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+        k.astype(jnp.float32),
+    ) / math.sqrt(d)
+    m = _mask(sq, skv, q_offset, causal, window)
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def attention_chunked(
+    q, k, v, *, causal=True, window=None, q_offset=0, chunk=512,
+    seq_parallel=False,
+):
+    """lax.scan over query chunks; (chunk, Skv) working set, online softmax
+    not needed because each chunk computes its full row before reducing.
+
+    kv heads are repeated up to the q-head count BEFORE the scan so the
+    whole attention shards over the TP ('model') axis even when the raw kv
+    count (e.g. 2 or 8) does not divide it — each TP rank holds its q-heads'
+    kv copy, the standard GQA training layout."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.common import BATCH_AXES, constrain
+
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+    if seq_parallel:
+        # k/v replicated over S (all-gather from S-sharded producers);
+        # q/scores/context stay S-sharded (§Perf B).
+        k = constrain(k, P(BATCH_AXES, None, None, None))
+        v = constrain(v, P(BATCH_AXES, None, None, None))
+    else:
+        k = constrain(k, P(BATCH_AXES, "model", None, None))
+        v = constrain(v, P(BATCH_AXES, "model", None, None))
+    chunk = min(chunk, sq)
+    assert sq % chunk == 0, f"sq={sq} % chunk={chunk}"
+    nchunks = sq // chunk
+    qg = q.reshape(b, hq, nchunks, chunk, d)
+    qg = jnp.moveaxis(qg, 2, 0)  # (nchunks, b, hq, chunk, d)
+    kv_ids = jnp.arange(skv)[None, :]
+
+    def body(carry, qc_i):
+        qc, i = qc_i
+        if seq_parallel:
+            qc = constrain(qc, P(BATCH_AXES, None, "model", None))
+        else:
+            qc = constrain(qc, P(BATCH_AXES, "model", None, None))
+        s = jnp.einsum(
+            "bhqd,bhkd->bhqk",
+            qc.astype(jnp.float32), k.astype(jnp.float32),
+        ) / math.sqrt(d)
+        q_ids = q_offset + i * chunk + jnp.arange(chunk)[:, None]
+        m = jnp.ones((chunk, skv), dtype=bool)
+        if causal:
+            m = m & (kv_ids <= q_ids)
+        if window is not None:
+            m = m & (kv_ids > q_ids - window)
+        s = jnp.where(m[None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+        return carry, o.astype(q.dtype)
+
+    # Remat the chunk body: without this, the scan's backward saves the
+    # (chunk, Skv) softmax residuals for EVERY chunk — i.e. the full S×S
+    # matrix in f32 — and chunking saves nothing. With it, backward
+    # recomputes s/p per chunk from (q-chunk, k, v): the flash-attention
+    # memory profile in pure XLA.
+    body = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    _, outs = jax.lax.scan(
+        body, None, (qg, jnp.arange(nchunks, dtype=jnp.int32))
+    )
+    # outs: (nchunks, b, hq, chunk, d)
+    outs = jnp.moveaxis(outs, 0, 3)  # (b, hq, nchunks, chunk, d)
+    return outs.reshape(b, hq, sq, d)
+
+
+def attention_pallas(q, k, v, *, causal=True, window=None, q_offset=0):
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    assert q_offset == 0, "pallas path is for self-attention prefill/train"
+    return flash_attention(q, k, v, causal=causal, window=window)
+
+
+ATTN_IMPLS = {
+    "naive": attention_naive,
+    "xla_chunked": attention_chunked,
+    "pallas": attention_pallas,
+}
+
+
+def attention(q, k, v, *, impl="naive", causal=True, window=None,
+              q_offset=0, chunk=512, seq_parallel=False):
+    fn = ATTN_IMPLS[impl]
+    kw = dict(causal=causal, window=window, q_offset=q_offset)
+    if impl == "xla_chunked":
+        kw["chunk"] = chunk
+        kw["seq_parallel"] = seq_parallel
+    return fn(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+def decode_attention(q1, k_cache, v_cache, cache_len, *, window=None):
+    """One-token attention against a cache.
+
+    q1: (B, Hq, 1, D); caches: (B, Hkv, S_max, D); cache_len: scalar int32 —
+    number of valid cache entries INCLUDING the current token (already
+    written). Sliding window handled by masking (the cache for SWA models is
+    allocated at window size and written circularly by the caller).
+    """
+    b, hq, _, d = q1.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    group = hq // hkv
+    qg = q1.reshape(b, hkv, group, d)
+    s = jnp.einsum(
+        "bhgd,bhkd->bhgk", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) / math.sqrt(d)
+    kv_ids = jnp.arange(smax)[None, None, None, :]
+    m = kv_ids < cache_len
+    if window is not None:
+        m = m & (kv_ids > cache_len - 1 - window)
+    s = jnp.where(m, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, hq, 1, d).astype(q1.dtype)

@@ -1,0 +1,191 @@
+"""Model substrate: parameter specs with logical sharding axes, norms, RoPE.
+
+Parameters are declared as pytrees of :class:`ParamSpec` (shape + logical
+axis names + initializer). ``init_params`` materializes them;
+``logical_axes`` extracts the parallel tree of axis-name tuples that
+``repro.launch.sharding`` maps onto the device mesh via per-config rules —
+the MaxText/t5x pattern, kept dependency-free.
+
+Logical axis vocabulary (see repro/launch/sharding.py for the mesh rules):
+  "layers"   — stacked-scan layer dimension (never sharded)
+  "embed"    — d_model    (FSDP: sharded over data axes)
+  "heads"    — q heads    (TP: sharded over model axis)
+  "kv"       — kv heads
+  "qkv"      — per-head feature dim
+  "mlp"      — FFN hidden (TP)
+  "vocab"    — vocabulary (TP)
+  "experts"  — MoE expert dim (EP: sharded over model axis)
+  "table"    — embedding-table rows (recsys; sharded over model axis)
+  None       — replicated dimension
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    scale: float = 1.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (
+            jax.random.normal(key, spec.shape, jnp.float32) * spec.scale
+        ).astype(spec.dtype)
+    if spec.init == "scaled":
+        # fan-in scaled (He-ish) on the last axis
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        s = spec.scale / math.sqrt(max(fan_in, 1))
+        return (
+            jax.random.normal(key, spec.shape, jnp.float32) * s
+        ).astype(spec.dtype)
+    raise ValueError(spec.init)
+
+
+def init_params(key, specs):
+    """Materialize a pytree of ParamSpec into parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct tree (for dry-run: no allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, parallel to the param tree."""
+    return jax.tree_util.tree_map(
+        lambda s: s.axes, specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def swiglu(gate: jnp.ndarray, up: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.silu(gate) * up
+
+
+def rope_angles(head_dim: int, max_pos: int, theta: float = 10000.0):
+    """Precomputed (max_pos, head_dim/2) cos/sin tables."""
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+    pos = jnp.arange(max_pos, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0):
+    """x: (..., S, D) with D even; positions: (..., S) int32."""
+    d = x.shape[-1]
+    inv = 1.0 / (
+        theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., S, D/2)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    xr1 = x1 * cos - x2 * sin
+    xr2 = x1 * sin + x2 * cos
+    out = jnp.stack([xr1, xr2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def constrain(x: jnp.ndarray, spec) -> jnp.ndarray:
+    """with_sharding_constraint that no-ops outside a mesh context.
+
+    ``spec`` is a PartitionSpec; axis names not present in the ambient mesh
+    are dropped (so the same model code runs on 1-device tests, the
+    single-pod mesh, and the multi-pod mesh)."""
+    from jax.sharding import PartitionSpec as P
+
+    mesh = None
+    try:
+        import jax._src.mesh as mesh_lib
+
+        mesh = mesh_lib.get_concrete_mesh()
+        if mesh is None or not mesh.shape:
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        mesh = None
+    if mesh is None or mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    sizes = dict(mesh.shape)
+
+    def keep(entry, dim):
+        if entry is None:
+            return None
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(e for e in axes if e in names)
+        total = 1
+        for e in kept:
+            total *= sizes[e]
+        if not kept or dim % total != 0:
+            return None  # non-divisible dims fall back to replication
+        return kept if len(kept) > 1 else kept[0]
+
+    entries = tuple(spec) + (None,) * (x.ndim - len(tuple(spec)))
+    cleaned = P(*(keep(e, d) for e, d in zip(entries, x.shape)))
+    return jax.lax.with_sharding_constraint(x, cleaned)
+
+
+BATCH_AXES = ("pod", "data")  # logical batch axes; constrain() drops absent
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       ignore_id: int = -1) -> jnp.ndarray:
+    """logits (..., V) fp32-upcast CE, mean over non-ignored labels."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

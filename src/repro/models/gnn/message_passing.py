@@ -1,0 +1,71 @@
+"""Message-passing substrate on ``jax.ops.segment_sum`` over edge indices.
+
+JAX sparse is BCOO-only, so (per the assignment) message passing is built
+directly as gather → edge-compute → segment-reduce over an edge index
+``edges (2, E) int32`` (row 0 = src, row 1 = dst; messages flow src→dst).
+Fixed shapes under jit: graphs are padded to (N_pad, E_pad) with an
+``edge_mask`` — padding edges point at node 0 with zero weight.
+
+Sharding: edge arrays shard over the data axes; ``segment_sum`` partials are
+combined by GSPMD-inserted collectives (constraint applied by the caller).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_src(node_feat: jnp.ndarray, edges: jnp.ndarray) -> jnp.ndarray:
+    """(N, F), (2, E) -> (E, F) features of source endpoints."""
+    return jnp.take(node_feat, edges[0], axis=0)
+
+
+def scatter_sum(messages: jnp.ndarray, edges: jnp.ndarray, n_nodes: int,
+                edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(E, F) messages -> (N, F) summed at destination nodes."""
+    if edge_mask is not None:
+        messages = messages * edge_mask[:, None].astype(messages.dtype)
+    return jax.ops.segment_sum(messages, edges[1], num_segments=n_nodes)
+
+
+def scatter_mean(messages: jnp.ndarray, edges: jnp.ndarray, n_nodes: int,
+                 edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    s = scatter_sum(messages, edges, n_nodes, edge_mask)
+    ones = jnp.ones((edges.shape[1],), messages.dtype)
+    if edge_mask is not None:
+        ones = ones * edge_mask.astype(messages.dtype)
+    deg = jax.ops.segment_sum(ones, edges[1], num_segments=n_nodes)
+    return s / jnp.maximum(deg, 1.0)[:, None]
+
+
+def scatter_max(messages: jnp.ndarray, edges: jnp.ndarray, n_nodes: int,
+                edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    if edge_mask is not None:
+        messages = jnp.where(
+            edge_mask[:, None], messages, jnp.full_like(messages, -1e30)
+        )
+    out = jax.ops.segment_max(messages, edges[1], num_segments=n_nodes)
+    return jnp.where(out <= -1e30, 0.0, out)
+
+
+def scatter_min(messages: jnp.ndarray, edges: jnp.ndarray, n_nodes: int,
+                edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    return -scatter_max(-messages, edges, n_nodes, edge_mask)
+
+
+def degrees(edges: jnp.ndarray, n_nodes: int,
+            edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    ones = jnp.ones((edges.shape[1],), jnp.float32)
+    if edge_mask is not None:
+        ones = ones * edge_mask.astype(jnp.float32)
+    return jax.ops.segment_sum(ones, edges[1], num_segments=n_nodes)
+
+
+def scatter_std(messages, edges, n_nodes, edge_mask=None, eps=1e-5):
+    """Per-node std of incoming messages (PNA aggregator)."""
+    mean = scatter_mean(messages, edges, n_nodes, edge_mask)
+    mean_sq = scatter_mean(messages * messages, edges, n_nodes, edge_mask)
+    var = jnp.maximum(mean_sq - mean * mean, 0.0)
+    return jnp.sqrt(var + eps)

@@ -1,0 +1,226 @@
+"""The four assigned GNN architectures: GCN, GraphSAGE, PNA, EGNN.
+
+All share the calling convention
+    ``apply(params, graph_batch, cfg) -> node_outputs``
+with ``graph_batch`` a dict of device arrays:
+    node_feat (N, F) float32     edges (2, E) int32
+    edge_mask (E,) bool          node_mask (N,) bool
+    (+ coords (N, 3) for EGNN)
+Batched small graphs (molecule shape) are handled by vmap over a leading
+batch dim. Message passing = repro.models.gnn.message_passing (segment ops).
+
+Chordality integration (the paper's technique): the data pipeline can
+preprocess each graph with ``repro.core`` — LexBFS node reordering and/or a
+chordality feature bit — see repro.graphs.preprocess. Model code is agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+from repro.models.gnn import message_passing as mp
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                 # gcn | graphsage | pna | egnn
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    d_out: int
+    aggregators: Tuple[str, ...] = ("mean",)
+    scalers: Tuple[str, ...] = ("identity",)
+    sample_sizes: Tuple[int, ...] = ()     # graphsage fanout
+    avg_degree: float = 10.0               # PNA delta normalizer
+    dtype: Any = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def gnn_param_specs(cfg: GNNConfig) -> Dict[str, Any]:
+    dims = [cfg.d_in] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.d_out]
+    layers = {}
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        if cfg.kind == "gcn":
+            layers[f"l{i}"] = {
+                "w": ParamSpec((di, do), (None, None), init="scaled",
+                               dtype=cfg.dtype),
+                "b": ParamSpec((do,), (None,), init="zeros", dtype=cfg.dtype),
+            }
+        elif cfg.kind == "graphsage":
+            layers[f"l{i}"] = {
+                "w_self": ParamSpec((di, do), (None, None), init="scaled",
+                                    dtype=cfg.dtype),
+                "w_neigh": ParamSpec((di, do), (None, None), init="scaled",
+                                     dtype=cfg.dtype),
+                "b": ParamSpec((do,), (None,), init="zeros", dtype=cfg.dtype),
+            }
+        elif cfg.kind == "pna":
+            n_tower = len(cfg.aggregators) * len(cfg.scalers)
+            layers[f"l{i}"] = {
+                "w_agg": ParamSpec((n_tower * di + di, do), (None, None),
+                                   init="scaled", dtype=cfg.dtype),
+                "b": ParamSpec((do,), (None,), init="zeros", dtype=cfg.dtype),
+            }
+        elif cfg.kind == "egnn":
+            dh = di
+            dm = cfg.d_hidden
+            layers[f"l{i}"] = {
+                # φ_e: (h_i, h_j, ||Δx||²) -> m_ij
+                "we1": ParamSpec((2 * dh + 1, dm), (None, None),
+                                 init="scaled", dtype=cfg.dtype),
+                "we2": ParamSpec((dm, dm), (None, None), init="scaled",
+                                 dtype=cfg.dtype),
+                # φ_x: m_ij -> scalar coordinate weight
+                "wx1": ParamSpec((dm, dm), (None, None), init="scaled",
+                                 dtype=cfg.dtype),
+                "wx2": ParamSpec((dm, 1), (None, None), init="scaled",
+                                 scale=0.1, dtype=cfg.dtype),
+                # φ_h: (h_i, Σm) -> h_i'
+                "wh1": ParamSpec((dh + dm, dm), (None, None), init="scaled",
+                                 dtype=cfg.dtype),
+                "wh2": ParamSpec((dm, do), (None, None), init="scaled",
+                                 dtype=cfg.dtype),
+            }
+        else:
+            raise ValueError(cfg.kind)
+    return {"layers": layers}
+
+
+# ---------------------------------------------------------------------------
+# Layer implementations
+# ---------------------------------------------------------------------------
+def _gcn_layer(p, h, edges, edge_mask, node_mask):
+    n = h.shape[0]
+    # Symmetric normalization with implicit self-loops (Kipf & Welling).
+    deg = mp.degrees(edges, n, edge_mask) + 1.0
+    norm = jax.lax.rsqrt(deg)
+    msg = mp.gather_src(h * norm[:, None], edges)
+    agg = mp.scatter_sum(msg, edges, n, edge_mask)
+    agg = (agg + h * norm[:, None]) * norm[:, None]  # self loop
+    return agg @ p["w"] + p["b"]
+
+
+def _sage_layer(p, h, edges, edge_mask, node_mask):
+    n = h.shape[0]
+    neigh = mp.scatter_mean(mp.gather_src(h, edges), edges, n, edge_mask)
+    return h @ p["w_self"] + neigh @ p["w_neigh"] + p["b"]
+
+
+def _pna_layer(p, h, edges, edge_mask, node_mask, cfg: GNNConfig):
+    n = h.shape[0]
+    msg = mp.gather_src(h, edges)
+    aggs = []
+    for a in cfg.aggregators:
+        if a == "mean":
+            aggs.append(mp.scatter_mean(msg, edges, n, edge_mask))
+        elif a == "max":
+            aggs.append(mp.scatter_max(msg, edges, n, edge_mask))
+        elif a == "min":
+            aggs.append(mp.scatter_min(msg, edges, n, edge_mask))
+        elif a == "std":
+            aggs.append(mp.scatter_std(msg, edges, n, edge_mask))
+        else:
+            raise ValueError(a)
+    deg = mp.degrees(edges, n, edge_mask)
+    logd = jnp.log(deg + 1.0)
+    delta = jnp.log(jnp.float32(cfg.avg_degree) + 1.0)
+    scaled = []
+    for s in cfg.scalers:
+        if s == "identity":
+            fac = jnp.ones_like(logd)
+        elif s == "amplification":
+            fac = logd / delta
+        elif s == "attenuation":
+            fac = delta / jnp.maximum(logd, 1e-3)
+        else:
+            raise ValueError(s)
+        scaled.extend([a * fac[:, None] for a in aggs])
+    feats = jnp.concatenate(scaled + [h], axis=-1)
+    return feats @ p["w_agg"] + p["b"]
+
+
+def _egnn_layer(p, h, x, edges, edge_mask, node_mask):
+    """E(n)-equivariant layer (Satorras et al. 2021). Returns (h', x')."""
+    n = h.shape[0]
+    src, dst = edges[0], edges[1]
+    hi = jnp.take(h, dst, axis=0)
+    hj = jnp.take(h, src, axis=0)
+    xi = jnp.take(x, dst, axis=0)
+    xj = jnp.take(x, src, axis=0)
+    dx = xi - xj                                   # (E, 3)
+    d2 = jnp.sum(dx * dx, axis=-1, keepdims=True)  # (E, 1)
+    m = jnp.concatenate([hi, hj, d2], axis=-1)
+    m = jax.nn.silu(m @ p["we1"])
+    m = jax.nn.silu(m @ p["we2"])                  # (E, dm)
+    # coordinate update (equivariant): x_i += C Σ_j Δx · φ_x(m)
+    w = jnp.tanh(jax.nn.silu(m @ p["wx1"]) @ p["wx2"])  # (E, 1) bounded
+
+    coord_msg = dx * w
+    coord_agg = mp.scatter_mean(coord_msg, edges, n, edge_mask)
+    x_new = x + coord_agg
+    # feature update
+    magg = mp.scatter_sum(m, edges, n, edge_mask)
+    hcat = jnp.concatenate([h, magg], axis=-1)
+    h_new = jax.nn.silu(hcat @ p["wh1"]) @ p["wh2"]
+    return h_new, x_new
+
+
+# ---------------------------------------------------------------------------
+# Full models
+# ---------------------------------------------------------------------------
+def gnn_forward(params, batch: Dict[str, jnp.ndarray], cfg: GNNConfig):
+    """Single (padded) graph forward. Returns (N, d_out) node outputs
+    (for EGNN: (h_out, coords_out))."""
+    h = batch["node_feat"].astype(cfg.dtype)
+    edges = batch["edges"]
+    edge_mask = batch.get("edge_mask")
+    node_mask = batch.get("node_mask")
+    if cfg.kind == "egnn":
+        x = batch["coords"].astype(cfg.dtype)
+        for i in range(cfg.n_layers):
+            p = params["layers"][f"l{i}"]
+            h, x = _egnn_layer(p, h, x, edges, edge_mask, node_mask)
+        return h, x
+    for i in range(cfg.n_layers):
+        p = params["layers"][f"l{i}"]
+        if cfg.kind == "gcn":
+            h = _gcn_layer(p, h, edges, edge_mask, node_mask)
+        elif cfg.kind == "graphsage":
+            h = _sage_layer(p, h, edges, edge_mask, node_mask)
+        elif cfg.kind == "pna":
+            h = _pna_layer(p, h, edges, edge_mask, node_mask, cfg)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def gnn_forward_batched(params, batch, cfg: GNNConfig):
+    """vmap over a leading graph-batch dim (molecule cell)."""
+    return jax.vmap(lambda b: gnn_forward(params, b, cfg))(batch)
+
+
+def gnn_loss(params, batch, cfg: GNNConfig):
+    """Masked node-classification cross entropy."""
+    out = gnn_forward(params, batch, cfg)
+    if cfg.kind == "egnn":
+        out = out[0]
+    logits = out.astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("node_mask")
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[:, None], axis=-1
+    )[:, 0]
+    nll = logz - gold
+    m = (labels >= 0)
+    if mask is not None:
+        m = m & mask
+    mf = m.astype(jnp.float32)
+    return jnp.sum(nll * mf) / jnp.maximum(jnp.sum(mf), 1.0)

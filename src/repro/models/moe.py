@@ -1,0 +1,173 @@
+"""Mixture-of-Experts layer: top-k router, capacity dispatch, EP sharding.
+
+GShard/Switch "groups" formulation: tokens arrive as (G, Tg, D) where G is
+the number of dispatch groups — configured to match the data-parallel shard
+count so each group's dispatch is local to its shard and the only cross-
+device traffic is the expert all-to-all that GSPMD derives from the
+(G, E, C, D) buffer sharded (data, model, ·, ·).
+
+Dispatch is sort-based with a fixed capacity C = ceil(Tg·k/E · cf):
+  1. top-k experts per token;
+  2. position-in-expert via stable argsort over expert ids (deterministic,
+     earlier tokens win capacity — Switch semantics);
+  3. over-capacity entries are *dropped* (their combine weight is zeroed),
+     keeping every shape static for jit;
+  4. experts run as one batched einsum over the (G, E, C, D) buffer;
+  5. combine scatters expert outputs back, scaled by router probs.
+
+Aux losses: Switch load-balance loss + router z-loss, returned for logging
+and added to the train objective with configurable weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, swiglu
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_model: int
+    d_ff: int                      # per-expert hidden
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(
+            tokens_per_group * self.top_k / self.n_experts
+            * self.capacity_factor
+        )
+        return max(4, -(-c // 4) * 4)  # round up to multiple of 4
+
+
+def moe_param_specs(cfg: MoEConfig, n_layers: int, dtype) -> dict:
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    L = n_layers
+    return {
+        "router": ParamSpec((L, d, e), ("layers", "embed", None),
+                            init="scaled", dtype=dtype),
+        "moe_wg": ParamSpec((L, e, d, f), ("layers", "experts", "embed", "mlp"),
+                            init="scaled", dtype=dtype),
+        "moe_wu": ParamSpec((L, e, d, f), ("layers", "experts", "embed", "mlp"),
+                          init="scaled", dtype=dtype),
+        "moe_wd": ParamSpec((L, e, f, d), ("layers", "experts", "mlp", "embed"),
+                            init="scaled", dtype=dtype),
+    }
+
+
+def _dispatch_one_group(x, probs, topk_idx, n_experts: int, capacity: int):
+    """x: (Tg, D); probs/topk_idx: (Tg, K). Returns (buf, combine_meta).
+
+    buf: (E, C, D); meta = (t_flat, e_flat, pos_c, w_flat) for combine.
+    """
+    tg, k = topk_idx.shape
+    e_flat = topk_idx.reshape(-1)                     # (Tg*K,)
+    w_flat = probs.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(tg, dtype=jnp.int32), k)
+    # Stable sort by expert id → position within expert.
+    sort_idx = jnp.argsort(e_flat, stable=True)
+    e_sorted = jnp.take(e_flat, sort_idx)
+    counts = jnp.zeros(n_experts, jnp.int32).at[e_flat].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1]]
+    )
+    pos_sorted = (
+        jnp.arange(tg * k, dtype=jnp.int32) - jnp.take(offsets, e_sorted)
+    )
+    pos_flat = (
+        jnp.zeros(tg * k, jnp.int32).at[sort_idx].set(pos_sorted)
+    )
+    keep = pos_flat < capacity
+    pos_c = jnp.where(keep, pos_flat, capacity - 1)
+    scale = keep.astype(x.dtype)
+    w_flat = w_flat * keep.astype(w_flat.dtype)
+    buf = (
+        jnp.zeros((n_experts, capacity, x.shape[-1]), x.dtype)
+        .at[e_flat, pos_c]
+        .add(jnp.take(x, t_flat, axis=0) * scale[:, None])
+    )
+    return buf, (t_flat, e_flat, pos_c, w_flat)
+
+
+def _combine_one_group(y, meta, tg: int):
+    """y: (E, C, D) expert outputs; scatter back to (Tg, D)."""
+    t_flat, e_flat, pos_c, w_flat = meta
+    gathered = y[e_flat, pos_c]                      # (Tg*K, D)
+    out = (
+        jnp.zeros((tg, y.shape[-1]), y.dtype)
+        .at[t_flat]
+        .add(gathered * w_flat[:, None].astype(y.dtype))
+    )
+    return out
+
+
+def moe_layer(
+    layer_params: dict,
+    x: jnp.ndarray,
+    cfg: MoEConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (G, Tg, D) -> (out, aux_loss, z_loss). Params are per-layer slices
+    (no leading L dim)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.common import BATCH_AXES, constrain
+
+    g, tg, d = x.shape
+    e = cfg.n_experts
+    capacity = cfg.capacity(tg)
+    # §Perf C1: anchor the group sharding through the dispatch/combine
+    # gathers — without these, GSPMD's scatter/gather grad rules fall back
+    # to full rematerialization (replicated (G, Tg, D) f32 all-reduces).
+    x = constrain(x, P(BATCH_AXES, None, None))
+
+    logits = jnp.einsum(
+        "gtd,de->gte", x.astype(jnp.float32),
+        layer_params["router"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, cfg.top_k)  # (G, Tg, K)
+    # Renormalize the selected probs (top-k routing convention).
+    topk_probs = topk_probs / jnp.maximum(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Aux losses.
+    me = jnp.mean(probs, axis=(0, 1))                       # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(topk_idx[..., 0], e, dtype=jnp.float32), axis=(0, 1)
+    )
+    aux_loss = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+    z = jax.nn.logsumexp(logits, axis=-1)
+    z_loss = cfg.z_loss_weight * jnp.mean(z * z)
+
+    topk_probs = constrain(topk_probs, P(BATCH_AXES, None, None))
+    topk_idx = constrain(topk_idx, P(BATCH_AXES, None, None))
+
+    disp = jax.vmap(
+        lambda xx, pp, ii: _dispatch_one_group(xx, pp, ii, e, capacity)
+    )
+    buf, meta = disp(x, topk_probs.astype(x.dtype), topk_idx)
+    meta = tuple(
+        constrain(m, P(BATCH_AXES, None)) for m in meta
+    )
+    # buf: (G, E, C, D) — groups over the data axes, experts over the EP
+    # ('model') axis: the resharding between these two constraints IS the
+    # MoE all-to-all, inserted by GSPMD.
+    buf = constrain(buf, P(BATCH_AXES, "model", None, None))
+
+    h_gate = jnp.einsum("gecd,edf->gecf", buf, layer_params["moe_wg"])
+    h_up = jnp.einsum("gecd,edf->gecf", buf, layer_params["moe_wu"])
+    h = swiglu(h_gate, h_up)
+    y = jnp.einsum("gecf,efd->gecd", h, layer_params["moe_wd"])
+    y = constrain(y, P(BATCH_AXES, "model", None, None))
+
+    out = jax.vmap(lambda yy, mm: _combine_one_group(yy, mm, tg))(y, meta)
+    out = constrain(out, P(BATCH_AXES, None, None))
+    return out, aux_loss, z_loss

@@ -1,0 +1,82 @@
+"""Sparse embedding substrate for recsys: EmbeddingBag in pure JAX.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — per the assignment
+this is built from primitives:
+
+* All categorical tables are stacked into ONE row-sharded matrix
+  ``table (Σ rows_i, dim)`` with per-feature row offsets. Row-sharding over
+  the "model" mesh axis makes lookups GSPMD gathers (the TPU-native analogue
+  of a parameter-server shard).
+* ``embedding_lookup``  — one id per feature (DCN-v2/Criteo style):
+  ``jnp.take`` of (B, n_sparse) offset ids.
+* ``embedding_bag``     — multi-valued features: gather + ``segment_sum``
+  (sum/mean pooling) over a flat (B·nnz,) index array with bag offsets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    rows_per_table: Tuple[int, ...]     # rows per categorical feature
+    dim: int
+    dtype: Any = jnp.float32
+
+    @property
+    def n_tables(self) -> int:
+        return len(self.rows_per_table)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.rows_per_table))
+
+    def offsets(self) -> np.ndarray:
+        return np.concatenate(
+            [[0], np.cumsum(self.rows_per_table)[:-1]]
+        ).astype(np.int32)
+
+
+def embedding_param_specs(cfg: EmbeddingConfig) -> Dict[str, Any]:
+    return {
+        "table": ParamSpec(
+            (cfg.total_rows, cfg.dim), ("table", None),
+            init="normal", scale=0.01, dtype=cfg.dtype,
+        )
+    }
+
+
+def embedding_lookup(
+    table: jnp.ndarray, ids: jnp.ndarray, offsets: jnp.ndarray
+) -> jnp.ndarray:
+    """ids: (B, n_tables) per-table local ids -> (B, n_tables, dim)."""
+    flat = ids + offsets[None, :]
+    return jnp.take(table, flat, axis=0)
+
+
+def embedding_bag(
+    table: jnp.ndarray,
+    flat_ids: jnp.ndarray,       # (Nnz,) global row ids (already offset)
+    bag_ids: jnp.ndarray,        # (Nnz,) which bag each id belongs to
+    n_bags: int,
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """EmbeddingBag: gather + segment-reduce. -> (n_bags, dim)."""
+    vecs = jnp.take(table, flat_ids, axis=0)
+    s = jax.ops.segment_sum(vecs, bag_ids, num_segments=n_bags)
+    if mode == "sum":
+        return s
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(
+            jnp.ones_like(flat_ids, table.dtype), bag_ids,
+            num_segments=n_bags,
+        )
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    raise ValueError(mode)

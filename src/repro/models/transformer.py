@@ -1,0 +1,419 @@
+"""Decoder-only transformer LM: dense + MoE, GQA, RoPE, SWA, QKV-bias.
+
+Covers the five assigned LM architectures through one config:
+  h2o-danube-1.8b   dense, GQA kv=8, sliding-window attention
+  glm4-9b           dense, GQA kv=2
+  qwen1.5-4b        dense, GQA kv=20 (MHA-ish), QKV bias
+  arctic-480b       MoE 128e top-2 with parallel dense residual FFN
+  llama4-maverick   MoE 128e top-1 interleaved with dense layers,
+                    shared (dense) expert on MoE layers
+
+Layers run under ``lax.scan`` over stacked parameters (compile-time O(1) in
+depth) with a configurable remat policy. Parameters carry logical sharding
+axes (see repro.models.common); repro.launch.sharding maps them to the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import (
+    BATCH_AXES,
+    ParamSpec,
+    apply_rope,
+    constrain,
+    cross_entropy_loss,
+    rms_norm,
+    swiglu,
+)
+from repro.models.moe import MoEConfig, moe_layer, moe_param_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    swa_window: Optional[int] = None      # sliding-window attention size
+    rope_theta: float = 10000.0
+    # MoE
+    moe: Optional[MoEConfig] = None
+    moe_every: int = 1                    # layer % moe_every == 0 → MoE
+    moe_dense_parallel: bool = False      # dense FFN in parallel (arctic) /
+                                          # shared expert (llama4)
+    moe_groups: int = 1                   # dispatch groups (== data shards)
+    # numerics / impl
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    attention_impl: str = "naive"
+    attention_chunk: int = 512
+    remat: str = "none"                   # none | full | dots
+    logits_f32: bool = True
+    scan_layers: bool = True              # False: unroll (exact HLO costs)
+    # Sequence-parallel attention (EXPERIMENTS.md §Perf B): shard the S dim
+    # of q/scores/o over the TP axis instead of heads — for archs whose
+    # head count does not divide the TP degree (qwen: 20 heads, 16-way TP).
+    # k/v are all-gathered per layer (S-sharded compute, replicated use).
+    sequence_parallel: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        from repro.models.common import param_count
+
+        return param_count(transformer_param_specs(self))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k of n_experts).
+
+        NOTE: the stacked-scan parameter layout allocates expert rows for
+        ALL layers even when moe_every > 1 uses only half — those unused
+        rows are fully inactive and excluded here (llama4: 48 rows stored,
+        24 used; storage waste is a documented trade for scan homogeneity).
+        """
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        e, k = self.moe.n_experts, self.moe.top_k
+        expert_p = 3 * self.d_model * self.moe.d_ff * e
+        n_moe_layers = len(
+            [l for l in range(self.n_layers) if l % self.moe_every == 0]
+        )
+        n_unused = self.n_layers - n_moe_layers
+        inactive = (
+            n_moe_layers * expert_p * (1 - k / e) + n_unused * expert_p
+        )
+        return int(total - inactive)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+def transformer_param_specs(cfg: TransformerConfig) -> Dict[str, Any]:
+    L, D, Hq, Hkv, F, V = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+        cfg.d_ff, cfg.vocab_size,
+    )
+    hd = cfg.hd
+    pdt = cfg.param_dtype
+    specs: Dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), init="normal",
+                           scale=0.02, dtype=pdt),
+        "unembed": ParamSpec((D, V), ("embed", "vocab"), init="scaled",
+                             dtype=pdt),
+        "final_norm": ParamSpec((D,), (None,), init="ones", dtype=pdt),
+        "layers": {
+            "attn_norm": ParamSpec((L, D), ("layers", None), init="ones",
+                                   dtype=pdt),
+            "mlp_norm": ParamSpec((L, D), ("layers", None), init="ones",
+                                  dtype=pdt),
+            "wq": ParamSpec((L, D, Hq, hd),
+                            ("layers", "embed", "heads", "qkv"),
+                            init="scaled", dtype=pdt),
+            "wk": ParamSpec((L, D, Hkv, hd),
+                            ("layers", "embed", "kv", "qkv"),
+                            init="scaled", dtype=pdt),
+            "wv": ParamSpec((L, D, Hkv, hd),
+                            ("layers", "embed", "kv", "qkv"),
+                            init="scaled", dtype=pdt),
+            "wo": ParamSpec((L, Hq, hd, D),
+                            ("layers", "heads", "qkv", "embed"),
+                            init="scaled", dtype=pdt),
+        },
+    }
+    if cfg.qkv_bias:
+        specs["layers"]["bq"] = ParamSpec(
+            (L, Hq, hd), ("layers", "heads", "qkv"), init="zeros", dtype=pdt)
+        specs["layers"]["bk"] = ParamSpec(
+            (L, Hkv, hd), ("layers", "kv", "qkv"), init="zeros", dtype=pdt)
+        specs["layers"]["bv"] = ParamSpec(
+            (L, Hkv, hd), ("layers", "kv", "qkv"), init="zeros", dtype=pdt)
+    # Dense FFN: present unless the model is pure-MoE on every layer with no
+    # parallel/shared dense path.
+    needs_dense = (
+        cfg.moe is None or cfg.moe_every > 1 or cfg.moe_dense_parallel
+    )
+    if needs_dense:
+        specs["layers"]["w_gate"] = ParamSpec(
+            (L, D, F), ("layers", "embed", "mlp"), init="scaled", dtype=pdt)
+        specs["layers"]["w_up"] = ParamSpec(
+            (L, D, F), ("layers", "embed", "mlp"), init="scaled", dtype=pdt)
+        specs["layers"]["w_down"] = ParamSpec(
+            (L, F, D), ("layers", "mlp", "embed"), init="scaled", dtype=pdt)
+    if cfg.moe is not None:
+        specs["layers"].update(
+            moe_param_specs(cfg.moe, cfg.n_layers, pdt)
+        )
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _dense_ffn(p, h):
+    g = jnp.einsum("bsd,df->bsf", h, p["w_gate"].astype(h.dtype))
+    u = jnp.einsum("bsd,df->bsf", h, p["w_up"].astype(h.dtype))
+    return jnp.einsum("bsf,fd->bsd", swiglu(g, u), p["w_down"].astype(h.dtype))
+
+
+def _attention_block(p, x, positions, cfg: TransformerConfig):
+    h = rms_norm(x, p["attn_norm"])
+    q = jnp.einsum("bsd,dhk->bhsk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(h.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(h.dtype)[None, :, None, :]
+    if cfg.sequence_parallel:
+        # §Perf B: S-sharded attention region. q (and the scores/context it
+        # produces) shard on S; k/v are computed S-sharded (flops /TP) and
+        # all-gathered for use (GSPMD inserts the gather at the constraint
+        # transition below / inside attention_chunked).
+        q = constrain(q, P(BATCH_AXES, None, "model", None))
+        k = constrain(k, P(BATCH_AXES, None, "model", None))
+        v = constrain(v, P(BATCH_AXES, None, "model", None))
+    else:
+        # Activations: batch over the data axes, heads over the TP axis.
+        q = constrain(q, P(BATCH_AXES, "model", None, None))
+        k = constrain(k, P(BATCH_AXES, "model", None, None))
+        v = constrain(v, P(BATCH_AXES, "model", None, None))
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    o = attn_mod.attention(
+        q, k, v,
+        impl=cfg.attention_impl, causal=True, window=cfg.swa_window,
+        chunk=cfg.attention_chunk,
+        seq_parallel=cfg.sequence_parallel,
+    )
+    if cfg.sequence_parallel:
+        o = constrain(o, P(BATCH_AXES, None, "model", None))
+    else:
+        o = constrain(o, P(BATCH_AXES, "model", None, None))
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(h.dtype))
+
+
+def _ffn_block(p, x, layer_idx, cfg: TransformerConfig, groups=None):
+    """Dense FFN / MoE / both, depending on layer parity and config.
+
+    Returns (delta, aux_loss, z_loss). ``groups`` overrides cfg.moe_groups
+    (decode uses 1 group: only B tokens in flight).
+    """
+    h = rms_norm(x, p["mlp_norm"])
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.moe is None:
+        return _dense_ffn(p, h), zero, zero
+
+    b, s, d = h.shape
+    g = groups if groups is not None else cfg.moe_groups
+    tokens = h.reshape(g, (b * s) // g, d)
+
+    def moe_branch(hh):
+        out, aux, zl = moe_layer(p, tokens, cfg.moe)
+        out = out.reshape(b, s, d)
+        if cfg.moe_dense_parallel:
+            out = out + _dense_ffn(p, hh)
+        return out, aux, zl
+
+    def dense_branch(hh):
+        return _dense_ffn(p, hh), zero, zero
+
+    if cfg.moe_every == 1:
+        return moe_branch(h)
+    if isinstance(layer_idx, int):
+        # Unrolled path (§Perf C2): the branch is statically known — avoid
+        # lax.cond, whose boundary blocks GSPMD sharding propagation (the
+        # cotangents replicate and dominated llama4's collective term).
+        return moe_branch(h) if layer_idx % cfg.moe_every == 0 \
+            else dense_branch(h)
+    return jax.lax.cond(
+        layer_idx % cfg.moe_every == 0, moe_branch, dense_branch, h
+    )
+
+
+def _layer(p, x, positions, layer_idx, cfg: TransformerConfig):
+    x = constrain(x, P(BATCH_AXES, None, None))
+    x = x + _attention_block(p, x, positions, cfg)
+    delta, aux, zl = _ffn_block(p, x, layer_idx, cfg)
+    x = x + delta
+    x = constrain(x, P(BATCH_AXES, None, None))
+    return x, aux, zl
+
+
+def _run_layers(params, x, positions, cfg: TransformerConfig):
+    """Apply all layers: lax.scan over stacked params, or unrolled (exact
+    per-layer HLO costs for the roofline dry-run)."""
+
+    def _wrap(fn):
+        if cfg.remat == "full":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.remat == "dots":
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.checkpoint_dots)
+        return fn
+
+    carry = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    if cfg.scan_layers:
+        def body(carry, scanned):
+            x, aux_acc, z_acc = carry
+            p, idx = scanned
+            x, aux, zl = _layer(p, x, positions, idx, cfg)
+            return (x, aux_acc + aux, z_acc + zl), None
+
+        idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+        (x, aux, zl), _ = jax.lax.scan(
+            _wrap(body), carry, (params["layers"], idxs))
+    else:
+        # Unrolled path: the layer index is CLOSED OVER as a python int so
+        # the MoE/dense branch resolves statically (§Perf C2 — lax.cond
+        # boundaries block GSPMD sharding propagation). Closure, not an
+        # argument: jax.checkpoint would retrace an int arg into a tracer.
+        for i in range(cfg.n_layers):
+            p_i = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+
+            def layer_fn(carry, p_l, _i=i):
+                x, aux_acc, z_acc = carry
+                x, aux, zl = _layer(p_l, x, positions, _i, cfg)
+                return (x, aux_acc + aux, z_acc + zl)
+
+            carry = _wrap(layer_fn)(carry, p_i)
+        x, aux, zl = carry
+    return x, aux + zl
+
+
+def transformer_forward(
+    params: Dict[str, Any], tokens: jnp.ndarray, cfg: TransformerConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, S) int32 -> (logits (B, S, V), aux_losses scalar)."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = constrain(x, P(BATCH_AXES, None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, aux = _run_layers(params, x, positions, cfg)
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    logits = constrain(logits, P(BATCH_AXES, None, "model"))
+    if cfg.logits_f32:
+        logits = logits.astype(jnp.float32)
+    return logits, aux
+
+
+def transformer_prefill(
+    params: Dict[str, Any], tokens: jnp.ndarray, cfg: TransformerConfig
+) -> jnp.ndarray:
+    """Serving prefill: (B, S) -> last-token logits (B, V).
+
+    Never materializes the full (B, S, V) logits — at 32k×151k vocab that
+    would be hundreds of GB; only the final position is unembedded.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    x = constrain(x, P(BATCH_AXES, None, None))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x, _ = _run_layers(params, x, positions, cfg)
+    x_last = rms_norm(x[:, -1:], params["final_norm"])
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x_last, params["unembed"].astype(x_last.dtype))
+    return logits[:, 0].astype(jnp.float32)
+
+
+def transformer_loss(
+    params: Dict[str, Any], batch: Dict[str, jnp.ndarray],
+    cfg: TransformerConfig,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = transformer_forward(params, batch["tokens"], cfg)
+    ce = cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    """KV cache pytree. For SWA models the cache is the window (circular)."""
+    s_max = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, s_max, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, cfg.dtype),
+        "v": jnp.zeros(shape, cfg.dtype),
+    }
+
+
+def cache_spec(cfg: TransformerConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct version of init_cache (dry-run)."""
+    s_max = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, s_max, cfg.hd)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.dtype),
+        "v": jax.ShapeDtypeStruct(shape, cfg.dtype),
+    }
+
+
+def _decode_layer(p, kc, vc, x1, position, layer_idx, cfg: TransformerConfig):
+    """x1: (B, 1, D); kc/vc: (B, Hkv, Smax, hd). Returns (x1', kc', vc')."""
+    b = x1.shape[0]
+    s_max = kc.shape[2]
+    h = rms_norm(x1, p["attn_norm"])
+    q = jnp.einsum("bsd,dhk->bhsk", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(h.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(h.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(h.dtype)[None, :, None, :]
+    pos_b = jnp.broadcast_to(position[None], (b, 1))
+    q = apply_rope(q, pos_b[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, pos_b[:, None, :], cfg.rope_theta)
+    slot = position % s_max if cfg.swa_window else position
+    kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, slot, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, slot, 0))
+    cache_len = jnp.minimum(position + 1, s_max)
+    o = attn_mod.decode_attention(q, kc, vc, cache_len, window=None)
+    attn_out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(h.dtype))
+    x1 = x1 + attn_out
+    # Decode FFN reuses _ffn_block with a single dispatch group (only B
+    # tokens in flight per step).
+    delta, _, _ = _ffn_block(p, x1, layer_idx, cfg, groups=1)
+    return x1 + delta, kc, vc
+
+
+def transformer_decode_step(
+    params: Dict[str, Any],
+    cache: Dict[str, jnp.ndarray],
+    tokens1: jnp.ndarray,
+    position: jnp.ndarray,
+    cfg: TransformerConfig,
+):
+    """One decode step. tokens1: (B, 1) int32; position: scalar int32 (the
+    index of this token; cache holds [0, position)). Returns
+    (logits (B, V), new_cache)."""
+    x = jnp.take(params["embed"], tokens1, axis=0).astype(cfg.dtype)
+
+    def body(x1, scanned):
+        p, kc, vc, idx = scanned
+        x1, kc, vc = _decode_layer(p, kc, vc, x1, position, idx, cfg)
+        return x1, (kc, vc)
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    x, (kc_new, vc_new) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], idxs)
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return logits[:, 0].astype(jnp.float32), {"k": kc_new, "v": vc_new}

@@ -1,0 +1,18 @@
+from repro.optim.optimizers import (
+    OPTIMIZERS,
+    Optimizer,
+    clip_by_global_norm,
+    constant,
+    global_norm,
+    make_adafactor,
+    make_adamw,
+    make_sgd,
+    warmup_cosine,
+)
+from repro.optim import compression
+
+__all__ = [
+    "OPTIMIZERS", "Optimizer", "clip_by_global_norm", "constant",
+    "global_norm", "make_adafactor", "make_adamw", "make_sgd",
+    "warmup_cosine", "compression",
+]

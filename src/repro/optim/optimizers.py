@@ -1,0 +1,230 @@
+"""Optimizers in pure JAX (pytree-based; no optax dependency).
+
+* AdamW — default for the dense LMs / GNNs / recsys.
+* Adafactor — factored second moments for the 400B+ MoEs (optimizer state
+  must not double parameter memory at that scale).
+* SGD-momentum — baseline.
+
+All share the interface:
+    opt = make_<name>(lr_schedule, **hp)
+    state = opt.init(params)
+    params, state, stats = opt.update(grads, state, params, step)
+
+State leaves inherit the parameter sharding (same pytree structure ⇒ the
+launch layer shards them with the identical NamedSharding tree — ZeRO-style
+state sharding falls out of FSDP'd params for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree
+    ), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def make_adamw(
+    lr: Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * gf * gf
+            mhat = m2 / (1 - b1 ** t)
+            vhat = v2 / (1 - b2 ** t)
+            step_ = mhat / (jnp.sqrt(vhat) + eps)
+            p2 = p.astype(jnp.float32) * (1 - lr_t * weight_decay)
+            p2 = p2 - lr_t * step_
+            return p2.astype(p.dtype), m2, v2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_m = jax.tree_util.tree_leaves(state["m"])
+        flat_v = jax.tree_util.tree_leaves(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+        stats = {"grad_norm": gnorm, "lr": lr_t}
+        return new_p, {"m": new_m, "v": new_v}, stats
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, Shazeer & Stern 2018)
+# ---------------------------------------------------------------------------
+def make_adafactor(
+    lr: Callable[[jnp.ndarray], jnp.ndarray],
+    eps: float = 1e-30,
+    decay: float = 0.8,
+    grad_clip: float = 1.0,
+    min_dim_factored: int = 2,
+) -> Optimizer:
+    """Matrices (≥2D) get factored (row, col) stats; vectors get full v."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= min_dim_factored
+
+    def init(params):
+        def mk(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"s": jax.tree_util.tree_map(
+            mk, params, is_leaf=lambda x: isinstance(x, jnp.ndarray))}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(vr, axis=-1, keepdims=True)
+                vhat = (
+                    vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(rmean[..., None], eps)
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                vhat = v
+                new_s = {"v": v}
+            step_ = gf * jax.lax.rsqrt(vhat + eps)
+            # Update clipping (RMS ≤ 1), per the paper.
+            rms = jnp.sqrt(jnp.mean(step_ * step_) + 1e-12)
+            step_ = step_ / jnp.maximum(1.0, rms)
+            p2 = p.astype(jnp.float32) - lr_t * step_
+            return p2.astype(p.dtype), new_s
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = jax.tree_util.tree_leaves(grads)
+        flat_s = jax.tree_util.tree_flatten(
+            state["s"], is_leaf=lambda x: isinstance(x, dict) and (
+                "v" in x or "vr" in x)
+        )[0]
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_s = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return new_p, {"s": new_s}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# SGD + momentum
+# ---------------------------------------------------------------------------
+def make_sgd(
+    lr: Callable[[jnp.ndarray], jnp.ndarray],
+    momentum: float = 0.9,
+    grad_clip: float = 0.0,
+) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        lr_t = lr(step)
+
+        def upd(g, m, p):
+            m2 = momentum * m + g.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr_t * m2
+            return p2.astype(p.dtype), m2
+
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        out = [
+            upd(g, m, p) for g, m, p in zip(
+                jax.tree_util.tree_leaves(grads),
+                jax.tree_util.tree_leaves(state["mom"]),
+                flat_p,
+            )
+        ]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        return new_p, {"mom": new_m}, {"grad_norm": gnorm, "lr": lr_t}
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(
+    peak: float, warmup_steps: int, total_steps: int, floor: float = 0.1
+):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak * (s + 1.0) / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return lr
+
+
+def constant(peak: float):
+    return lambda step: jnp.float32(peak)
+
+
+OPTIMIZERS = {
+    "adamw": make_adamw,
+    "adafactor": make_adafactor,
+    "sgd": make_sgd,
+}

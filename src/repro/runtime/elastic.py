@@ -1,0 +1,51 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+Checkpoints are stored logically-unsharded (see repro.checkpoint), so
+elasticity = restoring with the new mesh's sharding tree. This module adds
+the mesh-construction helpers and a validation pass that asserts every
+logical axis still divides the new mesh axes (falling back to replication
+when it does not — shrink-to-fit semantics)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_mesh(shape, axis_names, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    n = int(np.prod(shape))
+    if n > len(devices):
+        raise ValueError(f"mesh {shape} needs {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return Mesh(arr, axis_names)
+
+
+def revalidate_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that no longer divide the dimension (elastic shrink)."""
+    new = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if entry is None:
+            new.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        total = 1
+        ok_axes = []
+        for a in axes:
+            if a in mesh.shape:
+                total *= mesh.shape[a]
+                ok_axes.append(a)
+        if ok_axes and dim % total == 0:
+            new.append(tuple(ok_axes) if len(ok_axes) > 1 else ok_axes[0])
+        else:
+            new.append(None)
+    return P(*new)
+
+
+def reshard_tree(tree, shardings_tree):
+    """device_put every leaf onto its (possibly new-mesh) sharding."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.device_put(a, s), tree, shardings_tree
+    )

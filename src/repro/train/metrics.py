@@ -1,0 +1,61 @@
+"""Throughput / MFU accounting and the TPU v5e hardware model.
+
+Hardware constants (per chip) used for every roofline/MFU figure in
+EXPERIMENTS.md — TPU v5e:
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI per link       ~50 GB/s
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(vals, key=vals.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self) -> float:
+        """compute_term / max(all terms): 1.0 = perfectly compute-bound."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    n_chips: int,
+) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=hlo_flops / (n_chips * PEAK_FLOPS_BF16),
+        memory_s=hlo_bytes / (n_chips * HBM_BW),
+        collective_s=collective_bytes / (n_chips * ICI_BW),
+    )
+
+
+def lm_model_flops_per_step(n_params_active: int, tokens_per_step: int) -> float:
+    """6·N·D — the standard training-FLOPs estimate."""
+    return 6.0 * n_params_active * tokens_per_step
+
+
+def mfu(model_flops_per_step: float, step_time_s: float, n_chips: int) -> float:
+    return model_flops_per_step / (step_time_s * n_chips * PEAK_FLOPS_BF16)

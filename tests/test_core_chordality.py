@@ -1,0 +1,164 @@
+"""End-to-end chordality tests (paper Theorem 5.1 + §6) vs networkx oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    is_chordal,
+    is_chordal_batch,
+    is_chordal_mcs,
+    chordality_certificate,
+    peo_check,
+    peo_violations,
+    peo_check_numpy,
+)
+from repro.core import generators as G
+from repro.core.lexbfs_ref import is_chordal_seq, peo_check_seq, mcs_seq
+from repro.core.properties import (
+    is_chordal_bruteforce,
+    is_peo_bruteforce,
+)
+
+
+def _adj(n, p, seed):
+    return G.gnp(n, p, seed=seed).adj
+
+
+# ---------------------------------------------------------------------------
+# Known-answer tests
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n", [1, 2, 3, 5, 16])
+def test_cliques_are_chordal(n):
+    assert bool(is_chordal(jnp.asarray(G.clique(n).adj)))
+
+
+@pytest.mark.parametrize("n", [4, 5, 6, 11])
+def test_cycles_are_not_chordal(n):
+    assert not bool(is_chordal(jnp.asarray(G.cycle(n).adj)))
+
+
+def test_triangle_is_chordal():
+    assert bool(is_chordal(jnp.asarray(G.cycle(3).adj)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_trees_are_chordal(seed):
+    assert bool(is_chordal(jnp.asarray(G.random_tree(40, seed=seed).adj)))
+
+
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("subset_p", [1.0, 0.6])
+def test_ktrees_are_chordal(seed, subset_p):
+    g = G.random_chordal(48, k=5, subset_p=subset_p, seed=seed)
+    assert bool(is_chordal(jnp.asarray(g.adj)))
+
+
+def test_c4_plus_chord_is_chordal():
+    adj = G.cycle(4).adj.copy()
+    adj[0, 2] = adj[2, 0] = True
+    assert bool(is_chordal(jnp.asarray(adj)))
+
+
+def test_certificate_positive_and_negative():
+    ok, order, viol = chordality_certificate(jnp.asarray(G.clique(6).adj))
+    assert bool(ok) and int(viol) == 0
+    assert is_peo_bruteforce(G.clique(6).adj, np.asarray(order))
+    ok, order, viol = chordality_certificate(jnp.asarray(G.cycle(6).adj))
+    assert not bool(ok) and int(viol) > 0
+
+
+def test_batch_matches_singles():
+    adjs = np.stack(
+        [G.cycle(12).adj, G.clique(12).adj, _adj(12, 0.3, 0), _adj(12, 0.8, 1)]
+    )
+    got = np.asarray(is_chordal_batch(jnp.asarray(adjs)))
+    want = [bool(is_chordal(jnp.asarray(a))) for a in adjs]
+    assert got.tolist() == want
+
+
+def test_padding_does_not_change_verdict():
+    for seed in range(4):
+        adj = _adj(11, 0.4, seed)
+        base = bool(is_chordal(jnp.asarray(adj)))
+        padded = np.zeros((17, 17), dtype=bool)
+        padded[:11, :11] = adj
+        assert bool(is_chordal(jnp.asarray(padded))) == base
+
+
+# ---------------------------------------------------------------------------
+# PEO checker in isolation (paper §5.2/§6.2)
+# ---------------------------------------------------------------------------
+def test_peo_check_accepts_construction_order_of_ktree():
+    g = G.random_chordal(30, k=4, seed=3)
+    # The k-tree construction order reversed is a PEO; forward insertion
+    # order means every vertex's *left* neighborhood is a clique => the
+    # identity order IS a PEO for the insertion construction.
+    order = jnp.arange(30, dtype=jnp.int32)
+    assert bool(peo_check(jnp.asarray(g.adj), order))
+
+
+def test_peo_check_rejects_bad_order_on_path():
+    # P3: visiting the middle vertex last makes ends non-adjacent members
+    # of its left neighborhood.
+    adj = G.path(3).adj
+    bad = jnp.asarray([0, 2, 1], dtype=jnp.int32)
+    assert not bool(peo_check(jnp.asarray(adj), bad))
+    good = jnp.asarray([0, 1, 2], dtype=jnp.int32)
+    assert bool(peo_check(jnp.asarray(adj), good))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+    perm_seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_peo_check_matches_bruteforce(n, p, seed, perm_seed):
+    adj = _adj(n, p, seed)
+    order = np.random.default_rng(perm_seed).permutation(n).astype(np.int32)
+    got = bool(peo_check(jnp.asarray(adj), jnp.asarray(order)))
+    assert got == is_peo_bruteforce(adj, order)
+    assert got == peo_check_numpy(adj, order)
+    assert got == peo_check_seq(adj, order)
+
+
+# ---------------------------------------------------------------------------
+# The headline property: parallel verdict == networkx == sequential baseline
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=26),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_chordality_matches_oracles(n, p, seed):
+    adj = _adj(n, p, seed)
+    want = is_chordal_bruteforce(adj)
+    assert bool(is_chordal(jnp.asarray(adj))) == want
+    assert is_chordal_seq(adj) == want
+    assert bool(is_chordal_mcs(jnp.asarray(adj))) == want
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=6, max_value=40),
+    k=st.integers(min_value=2, max_value=5),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_generated_chordal_accepted(n, k, seed):
+    g = G.random_chordal(n, k=k, subset_p=0.8, seed=seed)
+    assert bool(is_chordal(jnp.asarray(g.adj)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=6, max_value=40),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_mcs_order_of_chordal_graph_is_peo(n, seed):
+    """Paper Theorem 5.2 (Tarjan–Yannakakis)."""
+    g = G.random_chordal(n, k=3, subset_p=0.7, seed=seed)
+    order = mcs_seq(g.adj)
+    assert peo_check_seq(g.adj, order)

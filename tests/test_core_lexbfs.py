@@ -1,0 +1,161 @@
+"""Unit + property tests for the parallel LexBFS (paper §6.1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    lexbfs,
+    lexbfs_batched,
+    lexbfs_numpy_dense,
+    bfs,
+    mcs,
+    mcs_numpy,
+)
+from repro.core import generators as G
+from repro.core.lexbfs_ref import lexbfs_partition_refinement, lexbfs_rtl
+from repro.core.properties import has_lb_property, has_b_property
+
+
+def _random_adj(n, p, seed):
+    return G.gnp(n, p, seed=seed).adj
+
+
+# ---------------------------------------------------------------------------
+# Deterministic unit tests
+# ---------------------------------------------------------------------------
+def test_lexbfs_is_permutation():
+    adj = _random_adj(17, 0.4, 0)
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert sorted(o.tolist()) == list(range(17))
+
+
+def test_lexbfs_empty_graph():
+    adj = np.zeros((5, 5), dtype=bool)
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert sorted(o.tolist()) == list(range(5))
+
+
+def test_lexbfs_single_vertex():
+    adj = np.zeros((1, 1), dtype=bool)
+    assert np.asarray(lexbfs(jnp.asarray(adj))).tolist() == [0]
+
+
+def test_lexbfs_clique_any_order_valid():
+    adj = G.clique(8).adj
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert has_lb_property(adj, o)
+
+
+def test_lexbfs_path_is_monotone_from_endpoint():
+    # On a path starting at vertex 0, LexBFS from 0 must walk the path.
+    adj = G.path(6).adj
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert o.tolist() == [0, 1, 2, 3, 4, 5]
+
+
+def test_lexbfs_matches_numpy_twin_exactly():
+    # Same tie-breaking rule => identical order, not just LB-equivalent.
+    for seed in range(5):
+        adj = _random_adj(23, 0.3, seed)
+        o_jax = np.asarray(lexbfs(jnp.asarray(adj)))
+        o_np = lexbfs_numpy_dense(adj)
+        np.testing.assert_array_equal(o_jax, o_np)
+
+
+def test_lexbfs_padding_vertices_visited_last():
+    g = G.dense_random(10, p=0.5, seed=1)
+    adj = np.zeros((16, 16), dtype=bool)
+    adj[:10, :10] = g.adj
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    # all real vertices appear before all pads
+    real_positions = [np.where(o == v)[0][0] for v in range(10)]
+    pad_positions = [np.where(o == v)[0][0] for v in range(10, 16)]
+    assert max(real_positions) < min(pad_positions)
+
+
+def test_lexbfs_batched_matches_single():
+    adjs = np.stack([_random_adj(12, 0.4, s) for s in range(4)])
+    ob = np.asarray(lexbfs_batched(jnp.asarray(adjs)))
+    for i in range(4):
+        np.testing.assert_array_equal(
+            ob[i], np.asarray(lexbfs(jnp.asarray(adjs[i])))
+        )
+
+
+def test_disconnected_graph():
+    # two components + isolated vertices
+    adj = np.zeros((9, 9), dtype=bool)
+    for (a, b) in [(0, 1), (1, 2), (4, 5), (5, 6), (4, 6)]:
+        adj[a, b] = adj[b, a] = True
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert sorted(o.tolist()) == list(range(9))
+    assert has_lb_property(adj, o)
+
+
+# ---------------------------------------------------------------------------
+# Property-based tests (hypothesis): the LB-property is the *definition* of a
+# LexBFS order (paper Lemma 4.2) — every emitted order must satisfy it.
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=28),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_lexbfs_order_satisfies_lb(n, p, seed):
+    adj = _random_adj(n, p, seed)
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert sorted(o.tolist()) == list(range(n))
+    assert has_lb_property(adj, o)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=28),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_bfs_order_satisfies_b(n, p, seed):
+    adj = _random_adj(n, p, seed)
+    o = np.asarray(bfs(jnp.asarray(adj)))
+    assert sorted(o.tolist()) == list(range(n))
+    assert has_b_property(adj, o)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_sequential_refs_satisfy_lb(n, p, seed):
+    adj = _random_adj(n, p, seed)
+    assert has_lb_property(adj, lexbfs_partition_refinement(adj))
+    assert has_lb_property(adj, lexbfs_rtl(adj))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_lb_implies_b(n, p, seed):
+    """Paper §4.1: 'the LB-property implies B-property'."""
+    adj = _random_adj(n, p, seed)
+    o = np.asarray(lexbfs(jnp.asarray(adj)))
+    assert has_b_property(adj, o)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=24),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_mcs_matches_numpy(n, p, seed):
+    adj = _random_adj(n, p, seed)
+    np.testing.assert_array_equal(
+        np.asarray(mcs(jnp.asarray(adj))), mcs_numpy(adj)
+    )

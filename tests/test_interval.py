@@ -1,0 +1,91 @@
+"""Tests for the beyond-paper LexBFS+ / proper-interval recognition."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generators as G
+from repro.core.interval import (
+    is_proper_interval,
+    is_proper_interval_bruteforce,
+    lexbfs_plus,
+    straight_enumeration_violations,
+)
+from repro.core.lexbfs import lexbfs
+from repro.core.properties import has_lb_property
+
+
+def _claw():
+    adj = np.zeros((4, 4), dtype=bool)
+    for leaf in (1, 2, 3):
+        adj[0, leaf] = adj[leaf, 0] = True
+    return adj
+
+
+# Known answers --------------------------------------------------------------
+@pytest.mark.parametrize("n", [2, 4, 9])
+def test_paths_are_proper_interval(n):
+    assert bool(is_proper_interval(jnp.asarray(G.path(n).adj)))
+
+
+@pytest.mark.parametrize("n", [3, 6, 12])
+def test_cliques_are_proper_interval(n):
+    assert bool(is_proper_interval(jnp.asarray(G.clique(n).adj)))
+
+
+def test_claw_is_not_proper_interval():
+    # unit interval graphs are claw-free
+    assert not bool(is_proper_interval(jnp.asarray(_claw())))
+
+
+@pytest.mark.parametrize("n", [4, 5, 7])
+def test_cycles_are_not_proper_interval(n):
+    assert not bool(is_proper_interval(jnp.asarray(G.cycle(n).adj)))
+
+
+def test_disjoint_paths_are_proper_interval():
+    adj = np.zeros((6, 6), dtype=bool)
+    for a, b in [(0, 1), (1, 2), (3, 4), (4, 5)]:
+        adj[a, b] = adj[b, a] = True
+    assert bool(is_proper_interval(jnp.asarray(adj)))
+
+
+# LexBFS+ is still a LexBFS -------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=20),
+    p=st.floats(min_value=0.1, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=1000),
+)
+def test_property_lexbfs_plus_satisfies_lb(n, p, seed):
+    adj = G.gnp(n, p, seed=seed).adj
+    s1 = lexbfs(jnp.asarray(adj))
+    s2 = np.asarray(lexbfs_plus(jnp.asarray(adj), s1))
+    assert sorted(s2.tolist()) == list(range(n))
+    assert has_lb_property(adj, s2)
+
+
+# Against the brute-force oracle ----------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=7),
+    p=st.floats(min_value=0.1, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_matches_bruteforce(n, p, seed):
+    adj = G.gnp(n, p, seed=seed).adj
+    got = bool(is_proper_interval(jnp.asarray(adj)))
+    want = is_proper_interval_bruteforce(adj)
+    assert got == want
+
+
+def test_straight_enum_violation_counts():
+    # path in path order: 0 violations
+    adj = G.path(5).adj
+    order = jnp.arange(5, dtype=jnp.int32)
+    assert int(straight_enumeration_violations(
+        jnp.asarray(adj), order)) == 0
+    # claw in any order has >= 1 violation
+    viol = int(straight_enumeration_violations(
+        jnp.asarray(_claw()), jnp.arange(4, dtype=jnp.int32)))
+    assert viol > 0

@@ -1,0 +1,56 @@
+"""Tests for the beyond-paper lazy-compaction LexBFS (§Perf A2/A3)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generators as G
+from repro.core.chordality import is_chordal, is_chordal_fast
+from repro.core.lexbfs import lexbfs, lexbfs_fast
+from repro.core.properties import is_chordal_bruteforce
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=64),
+    p=st.floats(min_value=0.05, max_value=0.95),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_fast_order_identical_to_faithful(n, p, seed):
+    """Lazy compaction is order-isomorphic ⇒ bit-identical orders."""
+    adj = jnp.asarray(G.gnp(n, p, seed=seed).adj)
+    np.testing.assert_array_equal(
+        np.asarray(lexbfs(adj)), np.asarray(lexbfs_fast(adj)))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 29, 64, 100])
+def test_fast_edge_sizes(n):
+    """k_inner boundary cases incl. n smaller than one inner block."""
+    adj = jnp.asarray(G.sparse_random(n, avg_degree=4, seed=n).adj
+                      if n > 2 else np.zeros((n, n), bool))
+    got = np.asarray(lexbfs_fast(adj))
+    assert sorted(got.tolist()) == list(range(n))
+    np.testing.assert_array_equal(got, np.asarray(lexbfs(adj)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=3, max_value=30),
+    p=st.floats(min_value=0.1, max_value=0.9),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_property_fast_chordality_matches_oracle(n, p, seed):
+    adj = G.gnp(n, p, seed=seed).adj
+    want = is_chordal_bruteforce(adj)
+    assert bool(is_chordal_fast(jnp.asarray(adj))) == want
+    assert bool(is_chordal(jnp.asarray(adj))) == want
+
+
+def test_fast_on_paper_classes():
+    assert bool(is_chordal_fast(jnp.asarray(G.clique(64).adj)))
+    assert bool(is_chordal_fast(jnp.asarray(G.random_tree(64, seed=0).adj)))
+    assert bool(is_chordal_fast(
+        jnp.asarray(G.random_chordal(64, k=5, seed=0).adj)))
+    assert not bool(is_chordal_fast(jnp.asarray(G.cycle(64).adj)))
+    assert not bool(is_chordal_fast(
+        jnp.asarray(G.dense_random(64, p=0.5, seed=0).adj)))

@@ -39,6 +39,48 @@ def bench_peo_paths(n=2048, p=0.3, repeats=3) -> List[Dict]:
     return rows
 
 
+def bench_engine_backends(
+    n_max=256, requests=32, max_batch=8, repeats=2,
+    backends=("jax_faithful", "jax_fast", "numpy_ref"),
+) -> List[Dict]:
+    """End-to-end serving comparison through ``repro.engine``.
+
+    Same ragged request stream for every backend; the engine owns all
+    padding/batching (bucketed work units + compile cache), so the rows
+    compare backend execution, not caller glue. The derived column carries
+    steady-state throughput (cache warm, compiles excluded).
+    """
+    from benchmarks.paper_tables import time_fn
+    from repro.core import generators as G
+    from repro.engine import ChordalityEngine
+
+    rng = np.random.default_rng(0)
+    gens = (G.random_chordal, G.sparse_random, G.cycle, G.random_tree)
+    graphs = []
+    for i in range(requests):
+        n = int(rng.integers(n_max // 2, n_max))
+        gen = gens[i % len(gens)]
+        graphs.append(
+            gen(n) if gen is G.cycle else gen(n, seed=i))
+
+    rows = []
+    for name in backends:
+        eng = ChordalityEngine(backend=name, max_batch=max_batch)
+        eng.run(graphs)  # compile pass
+        res = eng.run(graphs)
+        assert res.stats.compile_misses == 0, "cache should be warm"
+        t_ms = time_fn(lambda: eng.run(graphs), repeats)
+        rows.append({
+            "name": f"engine_{name}_r{requests}_n{n_max}",
+            "us_per_call": t_ms * 1e3,
+            "derived": (
+                f"{requests / (t_ms / 1e3):.0f}_graphs_per_s;"
+                f"units={res.stats.n_units};"
+                f"buckets={len(res.stats.bucket_histogram)}"),
+        })
+    return rows
+
+
 def bench_lexbfs(n=2048, repeats=3) -> List[Dict]:
     import jax.numpy as jnp
 

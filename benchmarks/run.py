@@ -18,14 +18,14 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
-                         "kernels,lexbfs")
+                         "kernels,lexbfs,engine")
     args = ap.parse_args(argv)
 
     from benchmarks import kernel_bench, paper_tables
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs"]
+         "lexbfs", "engine"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -80,6 +80,12 @@ def main(argv=None) -> int:
     if "lexbfs" in which:
         print("# kernel micro-bench - lexbfs/mcs", file=sys.stderr)
         emit(kernel_bench.bench_lexbfs(n=1024 if args.quick else 2048))
+    if "engine" in which:
+        print("# engine serving bench - backends via repro.engine",
+              file=sys.stderr)
+        emit(kernel_bench.bench_engine_backends(
+            n_max=128 if args.quick else 256,
+            requests=16 if args.quick else 32))
     return 0
 
 

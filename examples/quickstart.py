@@ -8,11 +8,10 @@ import numpy as np
 from repro.core import (
     chordality_certificate,
     is_chordal,
-    is_chordal_batch,
     lexbfs,
 )
 from repro.core import generators as G
-from repro.graphs.structure import batch_graphs
+from repro.engine import ChordalityEngine
 
 
 def main():
@@ -45,14 +44,15 @@ def main():
     ok, order, viol = chordality_certificate(jnp.asarray(G.cycle(8).adj))
     print(f"  C8:      chordal={bool(ok)}  violations={int(viol)}")
 
-    # --- batched (vmap) -----------------------------------------------------
-    print("\n=== batched test (one XLA program, B graphs) ===")
+    # --- batched (the engine: padding/batching handled for you) ------------
+    print("\n=== batched test (ChordalityEngine, B graphs) ===")
     graphs = [G.cycle(20), G.clique(20), G.random_tree(20, seed=2),
               G.sparse_random(20, avg_degree=8, seed=3)]
-    adjs = batch_graphs(graphs, n_pad=20)
-    verdicts = np.asarray(is_chordal_batch(jnp.asarray(adjs)))
-    for g, v in zip(["C20", "K20", "tree", "G(20, d=8)"], verdicts):
+    result = ChordalityEngine(backend="jax_faithful").run(graphs)
+    for g, v in zip(["C20", "K20", "tree", "G(20, d=8)"], result.verdicts):
         print(f"  {g:12s} chordal={bool(v)}")
+    print(f"  ({result.stats.n_units} work unit(s), "
+          f"buckets {result.stats.bucket_histogram})")
 
     # --- the LexBFS order itself -------------------------------------------
     print("\n=== LexBFS order of a path (walks the path) ===")

@@ -97,6 +97,46 @@ CHORDALITY_SHAPES = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Engine shape planning: the size-bucketed padding grid.
+#
+# The chordality engine (repro.engine) pads every request graph up to the
+# smallest power-of-two bucket, so jit compilation is amortized across all
+# requests that land in the same bucket instead of recompiling per exact N.
+# ---------------------------------------------------------------------------
+ENGINE_NPAD_BUCKETS: Tuple[int, ...] = tuple(2 ** k for k in range(4, 14))
+# 16, 32, 64, ..., 8192 — covers the paper's N=1k..11k sweep with headroom.
+
+ENGINE_BATCH_BUCKETS: Tuple[int, ...] = tuple(2 ** k for k in range(0, 11))
+# 1, 2, 4, ..., 1024 — trailing partial chunks round up to one of these.
+
+
+def engine_npad_bucket(
+    n: int, buckets: Optional[Tuple[int, ...]] = None
+) -> int:
+    """Smallest padding bucket holding an n-vertex graph.
+
+    Falls back to the next power of two when n exceeds the largest
+    configured bucket (huge one-off requests still get a fixed shape).
+    """
+    if n <= 0:
+        raise ValueError(f"graph size must be positive, got {n}")
+    for b in buckets if buckets is not None else ENGINE_NPAD_BUCKETS:
+        if n <= b:
+            return b
+    return 1 << (n - 1).bit_length()
+
+
+def engine_batch_bucket(b: int, max_batch: int) -> int:
+    """Round a chunk size up to a batch bucket, capped at max_batch."""
+    if b <= 0:
+        raise ValueError(f"batch must be positive, got {b}")
+    for bb in ENGINE_BATCH_BUCKETS:
+        if b <= bb:
+            return min(bb, max_batch)
+    return max_batch
+
+
 def shapes_for_family(family: str):
     return {
         "lm": LM_SHAPES,

@@ -2,11 +2,17 @@
 chordality testing (Łupińska 2013/2015), TPU-native JAX implementation.
 
 Public API:
+  ChordalityEngine (re-export of repro.engine — the preferred entry point:
+    backend dispatch + bucketed batching over every implementation below)
   is_chordal / is_chordal_batch / chordality_certificate
   lexbfs / mcs / bfs (order generators)
   peo_check (order verifier)
-  make_sharded_chordality (production pjit entry point)
+  make_sharded_chordality (mesh pjit builder; engine backend "sharded")
 Sequential references (paper baselines) live in ``lexbfs_ref``.
+
+Direct multi-entry use (hand-rolled padding loops around is_chordal_batch
+et al.) is deprecated for serving and benchmark callers — the engine owns
+shape planning and compile caching (DESIGN.md §6).
 """
 from repro.core.lexbfs import lexbfs, lexbfs_batched, lexbfs_numpy_dense, lexbfs_pos
 from repro.core.peo import peo_check, peo_violations, peo_check_numpy
@@ -35,4 +41,19 @@ __all__ = [
     "chordality_certificate", "make_sharded_chordality",
     "mcs", "is_chordal_mcs", "mcs_numpy", "bfs",
     "generators", "properties", "lexbfs_ref",
+    "ChordalityEngine", "backend_names", "make_backend",
 ]
+
+# Thin re-exports of the engine subsystem, resolved lazily (PEP 562) so
+# ``import repro.engine`` -> ``repro.core.lexbfs`` -> this package does not
+# cycle at import time.
+_ENGINE_EXPORTS = ("ChordalityEngine", "backend_names", "make_backend")
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro import engine as _engine
+
+        return getattr(_engine, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

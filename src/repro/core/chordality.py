@@ -1,13 +1,18 @@
-"""Chordality testing — the paper's end-to-end pipeline (public API).
+"""Chordality testing — the paper's end-to-end pipeline (kernel-level API).
 
 ``is_chordal(adj)``            single graph (jit, dense bool adjacency)
 ``is_chordal_batch(adjs)``     vmap over (B, N, N) — data-parallel batches
-``make_sharded_chordality``    pjit'd batch tester over a device mesh (the
-                               production entry point: shards the graph batch
-                               over the data axes, vertex columns over model)
+``make_sharded_chordality``    pjit'd batch tester builder for a device mesh
 
 Pipeline = parallel LexBFS (§6.1) + parallel PEO test (§6.2), per Theorem 5.1
 (Rose–Tarjan–Lueker): G chordal ⇔ any LexBFS order is a PEO.
+
+.. deprecated:: serving/benchmark callers
+   These functions take pre-padded fixed-shape arrays and know nothing
+   about batching policy. ``repro.engine.ChordalityEngine`` dispatches over
+   all of them (capability-flagged backend registry) and owns padding,
+   size-bucketing, and compile caching — new callers go through it; this
+   module remains the kernel layer the engine's backends wrap.
 """
 from __future__ import annotations
 
@@ -106,6 +111,8 @@ def make_sharded_chordality(
 # Host-convenience wrappers (accept Graph / numpy, handle padding).
 # ---------------------------------------------------------------------------
 def is_chordal_host(graph_or_adj, n_pad: Optional[int] = None) -> bool:
+    """One-off host convenience. For request streams use
+    ``repro.engine.ChordalityEngine`` (bucketed padding + compile cache)."""
     from repro.graphs.structure import Graph, pad_graph
 
     if hasattr(graph_or_adj, "with_dense"):

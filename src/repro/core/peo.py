@@ -74,8 +74,7 @@ def peo_violations(adj: jnp.ndarray, order: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(bad.astype(jnp.int32))
 
 
-def peo_check_numpy(adj: np.ndarray, order: np.ndarray) -> bool:
-    """Numpy twin (dense, C-speed) for the benchmark CPU baseline."""
+def _bad_matrix_numpy(adj: np.ndarray, order: np.ndarray) -> np.ndarray:
     adj = np.asarray(adj, dtype=bool)
     n = adj.shape[0]
     pos = np.empty(n, dtype=np.int64)
@@ -86,5 +85,14 @@ def peo_check_numpy(adj: np.ndarray, order: np.ndarray) -> bool:
     has_ln = ln.any(axis=1)
     adj_p = adj[p]
     z_ids = np.arange(n)[None, :]
-    bad = ln & (z_ids != p[:, None]) & (~adj_p) & has_ln[:, None]
-    return not bad.any()
+    return ln & (z_ids != p[:, None]) & (~adj_p) & has_ln[:, None]
+
+
+def peo_check_numpy(adj: np.ndarray, order: np.ndarray) -> bool:
+    """Numpy twin (dense, C-speed) for the benchmark CPU baseline."""
+    return not _bad_matrix_numpy(adj, order).any()
+
+
+def peo_violations_numpy(adj: np.ndarray, order: np.ndarray) -> int:
+    """Numpy twin of :func:`peo_violations` — the host backend's witness."""
+    return int(_bad_matrix_numpy(adj, order).sum())

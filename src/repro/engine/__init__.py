@@ -1,0 +1,51 @@
+"""Chordality engine — backend dispatch + bucketed batching (DESIGN.md §6).
+
+This subsystem is the production entry point for the paper's pipeline
+(parallel LexBFS §6.1 + parallel PEO test §6.2): a backend registry over
+every implementation in the repo, a planner that turns ragged request
+streams into fixed-shape work units, and a session layer with throughput
+and latency stats. Direct use of the ``repro.core`` multi-entry functions
+is deprecated for serving/benchmark callers — go through
+:class:`ChordalityEngine`.
+"""
+from repro.engine.backends import (
+    BackendCaps,
+    BackendSpec,
+    ChordalityBackend,
+    backend_names,
+    backend_spec,
+    make_backend,
+    register_backend,
+)
+from repro.engine.planner import (
+    CompileCache,
+    Plan,
+    WorkUnit,
+    plan_requests,
+    realize_unit,
+)
+from repro.engine.session import (
+    Certificate,
+    ChordalityEngine,
+    EngineResult,
+    EngineStats,
+)
+
+__all__ = [
+    "BackendCaps",
+    "BackendSpec",
+    "ChordalityBackend",
+    "backend_names",
+    "backend_spec",
+    "make_backend",
+    "register_backend",
+    "CompileCache",
+    "Plan",
+    "WorkUnit",
+    "plan_requests",
+    "realize_unit",
+    "Certificate",
+    "ChordalityEngine",
+    "EngineResult",
+    "EngineStats",
+]

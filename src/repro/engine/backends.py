@@ -1,0 +1,303 @@
+"""Backend registry — every chordality implementation behind one protocol.
+
+The repo grew five divergent entry points (``is_chordal``,
+``is_chordal_fast``, ``is_chordal_batch``, ``make_sharded_chordality``,
+``is_chordal_host``); this module is the single seam that replaces direct
+multi-entry use.  Each implementation registers a :class:`BackendSpec` with
+capability flags, and exposes exactly two operations:
+
+* ``compile_batch(n_pad, batch)`` — build the executable for one fixed
+  work-unit shape ``(batch, n_pad, n_pad)``.  The planner's compile cache
+  (``repro.engine.planner.CompileCache``) stores what this returns, keyed
+  on ``(backend, n_pad, batch)``, so jit compilation is paid once per
+  bucket shape, not per request.
+* ``certificate(adj)`` — the detailed single-graph answer
+  ``(chordal, order, n_violations)`` for backends that can produce one.
+
+Registered backends:
+
+========== ======== ======= ============ =====================================
+name       batched  device  certificate  implementation
+========== ======== ======= ============ =====================================
+numpy_ref  no       no      yes          lexbfs_numpy_dense + peo_check_numpy
+jax_faithful yes    yes     yes          lexbfs (§6.1) + peo_check (§6.2)
+jax_fast   yes      yes     yes          lexbfs_fast (lazy compaction)
+pallas_peo no       yes     yes          lexbfs + fused Pallas PEO kernel
+sharded    yes      yes     no           pjit over a device mesh
+========== ======== ======= ============ =====================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCaps:
+    """Capability flags the planner/session dispatch on."""
+
+    batched: bool       # natively executes (B, N, N) in one device program
+    device: bool        # runs under jit on the accelerator
+    certificate: bool   # can produce (order, n_violations) witnesses
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    caps: BackendCaps
+    factory: Callable[..., "ChordalityBackend"]
+    doc: str = ""
+
+
+class ChordalityBackend:
+    """Protocol base class. Subclasses set ``name``/``caps`` and implement
+    :meth:`compile_batch`; certificate-capable ones also implement
+    :meth:`certificate`."""
+
+    name: str = "abstract"
+    caps: BackendCaps = BackendCaps(False, False, False)
+
+    def compile_batch(
+        self, n_pad: int, batch: int
+    ) -> Callable[[np.ndarray], np.ndarray]:
+        """Executable for the fixed shape (batch, n_pad, n_pad) -> (batch,).
+
+        Input is a host bool array; output a host bool array of verdicts.
+        Backends without native batching return a host loop here — the
+        shape contract (and thus the compile-cache key) is identical.
+        """
+        raise NotImplementedError
+
+    def certificate(
+        self, adj: np.ndarray
+    ) -> Tuple[bool, np.ndarray, int]:
+        """(chordal, elimination order, violation count) for one graph."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not produce certificates")
+
+
+# ---------------------------------------------------------------------------
+# Implementations (thin adapters over repro.core / repro.kernels).
+# ---------------------------------------------------------------------------
+class NumpyRefBackend(ChordalityBackend):
+    """Host reference: the dense numpy rank-refinement twin. No jit — the
+    compile cache is a no-op for it, but it honors the same shape contract
+    so the planner treats every backend uniformly."""
+
+    name = "numpy_ref"
+    caps = BackendCaps(batched=False, device=False, certificate=True)
+
+    def compile_batch(self, n_pad, batch):
+        from repro.core.lexbfs import lexbfs_numpy_dense
+        from repro.core.peo import peo_check_numpy
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            out = np.zeros(adjs.shape[0], dtype=bool)
+            for i, adj in enumerate(adjs):
+                order = lexbfs_numpy_dense(adj)
+                out[i] = peo_check_numpy(adj, order)
+            return out
+
+        return run
+
+    def certificate(self, adj):
+        from repro.core.lexbfs import lexbfs_numpy_dense
+        from repro.core.peo import peo_violations_numpy
+
+        order = lexbfs_numpy_dense(np.asarray(adj, dtype=bool))
+        viol = peo_violations_numpy(adj, order)
+        return viol == 0, np.asarray(order), viol
+
+
+class _JaxBackendBase(ChordalityBackend):
+    """Shared device plumbing for the jnp pipelines."""
+
+    def _order_fn(self):
+        raise NotImplementedError
+
+    def compile_batch(self, n_pad, batch):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.peo import peo_check
+
+        order_fn = self._order_fn()
+
+        def one(adj):
+            return peo_check(adj, order_fn(adj))
+
+        fn = jax.jit(jax.vmap(one))
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            return np.asarray(fn(jnp.asarray(adjs)))
+
+        return run
+
+    def certificate(self, adj):
+        import jax.numpy as jnp
+
+        from repro.core.peo import peo_violations
+
+        order = self._order_fn()(jnp.asarray(np.asarray(adj, dtype=bool)))
+        viol = int(peo_violations(jnp.asarray(adj), order))
+        return viol == 0, np.asarray(order), viol
+
+
+class JaxFaithfulBackend(_JaxBackendBase):
+    """Paper-faithful pipeline: per-iteration rank compaction (§6.1+§6.2)."""
+
+    name = "jax_faithful"
+    caps = BackendCaps(batched=True, device=True, certificate=True)
+
+    def _order_fn(self):
+        from repro.core.lexbfs import lexbfs
+
+        return lexbfs
+
+
+class JaxFastBackend(_JaxBackendBase):
+    """Lazy-compaction LexBFS (EXPERIMENTS.md §Perf A). Bit-identical orders
+    to jax_faithful — asserted in tests/test_engine_backends.py."""
+
+    name = "jax_fast"
+    caps = BackendCaps(batched=True, device=True, certificate=True)
+
+    def _order_fn(self):
+        from repro.core.lexbfs import lexbfs_fast
+
+        return lexbfs_fast
+
+
+class PallasPeoBackend(ChordalityBackend):
+    """LexBFS + the fused Pallas PEO kernel (repro.kernels.peo_check).
+
+    Not natively batched: the kernel's grid is per-graph, so the batch
+    contract is met with a host loop over jit'd single-graph calls (one
+    compile per n_pad, amortized by the cache like every other backend).
+    """
+
+    name = "pallas_peo"
+    caps = BackendCaps(batched=False, device=True, certificate=True)
+
+    def __init__(self, interpret: bool = True):
+        self._interpret = interpret
+
+    def compile_batch(self, n_pad, batch):
+        import jax.numpy as jnp
+
+        from repro.core.lexbfs import lexbfs
+        from repro.kernels.peo_check.ops import peo_check_pallas
+
+        interpret = self._interpret
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            out = np.zeros(adjs.shape[0], dtype=bool)
+            for i, adj in enumerate(adjs):
+                a = jnp.asarray(adj)
+                out[i] = bool(
+                    peo_check_pallas(a, lexbfs(a), interpret=interpret))
+            return out
+
+        return run
+
+    def certificate(self, adj):
+        import jax.numpy as jnp
+
+        from repro.core.lexbfs import lexbfs
+        from repro.kernels.peo_check.ops import peo_violations_count
+
+        a = jnp.asarray(np.asarray(adj, dtype=bool))
+        order = lexbfs(a)
+        viol = int(peo_violations_count(a, order, interpret=self._interpret))
+        return viol == 0, np.asarray(order), viol
+
+
+class ShardedBackend(ChordalityBackend):
+    """pjit'd batch tester over a device mesh (the multi-device production
+    path). On a single-device host it degenerates to a 1x1 mesh, keeping
+    the code path exercised everywhere."""
+
+    name = "sharded"
+    caps = BackendCaps(batched=True, device=True, certificate=False)
+
+    def __init__(self, mesh=None, use_pallas_peo: bool = False):
+        self._mesh = mesh
+        self._use_pallas_peo = use_pallas_peo
+
+    def _get_mesh(self):
+        if self._mesh is None:
+            import jax
+            import numpy as np_
+            from jax.sharding import Mesh
+
+            devs = np_.asarray(jax.devices()).reshape(-1, 1)
+            self._mesh = Mesh(devs, ("data", "model"))
+        return self._mesh
+
+    def compile_batch(self, n_pad, batch):
+        import jax.numpy as jnp
+
+        from repro.core.chordality import make_sharded_chordality
+
+        mesh = self._get_mesh()
+        fn = make_sharded_chordality(
+            mesh, use_pallas_peo=self._use_pallas_peo)
+        # The batch dim shards over the mesh's data axis; the planner's
+        # power-of-two batches know nothing about device counts, so pad
+        # the batch up to a divisible size here (empty-graph slots) and
+        # slice the verdicts back.
+        data_size = mesh.shape["data"]
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            b = adjs.shape[0]
+            b_pad = -(-b // data_size) * data_size
+            if b_pad != b:
+                adjs = np.concatenate([
+                    adjs,
+                    np.zeros((b_pad - b,) + adjs.shape[1:], dtype=bool),
+                ])
+            return np.asarray(fn(jnp.asarray(adjs)))[:b]
+
+        return run
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, BackendSpec] = {}
+
+
+def register_backend(spec: BackendSpec, overwrite: bool = False) -> None:
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {spec.name!r} already registered")
+    _REGISTRY[spec.name] = spec
+
+
+def backend_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_spec(name: str) -> BackendSpec:
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {backend_names()}")
+    return _REGISTRY[name]
+
+
+def make_backend(name: str, **opts) -> ChordalityBackend:
+    """Instantiate a registered backend by name."""
+    return backend_spec(name).factory(**opts)
+
+
+for _cls in (
+    NumpyRefBackend,
+    JaxFaithfulBackend,
+    JaxFastBackend,
+    PallasPeoBackend,
+    ShardedBackend,
+):
+    register_backend(BackendSpec(
+        name=_cls.name, caps=_cls.caps, factory=_cls,
+        doc=(_cls.__doc__ or "").strip().splitlines()[0]))

@@ -1,0 +1,134 @@
+"""Execution planner — variable-size requests to fixed-shape work units.
+
+jit'd device code wants fixed shapes; serving traffic is ragged. The planner
+closes that gap with two rounds of power-of-two bucketing:
+
+* **n_pad bucket** — every graph pads up to the smallest bucket in
+  ``repro.configs.shapes.ENGINE_NPAD_BUCKETS`` that holds it (padding
+  vertices are isolated and never change the verdict, see
+  ``repro.graphs.structure.pad_graph``).
+* **batch bucket** — requests sharing an n_pad bucket are chunked to
+  ``max_batch``; a trailing partial chunk rounds its batch dimension up to
+  a power of two (empty-graph padding slots, masked out of the results).
+
+The result: for a given engine config, at most
+``len(ENGINE_NPAD_BUCKETS) * (log2(max_batch) + 1)`` distinct compiled
+shapes ever exist, regardless of traffic. :class:`CompileCache` holds those
+executables, keyed on ``(backend, n_pad, batch)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.shapes import engine_batch_bucket
+from repro.graphs.structure import Graph, bucket_graphs
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkUnit:
+    """One fixed-shape batch: ``batch`` slots padded to ``n_pad`` vertices.
+
+    ``indices`` are the request positions filled into slots ``0..len-1``;
+    remaining slots (up to ``batch``) are empty-graph padding.
+    """
+
+    n_pad: int
+    batch: int
+    indices: Tuple[int, ...]
+
+    @property
+    def n_padding_slots(self) -> int:
+        return self.batch - len(self.indices)
+
+
+@dataclasses.dataclass
+class Plan:
+    """The shape plan for one request stream."""
+
+    units: List[WorkUnit]
+    n_requests: int
+
+    @property
+    def bucket_histogram(self) -> Dict[int, int]:
+        """{n_pad: number of requests} over the whole plan."""
+        hist: Dict[int, int] = {}
+        for u in self.units:
+            hist[u.n_pad] = hist.get(u.n_pad, 0) + len(u.indices)
+        return hist
+
+    def unit_of(self, request_index: int) -> WorkUnit:
+        """The work unit a given request was scheduled into."""
+        for u in self.units:
+            if request_index in u.indices:
+                return u
+        raise IndexError(f"request {request_index} not in plan")
+
+
+def plan_requests(
+    graphs: Sequence[Graph],
+    max_batch: int = 64,
+    buckets: Optional[Sequence[int]] = None,
+) -> Plan:
+    """Bucket + chunk a request stream into fixed-shape work units."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    units: List[WorkUnit] = []
+    for n_pad, idxs in sorted(bucket_graphs(graphs, buckets).items()):
+        for lo in range(0, len(idxs), max_batch):
+            chunk = tuple(idxs[lo: lo + max_batch])
+            units.append(WorkUnit(
+                n_pad=n_pad,
+                batch=engine_batch_bucket(len(chunk), max_batch),
+                indices=chunk,
+            ))
+    return Plan(units=units, n_requests=len(graphs))
+
+
+def realize_unit(
+    unit: WorkUnit, graphs: Sequence[Graph]
+) -> np.ndarray:
+    """Materialize a work unit's (batch, n_pad, n_pad) bool adjacency batch.
+
+    Padding slots are all-zero adjacencies (empty graphs — trivially
+    chordal); their verdicts are dropped by the session layer. Graphs whose
+    stored adjacency is already padded beyond ``n_nodes`` are sliced down
+    first — their padding vertices are isolated by contract, so the logical
+    (n_nodes, n_nodes) block carries the whole graph.
+    """
+    out = np.zeros((unit.batch, unit.n_pad, unit.n_pad), dtype=bool)
+    for slot, idx in enumerate(unit.indices):
+        g = graphs[idx].with_dense()
+        n = g.n_nodes
+        out[slot, :n, :n] = g.adj[:n, :n]
+    return out
+
+
+class CompileCache:
+    """Executable cache keyed on (backend name, n_pad, batch).
+
+    A miss calls ``backend.compile_batch`` (tracing + XLA compile for the
+    device backends); a hit reuses the executable. The hit/miss counters
+    feed the engine's stats — in steady-state serving, misses stay flat.
+    """
+
+    def __init__(self):
+        self._fns: Dict[Tuple[str, int, int], Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def get(self, backend, n_pad: int, batch: int) -> Callable:
+        key = (backend.name, n_pad, batch)
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = backend.compile_batch(n_pad, batch)
+            self._fns[key] = fn
+        else:
+            self.hits += 1
+        return fn

@@ -1,0 +1,179 @@
+"""Session layer — ``ChordalityEngine``: the one entry point for callers.
+
+    from repro.engine import ChordalityEngine
+
+    eng = ChordalityEngine(backend="jax_fast", max_batch=64)
+    result = eng.run(graphs)          # graphs: Sequence[Graph] (any sizes)
+    result.verdicts                   # (len(graphs),) bool, input order
+    result.stats.throughput_gps      # graphs/second over the run
+    eng.certificate(graphs[i])       # (chordal, PEO-or-witness)
+
+The engine owns one backend instance and one compile cache for its
+lifetime, so repeated ``run`` calls amortize compilation the way a serving
+process does. All shape planning goes through ``repro.engine.planner`` —
+callers never pad or batch by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.engine.backends import (
+    ChordalityBackend,
+    make_backend,
+)
+from repro.engine.planner import (
+    CompileCache,
+    Plan,
+    plan_requests,
+    realize_unit,
+)
+from repro.graphs.structure import Graph, bucket_npad
+
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int = 0
+    n_units: int = 0
+    wall_s: float = 0.0
+    unit_latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    compile_hits: int = 0
+    compile_misses: int = 0
+    bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def throughput_gps(self) -> float:
+        """Graphs per second across the whole run (incl. compile time)."""
+        return self.n_requests / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def p50_latency_ms(self) -> float:
+        return float(np.median(self.unit_latencies_ms)) \
+            if self.unit_latencies_ms else 0.0
+
+
+@dataclasses.dataclass
+class EngineResult:
+    """Verdicts aligned to the input request order, plus the shape plan
+    that produced them (per-request metadata via ``plan.unit_of(i)``)."""
+
+    verdicts: np.ndarray          # (n_requests,) bool
+    plan: Plan
+    stats: EngineStats
+
+    def __len__(self) -> int:
+        return len(self.verdicts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Certificate:
+    chordal: bool
+    order: np.ndarray             # LexBFS order; a PEO iff chordal
+    n_violations: int             # > 0 is the quantitative negative witness
+    n_pad: int                    # bucket the request was padded to
+
+
+class ChordalityEngine:
+    """Backend-dispatched, bucket-batched chordality testing.
+
+    Args:
+      backend: registered backend name (see
+        ``repro.engine.backends.backend_names()``) or an already-built
+        :class:`ChordalityBackend` instance.
+      max_batch: work-unit batch cap; partial chunks round up to powers
+        of two (bounded compile count, see planner docs).
+      buckets: override the n_pad bucket grid (default
+        ``configs.shapes.ENGINE_NPAD_BUCKETS``). Mainly for tests.
+      backend_opts: forwarded to the backend factory.
+    """
+
+    def __init__(
+        self,
+        backend: Union[str, ChordalityBackend] = "jax_fast",
+        max_batch: int = 64,
+        buckets: Optional[Sequence[int]] = None,
+        **backend_opts,
+    ):
+        if isinstance(backend, str):
+            backend = make_backend(backend, **backend_opts)
+        elif backend_opts:
+            raise ValueError(
+                "backend_opts only apply when backend is given by name")
+        self.backend = backend
+        self.max_batch = max_batch
+        self.buckets = tuple(buckets) if buckets is not None else None
+        self.cache = CompileCache()
+
+    # -- planning ----------------------------------------------------------
+    def plan(self, graphs: Sequence[Graph]) -> Plan:
+        return plan_requests(
+            graphs, max_batch=self.max_batch, buckets=self.buckets)
+
+    def warmup(self, n_pads: Sequence[int], batch: Optional[int] = None):
+        """Pre-compile the given buckets at one batch size (default
+        ``max_batch`` — the steady-state full-chunk shape)."""
+        b = batch if batch is not None else self.max_batch
+        for n_pad in n_pads:
+            fn = self.cache.get(self.backend, n_pad, b)
+            fn(np.zeros((b, n_pad, n_pad), dtype=bool))
+        return self
+
+    def warmup_plan(self, plan: Plan):
+        """Pre-compile exactly the (n_pad, batch) shapes a plan needs, so
+        the subsequent :meth:`run` is compile-free."""
+        for n_pad, batch in sorted({(u.n_pad, u.batch) for u in plan.units}):
+            fn = self.cache.get(self.backend, n_pad, batch)
+            fn(np.zeros((batch, n_pad, n_pad), dtype=bool))
+        return self
+
+    # -- execution ---------------------------------------------------------
+    def run(self, graphs: Sequence[Graph]) -> EngineResult:
+        """Test a stream of graphs; verdicts come back in request order."""
+        plan = self.plan(graphs)
+        verdicts = np.zeros(plan.n_requests, dtype=bool)
+        stats = EngineStats(
+            n_requests=plan.n_requests, n_units=len(plan.units))
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        t0 = time.perf_counter()
+        for unit in plan.units:
+            adjs = realize_unit(unit, graphs)
+            fn = self.cache.get(self.backend, unit.n_pad, unit.batch)
+            t1 = time.perf_counter()
+            out = fn(adjs)
+            stats.unit_latencies_ms.append(
+                (time.perf_counter() - t1) * 1e3)
+            verdicts[list(unit.indices)] = out[: len(unit.indices)]
+        stats.wall_s = time.perf_counter() - t0
+        stats.compile_hits = self.cache.hits - hits0
+        stats.compile_misses = self.cache.misses - misses0
+        stats.bucket_histogram = plan.bucket_histogram
+        return EngineResult(verdicts=verdicts, plan=plan, stats=stats)
+
+    def certificate(self, graph_or_adj) -> Certificate:
+        """Detailed single-graph answer through the engine's shape planning.
+
+        Falls back to the ``jax_faithful`` backend when the engine's own
+        backend cannot produce certificates (e.g. ``sharded``).
+        """
+        if isinstance(graph_or_adj, Graph):
+            g = graph_or_adj.with_dense()
+            # Slice off any pre-existing padding (isolated by contract) so
+            # the request lands in the bucket its logical size deserves.
+            n = g.n_nodes
+            adj = g.adj[:n, :n]
+        else:
+            adj = np.asarray(graph_or_adj, dtype=bool)
+            n = adj.shape[0]
+        n_pad = bucket_npad(max(n, 1), self.buckets)
+        padded = np.zeros((n_pad, n_pad), dtype=bool)
+        padded[:n, :n] = adj
+        backend = self.backend
+        if not backend.caps.certificate:
+            backend = make_backend("jax_faithful")
+        ok, order, viol = backend.certificate(padded)
+        return Certificate(
+            chordal=bool(ok), order=np.asarray(order),
+            n_violations=int(viol), n_pad=n_pad)

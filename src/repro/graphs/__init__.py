@@ -6,6 +6,8 @@ from repro.graphs.structure import (
     csr_from_edges,
     pad_graph,
     batch_graphs,
+    bucket_npad,
+    bucket_graphs,
 )
 
 __all__ = [
@@ -15,4 +17,6 @@ __all__ = [
     "csr_from_edges",
     "pad_graph",
     "batch_graphs",
+    "bucket_npad",
+    "bucket_graphs",
 ]

@@ -127,3 +127,30 @@ def batch_graphs(graphs: Sequence[Graph], n_pad: Optional[int] = None) -> np.nda
         gd = pad_graph(g, n_pad)
         out[i] = gd.adj
     return out
+
+
+# ---------------------------------------------------------------------------
+# Size-bucketed batching (the engine's shape-planning substrate).
+# ---------------------------------------------------------------------------
+def bucket_npad(n: int, buckets: Optional[Sequence[int]] = None) -> int:
+    """Padding bucket for an n-vertex graph (powers of two; see
+    ``repro.configs.shapes.ENGINE_NPAD_BUCKETS``)."""
+    from repro.configs.shapes import engine_npad_bucket
+
+    return engine_npad_bucket(
+        n, tuple(buckets) if buckets is not None else None)
+
+
+def bucket_graphs(
+    graphs: Sequence[Graph], buckets: Optional[Sequence[int]] = None
+) -> dict:
+    """Group request indices by padding bucket: {n_pad: [indices...]}.
+
+    Indices within a bucket keep arrival order, so a downstream batcher
+    preserves request FIFO within each shape class.
+    """
+    by_bucket: dict = {}
+    for i, g in enumerate(graphs):
+        b = bucket_npad(max(g.n_nodes, 1), buckets)
+        by_bucket.setdefault(b, []).append(i)
+    return by_bucket

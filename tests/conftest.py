@@ -1,0 +1,115 @@
+"""Shared test configuration — makes ``hypothesis`` optional.
+
+The property-based tests import ``hypothesis`` at module scope; on minimal
+environments (e.g. the baked accelerator image) that module is absent and
+the whole suite failed at collection. This conftest installs a small
+deterministic fallback into ``sys.modules`` *before* test modules are
+imported: ``@given`` draws a reduced, seeded set of examples per test, and
+``@settings`` is honored for ``max_examples`` (capped — the fallback is a
+smoke version of the property tests, not a replacement for hypothesis's
+shrinking search). With real hypothesis installed (requirements-dev.txt),
+nothing here activates.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+# Fallback draws per test are capped: enough to exercise the property
+# across shapes (each distinct n is a fresh jit compile) without turning
+# the tier-1 suite into a compile marathon.
+_FALLBACK_MAX_EXAMPLES = 10
+
+
+def _install_hypothesis_fallback() -> None:
+    import numpy as np
+
+    class _Strategy:
+        """A value sampler; mirrors the tiny strategy surface we use."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    st_mod.integers = integers
+    st_mod.floats = floats
+    st_mod.booleans = booleans
+    st_mod.sampled_from = sampled_from
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(
+                    wrapper, "_fallback_max_examples",
+                    _FALLBACK_MAX_EXAMPLES)
+                # Seed from the test's qualified name: stable across runs
+                # and processes (unlike hash()).
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    drawn = {
+                        k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **{**kwargs, **drawn})
+
+            # Hide the strategy-filled parameters from pytest's fixture
+            # resolution (functools.wraps leaks the original signature via
+            # __wrapped__; real hypothesis does the same masking).
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(
+                p for name, p in
+                inspect.signature(fn).parameters.items()
+                if name not in strategies)
+            return wrapper
+
+        return deco
+
+    class settings:
+        """Decorator shim: honors max_examples (capped), ignores the rest."""
+
+        def __init__(self, max_examples=None, deadline=None, **_):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            if self.max_examples is not None:
+                fn._fallback_max_examples = min(
+                    self.max_examples, _FALLBACK_MAX_EXAMPLES)
+            return fn
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None)
+    hyp.__version__ = "0.0.0-repro-fallback"
+    hyp.IS_REPRO_FALLBACK = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+
+
+try:
+    import hypothesis  # noqa: F401  (real library wins when present)
+except ImportError:
+    _install_hypothesis_fallback()

@@ -1,0 +1,229 @@
+"""Engine subsystem: planner shapes, compile cache, session results/stats."""
+import numpy as np
+import pytest
+
+from repro.configs.shapes import (
+    ENGINE_NPAD_BUCKETS,
+    engine_batch_bucket,
+    engine_npad_bucket,
+)
+from repro.core import generators as G
+from repro.engine import (
+    ChordalityEngine,
+    CompileCache,
+    backend_names,
+    backend_spec,
+    make_backend,
+    plan_requests,
+    realize_unit,
+)
+from repro.graphs.structure import bucket_graphs, bucket_npad
+
+
+# ---------------------------------------------------------------------------
+# Bucketing helpers
+# ---------------------------------------------------------------------------
+def test_npad_buckets_are_powers_of_two():
+    assert all(b & (b - 1) == 0 for b in ENGINE_NPAD_BUCKETS)
+    assert ENGINE_NPAD_BUCKETS == tuple(sorted(ENGINE_NPAD_BUCKETS))
+
+
+@pytest.mark.parametrize("n,want", [(1, 16), (16, 16), (17, 32), (96, 128),
+                                    (8192, 8192)])
+def test_engine_npad_bucket(n, want):
+    assert engine_npad_bucket(n) == want
+
+
+def test_npad_bucket_beyond_grid_rounds_to_pow2():
+    assert engine_npad_bucket(9000) == 16384
+
+
+def test_batch_bucket_rounds_up_capped():
+    assert engine_batch_bucket(3, 64) == 4
+    assert engine_batch_bucket(64, 64) == 64
+    assert engine_batch_bucket(5, 4) == 4
+
+
+def test_bucket_graphs_partitions_all_indices():
+    graphs = [G.cycle(5), G.clique(40), G.path(17), G.cycle(4)]
+    by_bucket = bucket_graphs(graphs)
+    got = sorted(i for idxs in by_bucket.values() for i in idxs)
+    assert got == [0, 1, 2, 3]
+    assert by_bucket[16] == [0, 3]      # FIFO within bucket
+    assert by_bucket[64] == [1]
+    assert by_bucket[32] == [2]
+    assert bucket_npad(5) == 16
+
+
+# ---------------------------------------------------------------------------
+# Planner
+# ---------------------------------------------------------------------------
+def test_plan_covers_each_request_exactly_once():
+    graphs = [G.cycle(n) for n in (4, 9, 17, 33, 70, 12, 18)]
+    plan = plan_requests(graphs, max_batch=2)
+    seen = sorted(i for u in plan.units for i in u.indices)
+    assert seen == list(range(len(graphs)))
+    assert plan.n_requests == len(graphs)
+
+
+def test_plan_batches_are_pow2_and_capped():
+    graphs = [G.cycle(10)] * 7          # all land in the n_pad=16 bucket
+    plan = plan_requests(graphs, max_batch=4)
+    assert [u.batch for u in plan.units] == [4, 4]
+    assert [len(u.indices) for u in plan.units] == [4, 3]
+    assert plan.units[1].n_padding_slots == 1
+
+
+def test_plan_unit_of_returns_scheduling_metadata():
+    graphs = [G.cycle(10), G.clique(50)]
+    plan = plan_requests(graphs, max_batch=8)
+    assert plan.unit_of(0).n_pad == 16
+    assert plan.unit_of(1).n_pad == 64
+    with pytest.raises(IndexError):
+        plan.unit_of(99)
+
+
+def test_realize_unit_pads_slots_with_empty_graphs():
+    graphs = [G.clique(3)] * 3
+    plan = plan_requests(graphs, max_batch=8)
+    (unit,) = plan.units
+    adjs = realize_unit(unit, graphs)
+    assert adjs.shape == (4, 16, 16)
+    assert adjs[:3, :3, :3].any()
+    assert not adjs[3].any()            # padding slot: empty graph
+    assert not adjs[:, 3:, :].any()     # padding vertices: isolated
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+def test_registry_has_all_five_backends():
+    assert set(backend_names()) >= {
+        "numpy_ref", "jax_faithful", "jax_fast", "pallas_peo", "sharded"}
+
+
+def test_capability_flags():
+    assert backend_spec("jax_faithful").caps.batched
+    assert backend_spec("jax_faithful").caps.certificate
+    assert not backend_spec("numpy_ref").caps.device
+    assert not backend_spec("pallas_peo").caps.batched
+    assert not backend_spec("sharded").caps.certificate
+
+
+def test_unknown_backend_raises_with_listing():
+    with pytest.raises(KeyError, match="jax_fast"):
+        make_backend("no_such_backend")
+
+
+# ---------------------------------------------------------------------------
+# Compile cache
+# ---------------------------------------------------------------------------
+def test_compile_cache_hits_on_repeat_shapes():
+    cache = CompileCache()
+    be = make_backend("numpy_ref")
+    f1 = cache.get(be, 16, 4)
+    f2 = cache.get(be, 16, 4)
+    f3 = cache.get(be, 32, 4)
+    assert f1 is f2 and f1 is not f3
+    assert (cache.hits, cache.misses, len(cache)) == (1, 2, 2)
+
+
+def test_cache_key_includes_backend_name():
+    cache = CompileCache()
+    cache.get(make_backend("numpy_ref"), 16, 4)
+    cache.get(make_backend("jax_faithful"), 16, 4)
+    assert cache.misses == 2
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+def test_run_verdicts_aligned_to_request_order():
+    # Interleave chordal / non-chordal across different buckets so any
+    # misalignment between plan units and result slots flips a verdict.
+    graphs = [G.cycle(9), G.clique(9), G.cycle(20), G.clique(20),
+              G.cycle(40), G.random_tree(40, seed=0)]
+    want = [False, True, False, True, False, True]
+    res = ChordalityEngine(backend="jax_faithful", max_batch=2).run(graphs)
+    assert res.verdicts.tolist() == want
+    assert len(res) == len(graphs)
+
+
+def test_second_run_reuses_compile_cache():
+    eng = ChordalityEngine(backend="jax_faithful", max_batch=4)
+    graphs = [G.cycle(n) for n in (5, 10, 20, 40)]
+    r1 = eng.run(graphs)
+    r2 = eng.run(graphs)
+    assert r1.stats.compile_misses > 0
+    assert r2.stats.compile_misses == 0
+    assert r2.stats.compile_hits == r1.stats.compile_misses
+    assert r1.verdicts.tolist() == r2.verdicts.tolist()
+
+
+def test_stats_shape_accounting():
+    graphs = [G.cycle(10)] * 5 + [G.clique(30)] * 2
+    res = ChordalityEngine(backend="numpy_ref", max_batch=4).run(graphs)
+    s = res.stats
+    assert s.n_requests == 7
+    assert s.bucket_histogram == {16: 5, 32: 2}
+    assert s.n_units == len(res.plan.units) == len(s.unit_latencies_ms)
+    assert s.wall_s > 0 and s.throughput_gps > 0
+    assert s.p50_latency_ms >= 0
+
+
+def test_warmup_plan_precompiles_exact_shapes():
+    eng = ChordalityEngine(backend="jax_faithful", max_batch=4)
+    graphs = [G.cycle(10), G.cycle(20)]
+    eng.warmup_plan(eng.plan(graphs))
+    res = eng.run(graphs)
+    assert res.stats.compile_misses == 0
+
+
+def test_warmup_precompiles_steady_state_batch():
+    eng = ChordalityEngine(backend="jax_faithful", max_batch=2)
+    eng.warmup([16])
+    res = eng.run([G.cycle(10), G.cycle(11)])  # one full (16, 2) unit
+    assert res.stats.compile_misses == 0
+
+
+def test_certificate_through_engine_buckets():
+    eng = ChordalityEngine(backend="jax_faithful")
+    cert = eng.certificate(G.cycle(9))
+    assert not cert.chordal and cert.n_violations > 0
+    assert cert.n_pad == 16 and cert.order.shape == (16,)
+    cert = eng.certificate(G.random_chordal(20, k=3, seed=0))
+    assert cert.chordal and cert.n_violations == 0
+
+
+def test_certificate_falls_back_for_noncertificate_backend():
+    cert = ChordalityEngine(backend="sharded").certificate(G.cycle(8))
+    assert not cert.chordal and cert.n_violations > 0
+
+
+def test_engine_rejects_opts_with_instance_backend():
+    be = make_backend("numpy_ref")
+    with pytest.raises(ValueError):
+        ChordalityEngine(backend=be, interpret=False)
+
+
+def test_prepadded_graph_lands_in_logical_bucket():
+    # A Graph may carry adj padded beyond n_nodes (isolated padding
+    # vertices, per the Graph contract); the engine must bucket by the
+    # logical size and slice the padding off, not crash or mis-bucket.
+    from repro.graphs.structure import pad_graph
+
+    g = pad_graph(G.cycle(9), 100)
+    eng = ChordalityEngine(backend="numpy_ref", max_batch=4)
+    res = eng.run([g, G.clique(9)])
+    assert res.verdicts.tolist() == [False, True]
+    assert res.stats.bucket_histogram == {16: 2}
+    cert = eng.certificate(g)
+    assert not cert.chordal and cert.n_pad == 16
+
+
+def test_custom_buckets_override():
+    eng = ChordalityEngine(
+        backend="numpy_ref", max_batch=4, buckets=(8, 128))
+    res = eng.run([G.cycle(6), G.cycle(50)])
+    assert res.stats.bucket_histogram == {8: 1, 128: 1}
+    assert res.verdicts.tolist() == [False, False]

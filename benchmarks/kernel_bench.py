@@ -81,6 +81,138 @@ def bench_engine_backends(
     return rows
 
 
+def _sparse_stream(n, c, requests, seed0=0):
+    """Sparse Erdős–Rényi request stream at p = c/n (density c/n ≤ 0.05)."""
+    from repro.core import generators as G
+
+    return [G.sparse_erdos_renyi(n, c=c, seed=seed0 + s)
+            for s in range(requests)]
+
+
+def bench_engine_sparse(
+    n=1024, c=10.0, requests=32, max_batch=32, repeats=2,
+    backends=("jax_fast", "csr", "auto"),
+) -> List[Dict]:
+    """Sparse-regime engine comparison: density c/n, n >= 256.
+
+    The acceptance row for the CSR subsystem: at n=1024, c=10 (density
+    ~0.01) the ``csr`` backend's O(N+M) pipeline beats the dense
+    ``jax_fast`` path on CPU; ``auto`` should match the winner (its cost
+    model routes this regime to csr).
+    """
+    from benchmarks.paper_tables import time_fn
+    from repro.engine import ChordalityEngine
+
+    graphs = _sparse_stream(n, c, requests)
+    density = float(np.mean([g.n_edges for g in graphs])) / (n * n)
+    rows = []
+    for name in backends:
+        eng = ChordalityEngine(backend=name, max_batch=max_batch)
+        eng.run(graphs)  # compile pass
+        res = eng.run(graphs)
+        t_ms = time_fn(lambda: eng.run(graphs), repeats)
+        picked = ";".join(sorted(res.stats.backend_histogram))
+        rows.append({
+            "name": f"engine_sparse_{name}_n{n}_c{int(c)}",
+            "us_per_call": t_ms * 1e3,
+            "derived": (
+                f"{requests / (t_ms / 1e3):.0f}_graphs_per_s;"
+                f"density={density:.4f};backends={picked}"),
+        })
+    return rows
+
+
+def bench_engine_amortization(
+    n=256, stream_lens=(1, 4, 16, 64), max_batch=32,
+    backends=("numpy_ref", "jax_fast", "csr", "auto"), c=12.0,
+) -> List[Dict]:
+    """Compile-time amortization: graphs/s vs stream length per backend.
+
+    Each row uses a FRESH engine (cold compile cache) and reports
+    cold-start throughput next to the steady-state (warm) figure — the
+    gap is the compile bill a short stream pays. numpy_ref compiles
+    nothing, so its two figures meet; the jit backends converge to warm
+    as the stream amortizes their per-shape compiles.
+    """
+    import time as _time
+
+    from repro.engine import ChordalityEngine
+
+    rows = []
+    for name in backends:
+        for length in stream_lens:
+            graphs = _sparse_stream(n, c, length)
+            eng = ChordalityEngine(backend=name, max_batch=max_batch)
+            t0 = _time.perf_counter()
+            eng.run(graphs)
+            cold_s = _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            eng.run(graphs)
+            warm_s = _time.perf_counter() - t0
+            rows.append({
+                "name": f"amortize_{name}_n{n}_len{length}",
+                "us_per_call": cold_s / length * 1e6,
+                "derived": (
+                    f"cold={length / cold_s:.1f}_gps;"
+                    f"warm={length / warm_s:.1f}_gps"),
+            })
+    return rows
+
+
+def bench_router_samples(
+    quick=False,
+) -> List[Dict]:
+    """Cost-model calibration grid: per-graph µs per (backend, n, d, B).
+
+    Emits the sample rows :func:`repro.engine.router.fit_cost_model`
+    consumes; DEFAULT_COST_MODEL was fitted from this table on the CI
+    reference host. The derived column carries the machine-readable
+    sample tuple.
+    """
+    from benchmarks.paper_tables import time_fn
+    from repro.core import generators as G
+    from repro.engine import ChordalityEngine
+
+    grid = [
+        # (backend, n, c = expected degree, batch)
+        ("numpy_ref", 8, 3.0, 1), ("numpy_ref", 16, 4.0, 1),
+        ("numpy_ref", 16, 4.0, 8), ("numpy_ref", 64, 8.0, 1),
+        ("numpy_ref", 64, 8.0, 8), ("numpy_ref", 128, 8.0, 1),
+        ("numpy_ref", 256, 12.0, 4),
+        ("jax_fast", 16, 4.0, 1), ("jax_fast", 16, 4.0, 8),
+        ("jax_fast", 64, 8.0, 8), ("jax_fast", 256, 12.0, 1),
+        ("jax_fast", 256, 12.0, 16), ("jax_fast", 256, 76.8, 16),
+        ("jax_fast", 512, 10.0, 16),
+        ("jax_fast", 1024, 10.0, 8), ("jax_fast", 1024, 10.0, 32),
+        ("csr", 16, 4.0, 1), ("csr", 16, 4.0, 8),
+        ("csr", 64, 8.0, 8), ("csr", 256, 12.0, 1),
+        ("csr", 256, 12.0, 16), ("csr", 256, 76.8, 16),
+        ("csr", 512, 10.0, 16),
+        ("csr", 1024, 10.0, 8), ("csr", 1024, 10.0, 32),
+    ]
+    if quick:
+        grid = [g for g in grid if g[1] <= 256]
+    rows = []
+    for name, n, c, batch in grid:
+        graphs = [G.sparse_erdos_renyi(n, c=c, seed=s) for s in range(batch)]
+        density = float(np.mean([g.n_edges for g in graphs])) / (n * n)
+        eng = ChordalityEngine(backend=name, max_batch=batch)
+        eng.run(graphs)
+        # Best-of-5 for the sub-millisecond cells (noise there flips
+        # regime boundaries), median-of-2 for the expensive ones.
+        reps = 5 if n <= 256 else 2
+        t_ms = min(time_fn(lambda: eng.run(graphs), 1) for _ in range(reps))
+        us_per_graph = t_ms * 1e3 / batch
+        rows.append({
+            "name": f"router_sample_{name}_n{n}_b{batch}",
+            "us_per_call": us_per_graph,
+            "derived": (
+                f"sample=({name},{n},{density:.5f},{batch},"
+                f"{us_per_graph:.1f})"),
+        })
+    return rows
+
+
 def bench_lexbfs(n=2048, repeats=3) -> List[Dict]:
     import jax.numpy as jnp
 

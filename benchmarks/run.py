@@ -1,11 +1,15 @@
 """Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
 
-One section per paper table (Figures 6–10) + kernel micro-benches.
+One section per paper table (Figures 6–10) + kernel micro-benches +
+engine serving tables (backend comparison, sparse-regime CSR vs dense,
+compile-time amortization, router-calibration samples).
 Prints ``name,us_per_call,derived`` CSV rows (assignment format); the
 derived column carries the parallel-vs-sequential speedup — the paper's
-headline metric.
+headline metric — or graphs/s for the engine tables.
 
-Flags: --quick shrinks sizes (CI); --tables selects sections.
+Flags: --quick shrinks sizes (local iteration); --smoke shrinks harder
+(the CI smoke step runs ``--tables engine --smoke``); --tables selects
+sections.
 """
 from __future__ import annotations
 
@@ -16,16 +20,20 @@ import sys
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal sizes for CI smoke (implies --quick)")
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
-                         "kernels,lexbfs,engine")
+                         "kernels,lexbfs,engine,router")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
 
     from benchmarks import kernel_bench, paper_tables
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs", "engine"]
+         "lexbfs", "engine", "router"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -84,8 +92,30 @@ def main(argv=None) -> int:
         print("# engine serving bench - backends via repro.engine",
               file=sys.stderr)
         emit(kernel_bench.bench_engine_backends(
-            n_max=128 if args.quick else 256,
-            requests=16 if args.quick else 32))
+            n_max=64 if args.smoke else (128 if args.quick else 256),
+            requests=8 if args.smoke else (16 if args.quick else 32),
+            backends=("jax_faithful", "jax_fast", "numpy_ref", "csr",
+                      "auto")))
+        print("# engine serving bench - sparse regime (csr vs dense)",
+              file=sys.stderr)
+        if args.smoke:
+            emit(kernel_bench.bench_engine_sparse(
+                n=256, c=8.0, requests=8, max_batch=8, repeats=1))
+        elif args.quick:
+            emit(kernel_bench.bench_engine_sparse(
+                n=512, c=10.0, requests=16, max_batch=16))
+        else:
+            emit(kernel_bench.bench_engine_sparse(
+                n=1024, c=10.0, requests=32, max_batch=32))
+        print("# engine serving bench - compile-time amortization",
+              file=sys.stderr)
+        emit(kernel_bench.bench_engine_amortization(
+            n=64 if args.smoke else (128 if args.quick else 256),
+            stream_lens=(1, 8) if args.smoke else (1, 4, 16, 64),
+            max_batch=8 if args.smoke else 32))
+    if "router" in which:
+        print("# router cost-model calibration samples", file=sys.stderr)
+        emit(kernel_bench.bench_router_samples(quick=args.quick))
     return 0
 
 

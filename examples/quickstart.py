@@ -11,7 +11,7 @@ from repro.core import (
     lexbfs,
 )
 from repro.core import generators as G
-from repro.engine import ChordalityEngine
+from repro.engine import ChordalityEngine, list_backends
 
 
 def main():
@@ -53,6 +53,29 @@ def main():
         print(f"  {g:12s} chordal={bool(v)}")
     print(f"  ({result.stats.n_units} work unit(s), "
           f"buckets {result.stats.bucket_histogram})")
+
+    # --- backend selection (registry + cost-model router) -------------------
+    print("\n=== registered backends (repro.engine.list_backends) ===")
+    for spec in list_backends():
+        caps = spec.caps
+        flags = "".join([
+            "b" if caps.batched else "-", "d" if caps.device else "-",
+            "c" if caps.certificate else "-", "s" if caps.sparse else "-"])
+        print(f"  {spec.name:14s} [{flags}]  {spec.doc}")
+    print("  flags: b=batched d=device c=certificate s=sparse(CSR)")
+
+    print("\n=== backend='auto': the router picks per work unit ===")
+    stream = (
+        [G.cycle(12)]                                   # tiny one-off
+        + [G.sparse_erdos_renyi(700, c=8, seed=s) for s in range(4)]
+        + [G.dense_random(120, p=0.4, seed=s) for s in range(8)]
+    )
+    eng = ChordalityEngine(backend="auto", max_batch=16)
+    result = eng.run(stream)
+    for unit in result.plan.units:
+        print(f"  unit n_pad={unit.n_pad:5d} batch={unit.batch:3d} "
+              f"-> backend={unit.backend}")
+    print(f"  requests per backend: {result.stats.backend_histogram}")
 
     # --- the LexBFS order itself -------------------------------------------
     print("\n=== LexBFS order of a path (walks the path) ===")

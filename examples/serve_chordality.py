@@ -41,7 +41,9 @@ def main():
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--n-max", type=int, default=96)
     ap.add_argument("--backend", default="jax_fast",
-                    choices=list(backend_names()))
+                    choices=["auto", *backend_names()],
+                    help="registered backend, or 'auto' for cost-model "
+                         "routing per work unit")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -51,8 +53,9 @@ def main():
     kinds = [k for _, k in pairs]
 
     engine = ChordalityEngine(backend=args.backend, max_batch=args.batch)
-    # Warm the compile cache on exactly the shapes this stream will hit.
-    engine.warmup_plan(engine.plan(requests))
+    # Warm the compile cache on exactly the shapes this stream will hit
+    # (passing the graphs warms the CSR backend's edge-count buckets too).
+    engine.warmup_plan(engine.plan(requests), requests)
 
     print(f"serving {args.requests} requests on backend={args.backend} "
           f"(max_batch={args.batch})")
@@ -62,6 +65,8 @@ def main():
     print(f"  -> {int(result.verdicts.sum())}/{len(result)} chordal")
     print(f"  buckets {s.bucket_histogram} over {s.n_units} work units, "
           f"compile cache: {s.compile_hits} hits / {s.compile_misses} misses")
+    if args.backend == "auto":
+        print(f"  router dispatch: {s.backend_histogram}")
     print(f"  throughput {s.throughput_gps:.1f} graphs/s, "
           f"p50 unit latency {s.p50_latency_ms:.1f}ms")
 

@@ -137,6 +137,56 @@ def engine_batch_bucket(b: int, max_batch: int) -> int:
     return max_batch
 
 
+# ---------------------------------------------------------------------------
+# Sparse (CSR) shape planning: the second bucket axis.
+#
+# The CSR backend (repro.sparse) compiles against padded edge streams, so a
+# work unit's shape is 2-D: (n_pad, nnz_pad). nnz buckets follow the same
+# power-of-two rule as n_pad buckets; a third, derived axis (deg_pad — the
+# padded max row degree, which sizes the per-vertex neighbor window) is also
+# bucketed so ragged degree distributions compile to few shapes.
+# ---------------------------------------------------------------------------
+ENGINE_NNZ_BUCKETS: Tuple[int, ...] = tuple(2 ** k for k in range(5, 25))
+# 32, 64, ..., 16M directed edge slots — covers M = 20N at N = 8192 (the
+# paper's sparse class) with headroom.
+
+ENGINE_DEG_MIN_BUCKET: int = 8
+# Smallest deg_pad bucket: below this, window padding costs less than the
+# extra compiled shapes would.
+
+
+def engine_nnz_bucket(
+    nnz: int, buckets: Optional[Tuple[int, ...]] = None
+) -> int:
+    """Smallest edge-slot bucket holding ``nnz`` directed entries.
+
+    nnz = 0 (empty graphs / warmup probes) lands in the smallest bucket;
+    beyond the grid it falls back to the next power of two, mirroring
+    :func:`engine_npad_bucket`.
+    """
+    if nnz < 0:
+        raise ValueError(f"nnz must be non-negative, got {nnz}")
+    grid = buckets if buckets is not None else ENGINE_NNZ_BUCKETS
+    for b in grid:
+        if nnz <= b:
+            return b
+    return 1 << (nnz - 1).bit_length()
+
+
+def engine_deg_bucket(deg: int, n_pad: int) -> int:
+    """Power-of-two bucket for the padded max row degree, capped at n_pad.
+
+    deg_pad sizes the fixed neighbor window the CSR LexBFS slices per
+    visited vertex; the cap holds because a simple graph's degree is < N.
+    """
+    if deg < 0:
+        raise ValueError(f"degree must be non-negative, got {deg}")
+    b = ENGINE_DEG_MIN_BUCKET
+    while b < deg:
+        b <<= 1
+    return min(b, max(n_pad, 1))
+
+
 def shapes_for_family(family: str):
     return {
         "lm": LM_SHAPES,

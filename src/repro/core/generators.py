@@ -125,10 +125,91 @@ def gnp(n: int, p: float, seed: int = 0) -> Graph:
     return dense_random(n, p=p, seed=seed)
 
 
+# ---------------------------------------------------------------------------
+# Sparse-regime generators (the CSR backend's workload class, M = O(N)).
+# These build edge lists first, so `Graph.edges` is populated and the
+# engine's CSR realization path never touches a dense matrix.
+# ---------------------------------------------------------------------------
+def _graph_from_edge_list(n: int, edges: np.ndarray) -> Graph:
+    # Edge-list only — NO dense adjacency. These classes exist for the CSR
+    # path, where the O(N²) matrix is the cost being avoided; dense-backend
+    # consumers get it lazily via Graph.with_dense().
+    both = np.concatenate([edges, edges[::-1]], axis=1)  # Graph contract:
+    return Graph(n_nodes=n, edges=both)                  # both directions
+
+
+def sparse_erdos_renyi(n: int, c: float = 3.0, seed: int = 0) -> Graph:
+    """G(n, p) at p = c/n: constant expected degree c, density c/n.
+
+    The canonical very-sparse class (M ≈ cN/2 undirected edges): density
+    falls as 1/N, which is exactly where the dense O(N²) representation
+    wastes quadratic space on a linear-size graph.
+    """
+    rng = np.random.default_rng(seed)
+    p = min(max(c / max(n, 1), 0.0), 1.0)
+    # Sample undirected pairs via the binomial count + rejection-free draw
+    # over the upper triangle (O(M) memory, no (N, N) random matrix).
+    m = rng.binomial(n * (n - 1) // 2, p)
+    src = rng.integers(0, n, size=3 * m + 16)
+    dst = rng.integers(0, n, size=3 * m + 16)
+    keep = src < dst
+    pairs = np.unique(
+        src[keep].astype(np.int64) * n + dst[keep])[: m]
+    rng.shuffle(pairs)                     # unique() sorted them
+    edges = np.stack([pairs // n, pairs % n]).astype(np.int32)
+    return _graph_from_edge_list(n, edges)
+
+
+def long_cycle(n: int, n_chords: int = 0, seed: int = 0) -> Graph:
+    """C_n plus ``n_chords`` random chords.
+
+    The plain long cycle (n_chords = 0) is the worst-case sparse
+    NON-chordal witness: M = N yet a single N-cycle with no chord at all.
+    Random chords leave shorter chordless cycles behind with overwhelming
+    probability, so the class stays (almost surely) non-chordal while
+    exercising denser CSR rows.
+    """
+    src = np.arange(n, dtype=np.int32)
+    ring = np.stack([src, (src + 1) % n])
+    if n_chords > 0:
+        rng = np.random.default_rng(seed)
+        a = rng.integers(0, n, size=4 * n_chords)
+        b = rng.integers(0, n, size=4 * n_chords)
+        gap = (b - a) % n
+        keep = (gap > 1) & (gap < n - 1)      # not a ring edge or loop
+        lo = np.minimum(a[keep], b[keep]).astype(np.int64)
+        hi = np.maximum(a[keep], b[keep]).astype(np.int64)
+        pairs = np.unique(lo * n + hi)[:n_chords]   # dedup (a,b)/(b,a)
+        chords = np.stack([pairs // n, pairs % n])
+        ring = np.concatenate([ring, chords.astype(np.int32)], axis=1)
+    return _graph_from_edge_list(n, ring)
+
+
+def k_tree(n: int, k: int = 3, seed: int = 0) -> Graph:
+    """Exact k-tree: chordal with M = kN − k(k+1)/2 — bounded fill.
+
+    Every vertex past the initial (k+1)-clique attaches to exactly one
+    existing k-clique, so treewidth (and per-vertex fill in any PEO) is
+    bounded by k: the sparse-but-chordal counterpoint to ER graphs at the
+    same density (k ≈ c/2).
+    """
+    return random_chordal(n, k=k, subset_p=1.0, seed=seed)
+
+
 PAPER_CLASSES = {
     "cliques": clique,
     "dense": dense_random,
     "sparse": sparse_random,
     "trees": random_tree,
     "chordal": random_chordal,
+}
+
+# The sparse-regime zoo (M = O(N)): inputs for CSR-backend tests and the
+# sparse benchmark tables. Mixed verdicts by construction: trees/k-trees
+# chordal, long cycles non-chordal, ER-sparse varies.
+SPARSE_CLASSES = {
+    "trees": random_tree,
+    "long_cycles": long_cycle,
+    "k_trees": k_tree,
+    "er_sparse": sparse_erdos_renyi,
 }

@@ -3,10 +3,15 @@
 This subsystem is the production entry point for the paper's pipeline
 (parallel LexBFS §6.1 + parallel PEO test §6.2): a backend registry over
 every implementation in the repo, a planner that turns ragged request
-streams into fixed-shape work units, and a session layer with throughput
+streams into fixed-shape work units (dense or padded-CSR), a cost-model
+router for adaptive backend selection, and a session layer with throughput
 and latency stats. Direct use of the ``repro.core`` multi-entry functions
 is deprecated for serving/benchmark callers — go through
 :class:`ChordalityEngine`.
+
+Backend discovery: :func:`list_backends` returns every registered
+:class:`BackendSpec` (name, capability flags, one-line doc);
+``ChordalityEngine(backend="auto")`` lets the router pick per work unit.
 """
 from repro.engine.backends import (
     BackendCaps,
@@ -14,6 +19,7 @@ from repro.engine.backends import (
     ChordalityBackend,
     backend_names,
     backend_spec,
+    list_backends,
     make_backend,
     register_backend,
 )
@@ -23,6 +29,13 @@ from repro.engine.planner import (
     WorkUnit,
     plan_requests,
     realize_unit,
+    realize_unit_csr,
+)
+from repro.engine.router import (
+    BackendCost,
+    DEFAULT_COST_MODEL,
+    Router,
+    fit_cost_model,
 )
 from repro.engine.session import (
     Certificate,
@@ -37,6 +50,7 @@ __all__ = [
     "ChordalityBackend",
     "backend_names",
     "backend_spec",
+    "list_backends",
     "make_backend",
     "register_backend",
     "CompileCache",
@@ -44,6 +58,11 @@ __all__ = [
     "WorkUnit",
     "plan_requests",
     "realize_unit",
+    "realize_unit_csr",
+    "BackendCost",
+    "DEFAULT_COST_MODEL",
+    "Router",
+    "fit_cost_model",
     "Certificate",
     "ChordalityEngine",
     "EngineResult",

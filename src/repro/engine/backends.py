@@ -16,15 +16,21 @@ capability flags, and exposes exactly two operations:
 
 Registered backends:
 
-========== ======== ======= ============ =====================================
-name       batched  device  certificate  implementation
-========== ======== ======= ============ =====================================
-numpy_ref  no       no      yes          lexbfs_numpy_dense + peo_check_numpy
-jax_faithful yes    yes     yes          lexbfs (§6.1) + peo_check (§6.2)
-jax_fast   yes      yes     yes          lexbfs_fast (lazy compaction)
-pallas_peo no       yes     yes          lexbfs + fused Pallas PEO kernel
-sharded    yes      yes     no           pjit over a device mesh
-========== ======== ======= ============ =====================================
+========== ======== ======= ============ ====== ==============================
+name       batched  device  certificate  sparse implementation
+========== ======== ======= ============ ====== ==============================
+numpy_ref  no       no      yes          no     lexbfs_numpy_dense + peo numpy
+jax_faithful yes    yes     yes          no     lexbfs (§6.1) + peo_check
+jax_fast   yes      yes     yes          no     lexbfs_fast (lazy compaction)
+pallas_peo no       yes     yes          no     lexbfs + fused Pallas PEO
+sharded    yes      yes     no           no     pjit over a device mesh
+csr        yes      yes     yes          yes    repro.sparse CSR pipelines
+========== ======== ======= ============ ====== ==============================
+
+``sparse`` backends consume :class:`repro.sparse.packing.PackedCSRBatch`
+payloads (the planner realizes those without densifying); every backend's
+``compile_batch`` executable also accepts the dense host-array contract, so
+warmup and generic callers stay uniform.
 """
 from __future__ import annotations
 
@@ -36,11 +42,12 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class BackendCaps:
-    """Capability flags the planner/session dispatch on."""
+    """Capability flags the planner/session/router dispatch on."""
 
     batched: bool       # natively executes (B, N, N) in one device program
     device: bool        # runs under jit on the accelerator
     certificate: bool   # can produce (order, n_violations) witnesses
+    sparse: bool = False  # consumes PackedCSRBatch work units (O(N+M) path)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -263,6 +270,95 @@ class ShardedBackend(ChordalityBackend):
         return run
 
 
+class CSRBackend(ChordalityBackend):
+    """Sparse CSR pipeline (repro.sparse): LexBFS + PEO over the edge
+    stream — O(N + M) operands instead of the dense (N, N) matrix.
+
+    Two pipelines, identical verdicts (orders are bit-identical to the
+    dense implementations):
+
+    * ``host`` — batch-vectorized numpy twins. The CPU fast path: the
+      paper's Fig. 8 already measures sequential LexBFS winning on sparse
+      graphs, and XLA:CPU scatter costs make the device formulation lose
+      to it there (measured crossovers in DESIGN.md §8).
+    * ``device`` — jit segment-op kernels (vmap over the packed batch),
+      the accelerator path.
+
+    ``pipeline="auto"`` (default) picks ``host`` on CPU, ``device``
+    otherwise.
+    """
+
+    name = "csr"
+    caps = BackendCaps(batched=True, device=True, certificate=True,
+                       sparse=True)
+
+    def __init__(self, pipeline: str = "auto"):
+        if pipeline not in ("auto", "host", "device"):
+            raise ValueError(f"unknown csr pipeline {pipeline!r}")
+        self._pipeline = pipeline
+
+    def _resolved(self) -> str:
+        if self._pipeline != "auto":
+            return self._pipeline
+        import jax
+
+        return "host" if jax.default_backend() == "cpu" else "device"
+
+    def _pack(self, payload, n_pad):
+        from repro.sparse.packing import PackedCSRBatch, pack_dense_batch
+
+        if isinstance(payload, PackedCSRBatch):
+            return payload
+        return pack_dense_batch(np.asarray(payload, dtype=bool))
+
+    def compile_batch(self, n_pad, batch):
+        pipeline = self._resolved()
+
+        def run(payload) -> np.ndarray:
+            packed = self._pack(payload, n_pad)
+            if pipeline == "host":
+                from repro.sparse import (
+                    lexbfs_csr_numpy_batch,
+                    peo_violations_csr_numpy_batch,
+                )
+
+                orders = lexbfs_csr_numpy_batch(
+                    packed.row_ptr, packed.col_idx, packed.deg_pad)
+                viol = peo_violations_csr_numpy_batch(
+                    packed.row_ptr, packed.col_idx, orders)
+                return viol == 0
+            from repro.sparse import csr_verdicts_batched
+
+            rp, ci = packed.device_arrays()
+            return np.asarray(csr_verdicts_batched(rp, ci, packed.deg_pad))
+
+        return run
+
+    def certificate(self, adj):
+        from repro.sparse import (
+            CSRGraph,
+            lexbfs_csr,
+            lexbfs_csr_numpy,
+            pack_csr_batch,
+            peo_violations_csr,
+            peo_violations_csr_numpy,
+        )
+
+        csr = CSRGraph.from_dense(np.asarray(adj, dtype=bool))
+        packed = pack_csr_batch([csr], n_pad=csr.n_nodes)
+        rp, ci = packed.row_ptr[0], packed.col_idx[0]
+        if self._resolved() == "host":
+            order = lexbfs_csr_numpy(rp, ci, packed.deg_pad)
+            viol = peo_violations_csr_numpy(rp, ci, order)
+        else:
+            import jax.numpy as jnp
+
+            rp, ci = jnp.asarray(rp), jnp.asarray(ci)
+            order = lexbfs_csr(rp, ci, packed.deg_pad)
+            viol = int(peo_violations_csr(rp, ci, order))
+        return viol == 0, np.asarray(order), int(viol)
+
+
 # ---------------------------------------------------------------------------
 # Registry.
 # ---------------------------------------------------------------------------
@@ -291,12 +387,23 @@ def make_backend(name: str, **opts) -> ChordalityBackend:
     return backend_spec(name).factory(**opts)
 
 
+def list_backends() -> Tuple[BackendSpec, ...]:
+    """All registered :class:`BackendSpec`\\ s, sorted by name.
+
+    Each spec carries the capability flags and a one-line doc; this is the
+    discovery surface for callers choosing a backend (see
+    ``examples/quickstart.py`` for a rendered table).
+    """
+    return tuple(_REGISTRY[name] for name in backend_names())
+
+
 for _cls in (
     NumpyRefBackend,
     JaxFaithfulBackend,
     JaxFastBackend,
     PallasPeoBackend,
     ShardedBackend,
+    CSRBackend,
 ):
     register_backend(BackendSpec(
         name=_cls.name, caps=_cls.caps, factory=_cls,

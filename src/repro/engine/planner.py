@@ -32,12 +32,16 @@ class WorkUnit:
     """One fixed-shape batch: ``batch`` slots padded to ``n_pad`` vertices.
 
     ``indices`` are the request positions filled into slots ``0..len-1``;
-    remaining slots (up to ``batch``) are empty-graph padding.
+    remaining slots (up to ``batch``) are empty-graph padding. ``backend``
+    is the router's per-unit choice under ``ChordalityEngine("auto")``
+    (None = use the engine's fixed backend) — it is plan metadata callers
+    can inspect via ``plan.unit_of(i).backend``.
     """
 
     n_pad: int
     batch: int
     indices: Tuple[int, ...]
+    backend: Optional[str] = None
 
     @property
     def n_padding_slots(self) -> int:
@@ -104,6 +108,22 @@ def realize_unit(
         n = g.n_nodes
         out[slot, :n, :n] = g.adj[:n, :n]
     return out
+
+
+def realize_unit_csr(unit: WorkUnit, graphs: Sequence[Graph]):
+    """Materialize a work unit as a :class:`~repro.sparse.PackedCSRBatch`.
+
+    The sparse twin of :func:`realize_unit`: graphs carrying edge-list or
+    CSR views never touch a dense matrix, so the unit's host footprint is
+    O(B·(N + M)) instead of O(B·N²) — this is what lifts the practical N
+    cap for sparse traffic. Padding slots are empty graphs, padding
+    vertices empty rows; both are verdict-invariant (packing contract).
+    """
+    from repro.sparse.format import CSRGraph
+    from repro.sparse.packing import pack_csr_batch
+
+    csrs = [CSRGraph.from_graph(graphs[i]) for i in unit.indices]
+    return pack_csr_batch(csrs, n_pad=unit.n_pad, batch=unit.batch)
 
 
 class CompileCache:

@@ -1,0 +1,196 @@
+"""Adaptive backend selection — a measured cost model over (n, density, B).
+
+The registry (``engine.backends``) says what each backend *can* do; this
+module decides what it *should* do for a given work unit. The model is a
+per-backend linear form in the features that dominate measured runtime:
+
+    us_per_graph = dispatch_us/B + per_graph_us
+                   + sweep_us·n/B + n_us·n + n2_us·n² + m_us·m
+
+with ``m = density·n²`` (directed edge entries at the padded size). The
+terms mirror the implementations: every LexBFS runs n sequential sweeps,
+whose fixed per-sweep overhead (XLA thunk dispatch for the jit backends,
+numpy-call overhead for the host ones) is shared across a unit's batch
+(``sweep_us·n/B``); per-graph data cost is O(n) per sweep for the dense
+rank vector (``n2_us·n²``) and O(m) one-shot for the CSR PEO (``m_us·m``).
+
+``DEFAULT_COST_MODEL`` is least-squares fitted from
+``benchmarks.kernel_bench.bench_router_samples`` measurements on the
+2-core CPU CI reference box (see DESIGN.md §8 for the measured crossovers);
+:func:`fit_cost_model` re-fits from fresh samples so other hosts can
+calibrate. Routing only needs the *ordering* of backends per regime, which
+is robust to modest coefficient error:
+
+* tiny graphs → ``numpy_ref`` (no dispatch, no compile);
+* sparse, large n → ``csr`` (O(N+M) operands, batch-amortized sweeps);
+* dense bulk → ``jax_fast`` (one fused device program per unit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.engine.backends import backend_spec
+from repro.engine.planner import Plan, WorkUnit
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCost:
+    """Fitted per-backend coefficients (all µs; see module docstring)."""
+
+    dispatch_us: float = 0.0     # per work unit (jit dispatch, loop setup)
+    per_graph_us: float = 0.0    # fixed per graph
+    sweep_us: float = 0.0        # × n, shared across the unit's batch
+    n_us: float = 0.0            # × n, per graph
+    n2_us: float = 0.0           # × n², per graph
+    m_us: float = 0.0            # × m (directed nnz), per graph
+
+    def us_per_graph(self, n: int, density: float, batch: int) -> float:
+        b = max(batch, 1)
+        m = density * n * n
+        return (self.dispatch_us / b + self.per_graph_us
+                + self.sweep_us * n / b + self.n_us * n
+                + self.n2_us * n * n + self.m_us * m)
+
+
+CostModel = Mapping[str, BackendCost]
+
+# Fitted on the CI reference host (2-core CPU, jax 0.4.37) from
+# bench_router_samples (warm engines, best-of-5 sub-ms cells); regenerate
+# via
+#   PYTHONPATH=src python -m benchmarks.run --tables router
+# and repro.engine.router.fit_cost_model. Measured crossovers this model
+# encodes: numpy_ref wins single-shot tiny requests (B=1, n <= ~32, no
+# dispatch); jax_fast wins batched tiny/mid and all dense traffic; csr
+# overtakes jax_fast on sparse streams around n ~ 400-600 at density c/n
+# (earlier for lower density / bigger batches) — DESIGN.md §8.
+DEFAULT_COST_MODEL: Dict[str, BackendCost] = {
+    "numpy_ref": BackendCost(
+        dispatch_us=0.0, per_graph_us=237.8, sweep_us=0.0,
+        n_us=11.285, n2_us=0.05043, m_us=0.0),
+    "jax_fast": BackendCost(
+        dispatch_us=534.3, per_graph_us=35.7, sweep_us=0.62,
+        n_us=0.0, n2_us=0.01946, m_us=0.0),
+    "csr": BackendCost(
+        dispatch_us=0.0, per_graph_us=72.3, sweep_us=34.10,
+        n_us=0.0, n2_us=0.00349, m_us=0.334),
+}
+
+#: Backends "auto" chooses among. All three carry the certificate cap;
+#: specialist backends (pallas_peo, sharded) stay opt-in by name.
+DEFAULT_CANDIDATES: Tuple[str, ...] = ("numpy_ref", "jax_fast", "csr")
+
+
+class Router:
+    """Cost-model backend selection for plans and single requests."""
+
+    def __init__(
+        self,
+        cost_model: Optional[CostModel] = None,
+        candidates: Sequence[str] = DEFAULT_CANDIDATES,
+    ):
+        self.cost_model: Dict[str, BackendCost] = dict(
+            DEFAULT_COST_MODEL if cost_model is None else cost_model)
+        self.candidates = tuple(candidates)
+        unknown = [c for c in self.candidates if c not in self.cost_model]
+        if unknown:
+            raise ValueError(f"candidates without cost entries: {unknown}")
+
+    def estimate_us_per_graph(
+        self, name: str, n: int, density: float, batch: int
+    ) -> float:
+        return self.cost_model[name].us_per_graph(n, density, batch)
+
+    def choose(
+        self,
+        n: int,
+        density: float,
+        batch: int,
+        require: Iterable[str] = (),
+    ) -> str:
+        """Cheapest candidate whose capabilities cover ``require``.
+
+        ``require`` names :class:`~repro.engine.backends.BackendCaps`
+        fields (e.g. ``("certificate",)``); a backend missing any required
+        capability is excluded no matter how cheap the model says it is.
+        """
+        req = tuple(require)
+        best_name, best_cost = None, math.inf
+        for name in self.candidates:
+            caps = backend_spec(name).caps
+            if any(not getattr(caps, r) for r in req):
+                continue
+            cost = self.estimate_us_per_graph(name, n, density, batch)
+            if cost < best_cost:
+                best_name, best_cost = name, cost
+        if best_name is None:
+            raise ValueError(
+                f"no candidate in {self.candidates} satisfies {req}")
+        return best_name
+
+    def annotate(self, plan: Plan, graphs) -> Plan:
+        """Return a plan whose units carry per-unit backend choices.
+
+        The density feature is the unit mean of ``n_edges / n_pad²`` —
+        what the padded work unit will actually look like on device.
+        """
+        units: List[WorkUnit] = []
+        for u in plan.units:
+            m_mean = (
+                float(np.mean([graphs[i].n_edges for i in u.indices]))
+                if u.indices else 0.0)
+            density = m_mean / float(u.n_pad * u.n_pad)
+            name = self.choose(u.n_pad, density, u.batch)
+            units.append(dataclasses.replace(u, backend=name))
+        return Plan(units=units, n_requests=plan.n_requests)
+
+
+#: Which cost terms each backend's fit may use. A host loop has no unit
+#: dispatch or batch-shared sweeps; the dense backends have no m term
+#: (their cost is density-independent). Constraining the fit keeps
+#: collinear features from inventing phantom terms that wreck routing at
+#: the regime boundaries.
+FIT_FEATURE_MASKS: Dict[str, Tuple[int, ...]] = {
+    # indices into (dispatch, per_graph, sweep, n, n2, m)
+    "numpy_ref": (1, 3, 4),
+    "jax_fast": (0, 1, 2, 3, 4),
+    "csr": (0, 1, 2, 3, 4, 5),
+}
+
+
+def fit_cost_model(
+    samples: Sequence[Tuple[str, int, float, int, float]],
+    feature_masks: Optional[Mapping[str, Tuple[int, ...]]] = None,
+) -> Dict[str, BackendCost]:
+    """Least-squares fit of per-backend coefficients from measurements.
+
+    ``samples`` rows are ``(backend, n, density, batch, us_per_graph)`` —
+    the format ``benchmarks.kernel_bench.bench_router_samples`` emits.
+    The fit is *relative* (rows weighted by 1/µs — routing needs tiny-n
+    rows as accurate as big-n rows), masked per backend
+    (:data:`FIT_FEATURE_MASKS`), and clipped at 0 (a negative term has no
+    physical reading and would let the router extrapolate nonsense).
+    """
+    masks = dict(FIT_FEATURE_MASKS)
+    if feature_masks:
+        masks.update(feature_masks)
+    by_backend: Dict[str, List[Tuple[int, float, int, float]]] = {}
+    for name, n, density, batch, us in samples:
+        by_backend.setdefault(name, []).append((n, density, batch, us))
+    out: Dict[str, BackendCost] = {}
+    for name, rows in by_backend.items():
+        feats = np.array([
+            [1.0 / b, 1.0, n * 1.0 / b, n, n * n, density * n * n]
+            for n, density, b, _ in rows])
+        mask = masks.get(name, (0, 1, 2, 3, 4, 5))
+        target = np.array([us for *_, us in rows])
+        w = (1.0 / target)[:, None]
+        coef, *_ = np.linalg.lstsq(
+            feats[:, mask] * w, target * w[:, 0], rcond=None)
+        full = np.zeros(6)
+        full[list(mask)] = np.clip(coef, 0.0, None)
+        out[name] = BackendCost(*[float(c) for c in full])
+    return out

@@ -2,16 +2,21 @@
 
     from repro.engine import ChordalityEngine
 
-    eng = ChordalityEngine(backend="jax_fast", max_batch=64)
+    eng = ChordalityEngine(backend="auto", max_batch=64)
     result = eng.run(graphs)          # graphs: Sequence[Graph] (any sizes)
     result.verdicts                   # (len(graphs),) bool, input order
     result.stats.throughput_gps      # graphs/second over the run
+    result.plan.unit_of(i).backend   # router's per-unit choice (auto mode)
     eng.certificate(graphs[i])       # (chordal, PEO-or-witness)
 
-The engine owns one backend instance and one compile cache for its
-lifetime, so repeated ``run`` calls amortize compilation the way a serving
-process does. All shape planning goes through ``repro.engine.planner`` —
-callers never pad or batch by hand.
+The engine owns one backend instance (or, under ``backend="auto"``, a
+router plus lazily-built instances of its candidates) and one compile cache
+for its lifetime, so repeated ``run`` calls amortize compilation the way a
+serving process does. All shape planning goes through
+``repro.engine.planner`` — callers never pad or batch by hand. Work units
+whose backend carries the ``sparse`` capability are realized as padded CSR
+batches (no dense matrix on that path); everything else gets the dense
+host-array contract.
 """
 from __future__ import annotations
 
@@ -30,6 +35,7 @@ from repro.engine.planner import (
     Plan,
     plan_requests,
     realize_unit,
+    realize_unit_csr,
 )
 from repro.graphs.structure import Graph, bucket_npad
 
@@ -43,6 +49,8 @@ class EngineStats:
     compile_hits: int = 0
     compile_misses: int = 0
     bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
+    backend_histogram: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
 
     @property
     def throughput_gps(self) -> float:
@@ -81,13 +89,15 @@ class ChordalityEngine:
 
     Args:
       backend: registered backend name (see
-        ``repro.engine.backends.backend_names()``) or an already-built
-        :class:`ChordalityBackend` instance.
+        ``repro.engine.backends.backend_names()``), the string ``"auto"``
+        (cost-model routing per work unit, see ``repro.engine.router``),
+        or an already-built :class:`ChordalityBackend` instance.
       max_batch: work-unit batch cap; partial chunks round up to powers
         of two (bounded compile count, see planner docs).
       buckets: override the n_pad bucket grid (default
         ``configs.shapes.ENGINE_NPAD_BUCKETS``). Mainly for tests.
-      backend_opts: forwarded to the backend factory.
+      router: override the router used by ``backend="auto"``.
+      backend_opts: forwarded to the backend factory (named backends only).
     """
 
     def __init__(
@@ -95,38 +105,99 @@ class ChordalityEngine:
         backend: Union[str, ChordalityBackend] = "jax_fast",
         max_batch: int = 64,
         buckets: Optional[Sequence[int]] = None,
+        router=None,
         **backend_opts,
     ):
-        if isinstance(backend, str):
-            backend = make_backend(backend, **backend_opts)
-        elif backend_opts:
-            raise ValueError(
-                "backend_opts only apply when backend is given by name")
-        self.backend = backend
+        self.router = None
+        self._instances: Dict[str, ChordalityBackend] = {}
+        if isinstance(backend, str) and backend == "auto":
+            if backend_opts:
+                raise ValueError(
+                    "backend_opts do not apply to backend='auto'; "
+                    "pass a configured router instead")
+            from repro.engine.router import Router
+
+            self.backend: Optional[ChordalityBackend] = None
+            self.router = router if router is not None else Router()
+        elif isinstance(backend, str):
+            self.backend = make_backend(backend, **backend_opts)
+        else:
+            if backend_opts:
+                raise ValueError(
+                    "backend_opts only apply when backend is given by name")
+            self.backend = backend
         self.max_batch = max_batch
         self.buckets = tuple(buckets) if buckets is not None else None
         self.cache = CompileCache()
 
+    # -- backend resolution ------------------------------------------------
+    def _resolve(self, name: Optional[str]) -> ChordalityBackend:
+        """Unit backend name -> instance (engine-owned, built lazily)."""
+        if name is None:
+            if self.backend is None:
+                raise RuntimeError(
+                    "auto engine got an unannotated work unit; plans must "
+                    "come from ChordalityEngine.plan()")
+            return self.backend
+        if self.backend is not None and self.backend.name == name:
+            return self.backend
+        inst = self._instances.get(name)
+        if inst is None:
+            inst = self._instances[name] = make_backend(name)
+        return inst
+
+    @staticmethod
+    def _realize(backend: ChordalityBackend, unit, graphs):
+        if backend.caps.sparse:
+            return realize_unit_csr(unit, graphs)
+        return realize_unit(unit, graphs)
+
     # -- planning ----------------------------------------------------------
     def plan(self, graphs: Sequence[Graph]) -> Plan:
-        return plan_requests(
+        plan = plan_requests(
             graphs, max_batch=self.max_batch, buckets=self.buckets)
+        if self.router is not None:
+            plan = self.router.annotate(plan, graphs)
+        return plan
 
     def warmup(self, n_pads: Sequence[int], batch: Optional[int] = None):
         """Pre-compile the given buckets at one batch size (default
-        ``max_batch`` — the steady-state full-chunk shape)."""
+        ``max_batch`` — the steady-state full-chunk shape). Requires a
+        fixed backend; auto engines warm up per plan (:meth:`warmup_plan`,
+        which knows the router's choices)."""
+        if self.backend is None:
+            raise ValueError(
+                "warmup() needs a fixed backend; use warmup_plan() with "
+                "an auto engine")
         b = batch if batch is not None else self.max_batch
         for n_pad in n_pads:
             fn = self.cache.get(self.backend, n_pad, b)
             fn(np.zeros((b, n_pad, n_pad), dtype=bool))
         return self
 
-    def warmup_plan(self, plan: Plan):
-        """Pre-compile exactly the (n_pad, batch) shapes a plan needs, so
-        the subsequent :meth:`run` is compile-free."""
-        for n_pad, batch in sorted({(u.n_pad, u.batch) for u in plan.units}):
-            fn = self.cache.get(self.backend, n_pad, batch)
-            fn(np.zeros((batch, n_pad, n_pad), dtype=bool))
+    def warmup_plan(self, plan: Plan, graphs: Optional[Sequence[Graph]] = None):
+        """Pre-compile exactly the shapes a plan needs.
+
+        For dense backends the (backend, n_pad, batch) key fully determines
+        the compiled shape, so empty probes suffice. Sparse (CSR) work
+        units additionally compile against the (nnz_pad, deg_pad) buckets
+        of their *contents* — pass the plan's ``graphs`` to warm those
+        exact buckets; without graphs, sparse units warm the minimum
+        buckets only (best effort — real traffic may still compile once
+        per new edge-count bucket).
+        """
+        seen = set()
+        for unit in plan.units:
+            backend = self._resolve(unit.backend)
+            key = (backend.name, unit.n_pad, unit.batch)
+            fn = self.cache.get(backend, unit.n_pad, unit.batch)
+            if backend.caps.sparse and graphs is not None:
+                fn(realize_unit_csr(unit, graphs))
+                continue
+            if key in seen:
+                continue
+            seen.add(key)
+            fn(np.zeros((unit.batch, unit.n_pad, unit.n_pad), dtype=bool))
         return self
 
     # -- execution ---------------------------------------------------------
@@ -139,13 +210,17 @@ class ChordalityEngine:
         hits0, misses0 = self.cache.hits, self.cache.misses
         t0 = time.perf_counter()
         for unit in plan.units:
-            adjs = realize_unit(unit, graphs)
-            fn = self.cache.get(self.backend, unit.n_pad, unit.batch)
+            backend = self._resolve(unit.backend)
+            payload = self._realize(backend, unit, graphs)
+            fn = self.cache.get(backend, unit.n_pad, unit.batch)
             t1 = time.perf_counter()
-            out = fn(adjs)
+            out = fn(payload)
             stats.unit_latencies_ms.append(
                 (time.perf_counter() - t1) * 1e3)
             verdicts[list(unit.indices)] = out[: len(unit.indices)]
+            stats.backend_histogram[backend.name] = (
+                stats.backend_histogram.get(backend.name, 0)
+                + len(unit.indices))
         stats.wall_s = time.perf_counter() - t0
         stats.compile_hits = self.cache.hits - hits0
         stats.compile_misses = self.cache.misses - misses0
@@ -155,8 +230,9 @@ class ChordalityEngine:
     def certificate(self, graph_or_adj) -> Certificate:
         """Detailed single-graph answer through the engine's shape planning.
 
-        Falls back to the ``jax_faithful`` backend when the engine's own
-        backend cannot produce certificates (e.g. ``sharded``).
+        Auto engines route with the certificate capability required;
+        fixed engines fall back to ``jax_faithful`` when their backend
+        cannot produce certificates (e.g. ``sharded``).
         """
         if isinstance(graph_or_adj, Graph):
             g = graph_or_adj.with_dense()
@@ -170,9 +246,14 @@ class ChordalityEngine:
         n_pad = bucket_npad(max(n, 1), self.buckets)
         padded = np.zeros((n_pad, n_pad), dtype=bool)
         padded[:n, :n] = adj
-        backend = self.backend
-        if not backend.caps.certificate:
-            backend = make_backend("jax_faithful")
+        if self.router is not None:
+            density = float(adj.sum()) / float(n_pad * n_pad)
+            backend = self._resolve(self.router.choose(
+                n_pad, density, batch=1, require=("certificate",)))
+        else:
+            backend = self.backend
+            if not backend.caps.certificate:
+                backend = make_backend("jax_faithful")
         ok, order, viol = backend.certificate(padded)
         return Certificate(
             chordal=bool(ok), order=np.asarray(order),

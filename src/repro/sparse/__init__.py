@@ -1,0 +1,99 @@
+"""``repro.sparse`` — CSR graph subsystem (DESIGN.md §8).
+
+The dense (N, N) adjacency the paper's GPU formulation uses pays O(N²)
+memory and realization cost regardless of edge count; this subsystem serves
+the sparse workload class it structurally cannot: a :class:`CSRGraph`
+container, padded-CSR batch packing on a 2-D ``(n_pad, nnz_pad)`` bucket
+grid, and LexBFS + PEO verification over the edge stream — O(N + M)
+operands, segment-op device kernels, batch-vectorized host twins.
+
+Registered with the engine as the ``csr`` backend; the cost-model router
+(``repro.engine.router``) picks it automatically for sparse traffic under
+``ChordalityEngine(backend="auto")``.
+"""
+from repro.sparse.format import CSRGraph
+from repro.sparse.lexbfs_csr import (
+    lexbfs_csr,
+    lexbfs_csr_batched,
+    lexbfs_csr_numpy,
+    lexbfs_csr_numpy_batch,
+)
+from repro.sparse.packing import (
+    PackedCSRBatch,
+    ell_rows_numpy,
+    pack_csr_batch,
+    pack_dense_batch,
+)
+from repro.sparse.peo_csr import (
+    peo_check_csr,
+    peo_violations_csr,
+    peo_violations_csr_batched,
+    peo_violations_csr_numpy,
+    peo_violations_csr_numpy_batch,
+)
+
+
+import functools as _functools
+
+import jax as _jax
+
+
+@_functools.partial(_jax.jit, static_argnames=("deg_pad",))
+def csr_verdicts_batched(row_ptr, col_idx, deg_pad: int):
+    """One device program: (B,) chordality verdicts for a packed batch."""
+
+    def one(rp, ci):
+        order = lexbfs_csr(rp, ci, deg_pad)
+        return peo_violations_csr(rp, ci, order) == 0
+
+    return _jax.vmap(one)(row_ptr, col_idx)
+
+
+def is_chordal_csr(csr: CSRGraph, pipeline: str = "host") -> bool:
+    """Single-graph chordality through the CSR pipeline.
+
+    ``pipeline="host"`` runs the numpy twins (CPU fast path);
+    ``"device"`` runs the jit segment-op kernels. Both produce identical
+    verdicts; use the engine's ``csr`` backend for batched streams.
+    """
+    from repro.configs.shapes import engine_deg_bucket, engine_nnz_bucket
+
+    import numpy as np
+
+    n = csr.n_nodes
+    if n == 0:
+        return True
+    deg_pad = engine_deg_bucket(csr.max_degree, n)
+    nnz_pad = engine_nnz_bucket(csr.nnz)
+    col_idx = np.full(nnz_pad, n, dtype=np.int32)
+    col_idx[: csr.nnz] = csr.col_idx
+    if pipeline == "host":
+        order = lexbfs_csr_numpy(csr.row_ptr, col_idx, deg_pad)
+        return peo_violations_csr_numpy(csr.row_ptr, col_idx, order) == 0
+    if pipeline == "device":
+        import jax.numpy as jnp
+
+        rp, ci = jnp.asarray(csr.row_ptr), jnp.asarray(col_idx)
+        order = lexbfs_csr(rp, ci, deg_pad)
+        return bool(peo_violations_csr(rp, ci, order) == 0)
+    raise ValueError(f"unknown pipeline {pipeline!r}")
+
+
+__all__ = [
+    "CSRGraph",
+    "PackedCSRBatch",
+    "ell_rows_numpy",
+    "pack_csr_batch",
+    "pack_dense_batch",
+    "lexbfs_csr",
+    "lexbfs_csr_batched",
+    "lexbfs_csr_numpy",
+    "lexbfs_csr_numpy_batch",
+    "peo_check_csr",
+    "peo_violations_csr",
+    "peo_violations_csr_batched",
+    "peo_violations_csr_numpy",
+    "peo_violations_csr_numpy_batch",
+    "csr_verdicts_batched",
+    "is_chordal_csr",
+]

@@ -1,0 +1,179 @@
+"""CSR LexBFS — the rank-refinement partition process on sparse adjacency.
+
+Same algorithm as ``repro.core.lexbfs`` (DESIGN.md §2: dense rank vector,
+``rank' = 2·rank + neighbor-bit``, lazy compaction), but the per-sweep
+neighbor indicator comes from a fixed ``deg_pad``-wide window of ``col_idx``
+instead of a dense (N,) adjacency row — O(N + deg_pad) work per sweep with
+an O(N + M) operand, where the dense path drags an O(N²) operand through
+every sweep.
+
+Two implementations share the arithmetic and are **bit-identical** to
+``lexbfs`` / ``lexbfs_fast`` (same first-index argmax tie-breaking, same
+order-isomorphic lazy-compaction keys — compaction cadence differs but a
+dense-rank remap never changes any argmax):
+
+* :func:`lexbfs_csr` — device (jit): scatters the CSR window into an ELL
+  table once, then runs the scan with a contiguous row-take per sweep.
+  This is the accelerator path.
+* :func:`lexbfs_csr_numpy_batch` — host: the same sweep vectorized across
+  the *batch* dimension, ~7 numpy calls per sweep for the whole batch.
+  On CPU this is the fast path — the paper's own Fig. 8 measures the
+  sequential algorithm winning on sparse graphs, and XLA:CPU scatter costs
+  make the device formulation lose to it there (DESIGN.md §8 has numbers).
+
+Sentinel-lane trick (both paths): rank carries ``n_pad + 1`` lanes; padding
+edges point at lane ``n_pad``, which argmax never reads — its value is
+write-only garbage (int overflow wraps harmlessly), so no per-sweep masking
+is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lexbfs import _dense_rank
+
+
+# ---------------------------------------------------------------------------
+# Device path (jit; TPU-oriented, correct everywhere).
+# ---------------------------------------------------------------------------
+def _ell_from_csr(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+                  deg_pad: int) -> jnp.ndarray:
+    """(n+1,), (nnz_pad,) -> (n+1, deg_pad) neighbor table, sentinel n."""
+    n = row_ptr.shape[0] - 1
+    nnz_pad = col_idx.shape[0]
+    e = jnp.arange(nnz_pad, dtype=jnp.int32)
+    row = jnp.searchsorted(row_ptr[1:], e, side="right").astype(jnp.int32)
+    rowc = jnp.clip(row, 0, n - 1)
+    slot = e - row_ptr[rowc]
+    valid = (row < n) & (slot < deg_pad)
+    ell = jnp.full((n + 1, deg_pad), n, dtype=jnp.int32)
+    ell = ell.at[jnp.where(valid, rowc, n),
+                 jnp.where(valid, slot, 0)].set(
+        jnp.where(valid, col_idx, n))
+    # Padding edges clobbered (n, 0); restore the sentinel row.
+    return ell.at[n].set(jnp.full((deg_pad,), n, dtype=jnp.int32))
+
+
+def _csr_cheap_step(ell, rank, _):
+    """One lazy sweep: rank' = 2·rank + nbr(current); lane n is the sink."""
+    n = rank.shape[0] - 1
+    current = jnp.argmax(jax.lax.slice(rank, (0,), (n,))).astype(jnp.int32)
+    row = ell[current]                       # (deg_pad,) contiguous take
+    rank = rank.at[current].set(-1)
+    rank = 2 * rank
+    rank = rank.at[row].add(1, mode="promise_in_bounds", unique_indices=True)
+    return rank, current
+
+
+def _csr_outer(ell, k_inner, rank, _):
+    rank, currents = jax.lax.scan(
+        functools.partial(_csr_cheap_step, ell), rank, None, length=k_inner)
+    n = rank.shape[0] - 1
+    rank = jnp.concatenate(
+        [_dense_rank(jax.lax.slice(rank, (0,), (n,))),
+         jnp.zeros((1,), jnp.int32)])
+    return rank, currents
+
+
+@functools.partial(jax.jit, static_argnames=("deg_pad",))
+def lexbfs_csr(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+               deg_pad: int) -> jnp.ndarray:
+    """Device CSR LexBFS. Returns the visit order (n,) int32.
+
+    Args:
+      row_ptr: (n+1,) int32 padded CSR (packing.py contract).
+      col_idx: (nnz_pad,) int32, sentinel n beyond the real nnz.
+      deg_pad: static neighbor-window width; must be >= max row degree
+        (guaranteed by ``pack_csr_batch``).
+    """
+    n = row_ptr.shape[0] - 1
+    ell = _ell_from_csr(row_ptr, col_idx, deg_pad)
+    # Lazy-compaction cadence: ranks stay < 2·(n+1)·2^k in int32 (one bit of
+    # headroom vs lexbfs_fast for the sink-lane adds).
+    k_inner = max(1, 29 - int(np.ceil(np.log2(max(n, 2)))))
+    n_outer = -(-n // k_inner)
+    rank0 = jnp.zeros(n + 1, jnp.int32)
+    _, currents = jax.lax.scan(
+        functools.partial(_csr_outer, ell, k_inner),
+        rank0, None, length=n_outer)
+    # Tail sweeps beyond n re-visit exhausted lanes; first n are the order.
+    return currents.reshape(-1)[:n].astype(jnp.int32)
+
+
+def lexbfs_csr_batched(row_ptr: jnp.ndarray, col_idx: jnp.ndarray,
+                       deg_pad: int) -> jnp.ndarray:
+    """vmap'd device LexBFS over a PackedCSRBatch's arrays."""
+    return jax.vmap(lambda rp, ci: lexbfs_csr(rp, ci, deg_pad))(
+        row_ptr, col_idx)
+
+
+# ---------------------------------------------------------------------------
+# Host path (numpy, vectorized across the batch).
+# ---------------------------------------------------------------------------
+def _dense_rank_rows(rank: np.ndarray) -> np.ndarray:
+    """Row-wise dense rank of (B, n) int64; all negatives -> -1."""
+    b, n = rank.shape
+    s = np.sort(rank, axis=1)
+    distinct = np.zeros((b, n), dtype=np.int64)
+    np.cumsum(s[:, 1:] != s[:, :-1], axis=1, out=distinct[:, 1:])
+    out = np.empty_like(rank)
+    for i in range(b):
+        idx = np.searchsorted(s[i], rank[i])
+        nneg = int(np.searchsorted(s[i], 0))
+        # nneg == n: every lane visited (all negative) — the final mask
+        # below owns that case entirely.
+        shift = distinct[i][nneg] if 0 < nneg < n else 0
+        out[i] = distinct[i][idx] - shift
+    out[rank < 0] = -1
+    return out
+
+
+# int64 headroom: post-compaction ranks < n+1 double per sweep, plus one.
+_HOST_K_INNER = 40
+
+
+def lexbfs_csr_numpy_batch(row_ptr: np.ndarray, col_idx: np.ndarray,
+                           deg_pad: int) -> np.ndarray:
+    """Host LexBFS over a packed CSR batch -> (B, n) int32 orders.
+
+    One python-level loop of n sweeps; every sweep is ~7 numpy calls over
+    the whole batch (argmax / gather / bincount), so the per-sweep
+    interpreter overhead amortizes across B graphs. Bit-identical orders to
+    ``lexbfs_csr`` and the dense implementations.
+    """
+    from repro.sparse.packing import ell_rows_numpy
+
+    b, np1 = row_ptr.shape
+    n = np1 - 1
+    ell_flat = ell_rows_numpy(row_ptr, col_idx, deg_pad).reshape(b, -1)
+    rank = np.zeros((b, n + 1), dtype=np.int64)
+    order = np.empty((b, n), dtype=np.int32)
+    bidx = np.arange(b)
+    boff = (bidx * (n + 1))[:, None]
+    win = np.arange(deg_pad, dtype=np.int64)[None, :]
+    minlen = b * (n + 1)
+    since = 0
+    for i in range(n):
+        current = np.argmax(rank[:, :n], axis=1)
+        order[:, i] = current
+        rank[bidx, current] = -1
+        rank *= 2                       # sink lane wraps; it is never read
+        rows = ell_flat[bidx[:, None], current[:, None] * deg_pad + win]
+        rank += np.bincount(
+            (rows + boff).ravel(), minlength=minlen).reshape(b, n + 1)
+        since += 1
+        if since == _HOST_K_INNER:
+            rank[:, :n] = _dense_rank_rows(rank[:, :n])
+            since = 0
+    return order
+
+
+def lexbfs_csr_numpy(row_ptr: np.ndarray, col_idx: np.ndarray,
+                     deg_pad: int) -> np.ndarray:
+    """Single-graph host CSR LexBFS (batch-of-one convenience)."""
+    return lexbfs_csr_numpy_batch(
+        row_ptr[None, :], col_idx[None, :], deg_pad)[0]

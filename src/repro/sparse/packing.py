@@ -1,0 +1,143 @@
+"""Padded-CSR batches — ragged edge streams to fixed compile shapes.
+
+The dense engine buckets one axis (``n_pad``); CSR work units have a 2-D
+shape ``(n_pad, nnz_pad)`` plus a derived ``deg_pad`` (padded max row
+degree — the fixed neighbor-window width the CSR LexBFS slices per visited
+vertex). All three come from the power-of-two grids in
+``repro.configs.shapes``, so ragged sparse traffic compiles to a small,
+bounded set of XLA programs exactly like the dense path.
+
+Padding contract (every kernel in ``repro.sparse`` relies on it):
+
+* rows ``n_nodes..n_pad`` are empty (``row_ptr`` repeats the real nnz) —
+  padding vertices are isolated, hence trivially simplicial, hence
+  verdict-invariant;
+* ``col_idx`` slots beyond the real nnz hold the sentinel ``n_pad``, which
+  maps to a write-sink lane the kernels never read;
+* columns stay sorted within rows, so flat edge keys
+  ``(graph, row, col)`` are globally sorted and membership queries are one
+  ``searchsorted``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.shapes import (
+    engine_deg_bucket,
+    engine_nnz_bucket,
+)
+from repro.sparse.format import CSRGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedCSRBatch:
+    """One fixed-shape CSR work unit: B graphs padded to a common geometry.
+
+    Attributes:
+      n_pad: padded vertex count (rows beyond a graph's n_nodes are empty).
+      nnz_pad: padded directed-edge slot count (sentinel-filled tail).
+      deg_pad: padded max row degree across the batch.
+      row_ptr: (B, n_pad+1) int32.
+      col_idx: (B, nnz_pad) int32; padding slots hold the sentinel n_pad.
+    """
+
+    n_pad: int
+    nnz_pad: int
+    deg_pad: int
+    row_ptr: np.ndarray
+    col_idx: np.ndarray
+
+    @property
+    def batch(self) -> int:
+        return self.row_ptr.shape[0]
+
+    @property
+    def nnz(self) -> np.ndarray:
+        """(B,) real directed-edge counts."""
+        return self.row_ptr[:, -1]
+
+    def device_arrays(self):
+        import jax.numpy as jnp
+
+        return jnp.asarray(self.row_ptr), jnp.asarray(self.col_idx)
+
+
+def pack_csr_batch(
+    csrs: Sequence[CSRGraph],
+    n_pad: int,
+    batch: Optional[int] = None,
+    nnz_pad: Optional[int] = None,
+    deg_pad: Optional[int] = None,
+) -> PackedCSRBatch:
+    """Pack CSR graphs into one :class:`PackedCSRBatch`.
+
+    ``batch`` slots beyond ``len(csrs)`` are empty graphs (trivially
+    chordal — the engine masks their verdicts out). ``nnz_pad`` / ``deg_pad``
+    default to the bucketed maxima over the batch; passing larger values is
+    legal and verdict-invariant (asserted in tests/test_sparse.py).
+    """
+    b = batch if batch is not None else len(csrs)
+    if b < len(csrs):
+        raise ValueError(f"batch {b} < number of graphs {len(csrs)}")
+    too_big = max((c.n_nodes for c in csrs), default=0)
+    if too_big > n_pad:
+        raise ValueError(f"graph with {too_big} nodes > n_pad {n_pad}")
+    max_nnz = max((c.nnz for c in csrs), default=0)
+    max_deg = max((c.max_degree for c in csrs), default=0)
+    if nnz_pad is None:
+        nnz_pad = engine_nnz_bucket(max_nnz)
+    if deg_pad is None:
+        deg_pad = engine_deg_bucket(max_deg, n_pad)
+    if nnz_pad < max_nnz:
+        raise ValueError(f"nnz_pad {nnz_pad} < batch max nnz {max_nnz}")
+    if deg_pad < max_deg:
+        raise ValueError(f"deg_pad {deg_pad} < batch max degree {max_deg}")
+    row_ptr = np.zeros((b, n_pad + 1), dtype=np.int32)
+    col_idx = np.full((b, nnz_pad), n_pad, dtype=np.int32)
+    for i, c in enumerate(csrs):
+        row_ptr[i, 1: c.n_nodes + 1] = c.row_ptr[1:]
+        row_ptr[i, c.n_nodes + 1:] = c.nnz
+        col_idx[i, : c.nnz] = c.col_idx
+    return PackedCSRBatch(
+        n_pad=n_pad, nnz_pad=int(nnz_pad), deg_pad=int(deg_pad),
+        row_ptr=row_ptr, col_idx=col_idx)
+
+
+def pack_dense_batch(adjs: np.ndarray, **kwargs) -> PackedCSRBatch:
+    """Convenience: (B, n_pad, n_pad) bool batch -> PackedCSRBatch.
+
+    The generic engine warmup path and dense-contract callers land here;
+    the planner's native CSR realization (``realize_unit_csr``) bypasses the
+    dense scan entirely.
+    """
+    adjs = np.asarray(adjs, dtype=bool)
+    csrs = [CSRGraph.from_dense(a) for a in adjs]
+    return pack_csr_batch(csrs, n_pad=adjs.shape[1], batch=adjs.shape[0],
+                          **kwargs)
+
+
+def ell_rows_numpy(row_ptr: np.ndarray, col_idx: np.ndarray,
+                   deg_pad: int) -> np.ndarray:
+    """Batched ELL view: (B, n_pad+1, deg_pad) int64 neighbor rows.
+
+    Row v of graph b holds v's sorted neighbors left-justified, remaining
+    slots (and all of sentinel row n_pad) hold n_pad. The host LexBFS
+    gathers one such row per sweep — a contiguous window instead of a
+    dense (n_pad,) adjacency row.
+    """
+    b, np1 = row_ptr.shape
+    n = np1 - 1
+    nnz = row_ptr[:, -1].astype(np.int64)
+    ell = np.full((b, n + 1, deg_pad), n, dtype=np.int64)
+    deg = np.diff(row_ptr, axis=1).astype(np.int64)
+    for i in range(b):                      # one-time O(nnz) per graph
+        m = int(nnz[i])
+        if m == 0:
+            continue
+        rows = np.repeat(np.arange(n), deg[i])
+        slots = np.arange(m) - row_ptr[i, rows]
+        ell[i, rows, slots] = col_idx[i, :m]
+    return ell

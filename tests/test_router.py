@@ -1,0 +1,166 @@
+"""Router: cost model, capability filtering, auto-engine plan metadata."""
+import numpy as np
+import pytest
+
+from repro.core import generators as G
+from repro.engine import (
+    ChordalityEngine,
+    DEFAULT_COST_MODEL,
+    Router,
+    fit_cost_model,
+)
+from repro.engine.router import BackendCost
+from repro.graphs.structure import Graph
+
+
+# ---------------------------------------------------------------------------
+# Cost model mechanics
+# ---------------------------------------------------------------------------
+def test_cost_formula_terms():
+    c = BackendCost(dispatch_us=100, per_graph_us=10, sweep_us=2,
+                    n_us=1, n2_us=0.5, m_us=0.25)
+    # n=4, density=0.5 (m=8), batch=2:
+    # 100/2 + 10 + 2*4/2 + 1*4 + 0.5*16 + 0.25*8 = 50+10+4+4+8+2
+    assert c.us_per_graph(4, 0.5, 2) == pytest.approx(78.0)
+
+
+def test_batch_amortizes_dispatch_and_sweeps():
+    c = DEFAULT_COST_MODEL["csr"]
+    assert c.us_per_graph(256, 0.01, 32) < c.us_per_graph(256, 0.01, 1)
+
+
+def test_fit_cost_model_recovers_orderings():
+    # Synthetic samples from two known models; the fit must reproduce the
+    # cheap/expensive ordering even if exact coefficients differ.
+    true = {
+        "a": BackendCost(per_graph_us=100.0),
+        "b": BackendCost(per_graph_us=10.0, n2_us=0.01),
+    }
+    samples = []
+    for name, c in true.items():
+        for n in (8, 32, 128, 512):
+            for b in (1, 8):
+                samples.append(
+                    (name, n, 0.1, b, c.us_per_graph(n, 0.1, b)))
+    fitted = fit_cost_model(
+        samples, feature_masks={"a": (1,), "b": (1, 4)})
+    assert fitted["a"].us_per_graph(8, 0.1, 1) > \
+        fitted["b"].us_per_graph(8, 0.1, 1)
+    assert fitted["a"].us_per_graph(512, 0.1, 1) < \
+        fitted["b"].us_per_graph(512, 0.1, 1)
+
+
+# ---------------------------------------------------------------------------
+# Capability filtering: never pick a backend lacking a required capability,
+# no matter how cheap the cost model claims it is.
+# ---------------------------------------------------------------------------
+def test_choose_excludes_backends_missing_required_caps():
+    model = dict(DEFAULT_COST_MODEL)
+    model["sharded"] = BackendCost()          # free => always cheapest
+    r = Router(cost_model=model,
+               candidates=("numpy_ref", "jax_fast", "csr", "sharded"))
+    assert r.choose(256, 0.1, 8) == "sharded"  # unconstrained: cheapest wins
+    got = r.choose(256, 0.1, 8, require=("certificate",))
+    assert got != "sharded"                    # sharded lacks certificates
+
+
+def test_choose_requires_some_candidate():
+    r = Router(cost_model={"sharded": BackendCost()},
+               candidates=("sharded",))
+    with pytest.raises(ValueError, match="certificate"):
+        r.choose(64, 0.1, 1, require=("certificate",))
+
+
+def test_router_rejects_candidates_without_cost_entries():
+    with pytest.raises(ValueError, match="pallas_peo"):
+        Router(cost_model={"csr": BackendCost()},
+               candidates=("csr", "pallas_peo"))
+
+
+# ---------------------------------------------------------------------------
+# Regime routing with the fitted default model (plan metadata only — no
+# execution, so the streams can be large).
+# ---------------------------------------------------------------------------
+def _edge_graph(n, c, seed):
+    return G.sparse_erdos_renyi(n, c=c, seed=seed)
+
+
+def test_default_model_routes_three_regimes():
+    tiny = [G.cycle(10)]                                    # one-off request
+    sparse = [_edge_graph(1024, 10, s) for s in range(32)]  # density ~0.01
+    dense = [G.dense_random(200, p=0.4, seed=s) for s in range(32)]
+    eng = ChordalityEngine(backend="auto", max_batch=32)
+    plan = eng.plan(tiny + sparse + dense)
+    by_npad = {u.n_pad: u.backend for u in plan.units}
+    assert by_npad[16] == "numpy_ref"      # tiny single request
+    assert by_npad[1024] == "csr"          # sparse large
+    assert by_npad[256] == "jax_fast"      # dense bulk
+    # plan metadata exposes the choice per request
+    assert plan.unit_of(0).backend == "numpy_ref"
+    assert plan.unit_of(1).backend == "csr"
+    assert plan.unit_of(len(tiny) + len(sparse)).backend == "jax_fast"
+
+
+def test_auto_run_executes_routed_plan_and_agrees():
+    graphs = ([G.cycle(9)]
+              + [_edge_graph(80, 5, s) for s in range(6)]
+              + [G.dense_random(48, p=0.5, seed=s) for s in range(6)])
+    auto = ChordalityEngine(backend="auto", max_batch=8)
+    res = auto.run(graphs)
+    ref = ChordalityEngine(backend="numpy_ref", max_batch=8).run(graphs)
+    np.testing.assert_array_equal(res.verdicts, ref.verdicts)
+    assert sum(res.stats.backend_histogram.values()) == len(graphs)
+    assert set(res.stats.backend_histogram) == \
+        {u.backend for u in res.plan.units}
+
+
+def test_auto_certificate_routes_with_certificate_requirement():
+    eng = ChordalityEngine(backend="auto")
+    cert = eng.certificate(G.cycle(9))
+    assert not cert.chordal and cert.n_violations > 0
+    cert = eng.certificate(G.k_tree(24, k=3, seed=0))
+    assert cert.chordal and cert.n_violations == 0
+
+
+def test_auto_rejects_backend_opts():
+    with pytest.raises(ValueError, match="auto"):
+        ChordalityEngine(backend="auto", interpret=False)
+
+
+def test_auto_warmup_requires_plan():
+    eng = ChordalityEngine(backend="auto")
+    with pytest.raises(ValueError, match="warmup_plan"):
+        eng.warmup([16])
+
+
+def test_auto_warmup_plan_precompiles_routed_shapes():
+    graphs = [G.cycle(10), G.dense_random(40, p=0.5, seed=0)]
+    eng = ChordalityEngine(backend="auto", max_batch=4)
+    eng.warmup_plan(eng.plan(graphs))
+    res = eng.run(graphs)
+    assert res.stats.compile_misses == 0
+
+
+def test_custom_router_overrides_choice():
+    # A router that prices everything except csr at infinity.
+    model = {
+        "csr": BackendCost(),
+        "jax_fast": BackendCost(per_graph_us=1e12),
+        "numpy_ref": BackendCost(per_graph_us=1e12),
+    }
+    eng = ChordalityEngine(
+        backend="auto", max_batch=4, router=Router(cost_model=model))
+    res = eng.run([G.cycle(8), G.clique(8)])
+    assert res.stats.backend_histogram == {"csr": 2}
+    assert res.verdicts.tolist() == [False, True]
+
+
+def test_routing_density_uses_edge_views_without_densifying():
+    # Graphs that carry only an edge list: planning must not densify them.
+    g = G.sparse_erdos_renyi(512, c=6, seed=0)
+    lean = Graph(n_nodes=g.n_nodes, edges=g.edges)
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    plan = eng.plan([lean] * 8)
+    (unit,) = plan.units
+    assert unit.backend == "csr"
+    assert lean.adj is None               # still no dense view materialized

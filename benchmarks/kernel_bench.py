@@ -159,6 +159,101 @@ def bench_engine_amortization(
     return rows
 
 
+def bench_service(
+    n=256, requests=96, max_batch=32, c=6.0,
+    waits_ms=(0.0, 2.0, 8.0), offered_gps=(0, 200),
+) -> List[Dict]:
+    """Open-loop serving: async micro-batching vs request-at-a-time sync.
+
+    The tentpole acceptance table (ISSUE 3): a synthetic load generator
+    submits a batch-heavy stream (every request lands in the n-bucket) and
+    we measure completed graphs/s.
+
+    * ``service_sync`` — the pre-service serving path: a warm synchronous
+      engine, one ``run([g])`` per arrival (batch=1 work units; admission
+      never overlaps execution).
+    * ``service_async_w{W}_load{L}`` — ``AsyncChordalityEngine`` with
+      ``max_wait_ms=W`` under offered load ``L`` graphs/s (0 = back-to-back,
+      the saturation point). The derived column carries queue-delay
+      percentiles, mean batch occupancy, and the backend mix — the knobs/
+      outcomes DESIGN.md §9 discusses.
+
+    Both paths route with ``backend="auto"`` and are measured warm (one
+    untimed pass first), so the comparison is pure serving discipline:
+    micro-batched work units vs batch=1 units. The default stream (n=256,
+    c=6) sits where per-unit routing itself pays: at batch=1 the model
+    picks ``jax_fast``, at full occupancy ``csr`` (batch-amortized
+    sweeps), so the async path wins on batching *and* backend choice.
+    """
+    import time as _time
+
+    from repro.configs.service import ServiceConfig
+    from repro.engine import (
+        AsyncChordalityEngine,
+        ChordalityEngine,
+        ServiceStats,
+        gather,
+    )
+
+    graphs = _sparse_stream(n, c, requests)
+    rows = []
+
+    # -- sync baseline: request-at-a-time through a warm engine ----------
+    eng = ChordalityEngine(backend="auto", max_batch=max_batch)
+    for g in graphs:
+        eng.run([g])                       # warm the batch=1 shapes
+    t0 = _time.perf_counter()
+    for g in graphs:
+        eng.run([g])
+    wall = _time.perf_counter() - t0
+    sync_gps = requests / wall
+    rows.append({
+        "name": f"service_sync_n{n}_r{requests}",
+        "us_per_call": wall / requests * 1e6,
+        "derived": f"{sync_gps:.0f}_graphs_per_s;batch=1_units",
+    })
+
+    # -- async serving: sweep micro-batch window x offered load ----------
+    for wait in waits_ms:
+        cfg = ServiceConfig(
+            max_batch=max_batch, max_wait_ms=wait,
+            max_queue=max(1024, 4 * requests))
+        svc = AsyncChordalityEngine(config=cfg)
+        try:
+            # Warm every batch shape a drain can produce (occupancy
+            # depends on arrival timing, so partial-load passes hit the
+            # small power-of-two batches, not just the full one).
+            svc.warmup(graphs)
+            gather(svc.submit_many(graphs), timeout=600)   # warm pass
+            for rate in offered_gps:
+                gap = 0.0 if rate <= 0 else 1.0 / rate
+                svc.stats = ServiceStats()   # idle here: per-pass stats
+                t0 = _time.perf_counter()
+                futs = []
+                for i, g in enumerate(graphs):
+                    if gap:
+                        _time.sleep(max(0.0, t0 + i * gap
+                                        - _time.perf_counter()))
+                    futs.append(svc.submit(g, timeout=30))
+                gather(futs, timeout=600)
+                wall = _time.perf_counter() - t0
+                s = svc.stats
+                mix = ";".join(sorted(s.backend_histogram))
+                load = "inf" if rate <= 0 else str(rate)
+                rows.append({
+                    "name": f"service_async_w{wait:g}_load{load}_n{n}",
+                    "us_per_call": wall / requests * 1e6,
+                    "derived": (
+                        f"{requests / wall:.0f}_graphs_per_s;"
+                        f"p50_queue={s.p50_queue_ms:.2f}ms;"
+                        f"p95_queue={s.p95_queue_ms:.2f}ms;"
+                        f"occ={s.mean_occupancy:.1f};backends={mix}"),
+                })
+        finally:
+            svc.shutdown()
+    return rows
+
+
 def bench_router_samples(
     quick=False,
 ) -> List[Dict]:

@@ -24,7 +24,7 @@ def main(argv=None) -> int:
                     help="minimal sizes for CI smoke (implies --quick)")
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
-                         "kernels,lexbfs,engine,router")
+                         "kernels,lexbfs,engine,router,service")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -33,7 +33,7 @@ def main(argv=None) -> int:
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs", "engine", "router"]
+         "lexbfs", "engine", "router", "service"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -113,6 +113,21 @@ def main(argv=None) -> int:
             n=64 if args.smoke else (128 if args.quick else 256),
             stream_lens=(1, 8) if args.smoke else (1, 4, 16, 64),
             max_batch=8 if args.smoke else 32))
+    if "service" in which:
+        print("# async serving bench - throughput vs offered load and "
+              "max_wait_ms", file=sys.stderr)
+        if args.smoke:
+            emit(kernel_bench.bench_service(
+                n=64, requests=12, max_batch=4, waits_ms=(0.0, 4.0),
+                offered_gps=(0,)))
+        elif args.quick:
+            emit(kernel_bench.bench_service(
+                n=128, requests=32, max_batch=8, waits_ms=(0.0, 4.0),
+                offered_gps=(0, 200)))
+        else:
+            emit(kernel_bench.bench_service(
+                n=256, requests=96, max_batch=32,
+                waits_ms=(0.0, 2.0, 8.0), offered_gps=(0, 200)))
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

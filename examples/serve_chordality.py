@@ -1,22 +1,27 @@
-"""Chordality-testing service: batched requests through the engine —
+"""Chordality-testing service: an async engine under open-loop load —
 the serving-shaped example application.
 
     PYTHONPATH=src python examples/serve_chordality.py \
-        [--requests 64] [--backend jax_fast]
+        [--requests 64] [--rate 200] [--max-wait-ms 2.0] [--backend auto]
 
-Requests (graphs of varying size/class) go through
-``repro.engine.ChordalityEngine``: the planner buckets them into
-fixed-shape work units (power-of-two padding + batch rounding), the
-backend registry dispatches to the selected implementation, and the
-session layer reports throughput / per-unit latency / compile-cache
-behavior — the serving analogue of the paper's timing tables.
+A synthetic load generator submits requests (graphs of varying size and
+class) at an offered rate with exponential inter-arrival gaps — open loop:
+arrivals don't wait for completions, exactly the traffic a service sees.
+Each ``submit`` returns immediately with a future; the service's admission
+loop micro-batches same-bucket requests into fixed-shape work units
+(collect up to ``--max-wait-ms`` or until ``--batch`` fills), routes every
+drained unit through the cost model (``--backend auto``), and a background
+executor drives the compile cache. The report shows the serving tradeoff:
+queue-delay percentiles vs batch occupancy vs backend mix (DESIGN.md §9).
 """
 import argparse
+import time
 
 import numpy as np
 
 from repro.core import generators as G
-from repro.engine import ChordalityEngine, backend_names
+from repro.configs.service import ServiceConfig
+from repro.engine import AsyncChordalityEngine, backend_names, gather
 
 REQUEST_KINDS = ("random_chordal", "sparse_random", "cycle", "random_tree")
 
@@ -38,12 +43,19 @@ def synth_request(i: int, n_max: int, rng):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16,
+                    help="bucket fill target (work-unit batch cap)")
     ap.add_argument("--n-max", type=int, default=96)
-    ap.add_argument("--backend", default="jax_fast",
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="offered load, graphs/s (0 = back-to-back)")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="micro-batch window before a partial bucket drains")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission bound on outstanding requests")
+    ap.add_argument("--backend", default="auto",
                     choices=["auto", *backend_names()],
                     help="registered backend, or 'auto' for cost-model "
-                         "routing per work unit")
+                         "routing per drained work unit")
     args = ap.parse_args()
 
     rng = np.random.default_rng(0)
@@ -52,38 +64,61 @@ def main():
     requests = [g for g, _ in pairs]
     kinds = [k for _, k in pairs]
 
-    engine = ChordalityEngine(backend=args.backend, max_batch=args.batch)
-    # Warm the compile cache on exactly the shapes this stream will hit
-    # (passing the graphs warms the CSR backend's edge-count buckets too).
-    engine.warmup_plan(engine.plan(requests), requests)
+    cfg = ServiceConfig(
+        max_queue=args.max_queue, max_batch=args.batch,
+        max_wait_ms=args.max_wait_ms, backend=args.backend)
+    print(f"async service: {args.requests} requests at "
+          f"{'max speed' if args.rate <= 0 else f'{args.rate:g}/s offered'}"
+          f" (backend={args.backend}, max_batch={args.batch}, "
+          f"max_wait={args.max_wait_ms:g}ms)")
 
-    print(f"serving {args.requests} requests on backend={args.backend} "
-          f"(max_batch={args.batch})")
-    result = engine.run(requests)
-    s = result.stats
+    with AsyncChordalityEngine(config=cfg) as svc:
+        # Warm the compile cache on every shape this traffic can hit —
+        # including partial-occupancy batches the wait window produces —
+        # so the measured pass shows serving behavior, not jit compiles.
+        svc.warmup(requests)
 
-    print(f"  -> {int(result.verdicts.sum())}/{len(result)} chordal")
-    print(f"  buckets {s.bucket_histogram} over {s.n_units} work units, "
-          f"compile cache: {s.compile_hits} hits / {s.compile_misses} misses")
-    if args.backend == "auto":
-        print(f"  router dispatch: {s.backend_histogram}")
-    print(f"  throughput {s.throughput_gps:.1f} graphs/s, "
-          f"p50 unit latency {s.p50_latency_ms:.1f}ms")
+        t0 = time.perf_counter()
+        futures = []
+        for i, g in enumerate(requests):
+            if args.rate > 0:
+                # Exponential gaps = Poisson arrivals (open loop).
+                time.sleep(float(rng.exponential(1.0 / args.rate)))
+            futures.append(svc.submit(g, timeout=30))
+        t_submitted = time.perf_counter() - t0
+        responses = gather(futures, timeout=300)
+        wall = time.perf_counter() - t0
 
-    # One detailed answer with certificate: pick a request the engine
-    # actually judged non-chordal (no hard-coded index — the verdicts and
-    # the plan metadata tell us what each request was and where it ran).
-    idx = next(
-        (i for i, v in enumerate(result.verdicts) if not v), None)
-    if idx is not None:
-        unit = result.plan.unit_of(idx)
-        cert = engine.certificate(requests[idx])
-        print(f"  example certificate: request #{idx} "
-              f"({kinds[idx]}, n={requests[idx].n_nodes}, "
-              f"bucket n_pad={unit.n_pad}): chordal={cert.chordal} "
-              f"violations={cert.n_violations}")
-    else:
-        print("  (all requests chordal — no negative certificate to show)")
+        n_chordal = sum(r.verdict for r in responses)
+        s = svc.stats
+        print(f"  -> {n_chordal}/{len(responses)} chordal")
+        print(f"  admission: {s.n_submitted} submitted in "
+              f"{t_submitted:.2f}s, {s.n_units} work units "
+              f"(drains: {s.drain_reasons}), mean occupancy "
+              f"{s.mean_occupancy:.1f}/{args.batch}")
+        print(f"  queue delay p50 {s.p50_queue_ms:.2f}ms / "
+              f"p95 {s.p95_queue_ms:.2f}ms, unit exec p50 "
+              f"{s.p50_exec_ms:.2f}ms")
+        print(f"  backend mix: {s.backend_histogram}")
+        print(f"  completed {s.n_completed} in {wall:.2f}s -> "
+              f"{s.n_completed / wall:.0f} graphs/s")
+
+        # One detailed answer with certificate, fetched through the same
+        # (still warm) service — want_certificate attaches the witness
+        # to the future.
+        idx = next(
+            (i for i, r in enumerate(responses) if not r.verdict), None)
+        if idx is not None:
+            resp = svc.submit(
+                requests[idx], want_certificate=True).result(timeout=120)
+            cert = resp.certificate
+            print(f"  example certificate: request #{idx} "
+                  f"({kinds[idx]}, n={requests[idx].n_nodes}, "
+                  f"bucket n_pad={resp.n_pad}, ran on {resp.backend}): "
+                  f"chordal={cert.chordal} violations={cert.n_violations}")
+        else:
+            print("  (all requests chordal — "
+                  "no negative certificate to show)")
 
 
 if __name__ == "__main__":

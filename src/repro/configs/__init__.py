@@ -13,6 +13,11 @@ from repro.configs import (
     qwen1_5_4b,
 )
 from repro.configs.base import ArchSpec
+from repro.configs.service import (
+    SERVICE_CONFIGS,
+    ServiceConfig,
+    service_config,
+)
 from repro.configs.shapes import (
     CHORDALITY_SHAPES,
     GNN_SHAPES,

@@ -1,0 +1,66 @@
+"""Serving-layer knobs — queue/batching config for the async engine.
+
+The async service (``repro.engine.service.AsyncChordalityEngine``) trades
+latency for batch occupancy with two knobs: how long the admission loop may
+hold a partially-filled bucket (``max_wait_ms``) and how many requests fill
+a bucket (``max_batch``).  ``max_queue`` bounds the total backlog a service
+will accept — admission control, the knob that keeps queue delay finite
+under overload.  Named presets capture the standard operating points; the
+service benchmark (``benchmarks.run --tables service``) sweeps
+``max_wait_ms`` to expose the tradeoff curve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Queue + micro-batching knobs for ``AsyncChordalityEngine``.
+
+    Attributes:
+      max_queue: bound on the backlog (submitted but unresolved requests);
+        ``submit`` rejects (or blocks, with a timeout) beyond it.
+      max_batch: work-unit batch cap — a bucket drains as soon as this many
+        requests of one n_pad size are pending.
+      max_wait_ms: micro-batch window — a non-empty bucket drains once its
+        oldest request has waited this long, full or not. 0 disables
+        batching-by-time (every admission pass drains what it sees).
+      backend: engine backend name; ``"auto"`` routes per drained unit.
+      drain_timeout_s: default wait bound for ``flush``/``shutdown``.
+    """
+
+    max_queue: int = 1024
+    max_batch: int = 32
+    max_wait_ms: float = 2.0
+    backend: str = "auto"
+    drain_timeout_s: float = 60.0
+
+    def __post_init__(self):
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {self.max_queue}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+
+
+#: Standard operating points. ``throughput`` holds buckets longer for
+#: fuller work units; ``latency`` drains almost immediately; ``smoke`` is
+#: the tiny CI/benchmark-smoke shape.
+SERVICE_CONFIGS: Dict[str, ServiceConfig] = {
+    "default": ServiceConfig(),
+    "throughput": ServiceConfig(max_batch=64, max_wait_ms=8.0),
+    "latency": ServiceConfig(max_batch=8, max_wait_ms=0.5),
+    "smoke": ServiceConfig(max_queue=64, max_batch=8, max_wait_ms=1.0),
+}
+
+
+def service_config(name: str) -> ServiceConfig:
+    if name not in SERVICE_CONFIGS:
+        raise KeyError(
+            f"unknown service config {name!r}; "
+            f"available: {sorted(SERVICE_CONFIGS)}")
+    return SERVICE_CONFIGS[name]

@@ -4,8 +4,10 @@ This subsystem is the production entry point for the paper's pipeline
 (parallel LexBFS §6.1 + parallel PEO test §6.2): a backend registry over
 every implementation in the repo, a planner that turns ragged request
 streams into fixed-shape work units (dense or padded-CSR), a cost-model
-router for adaptive backend selection, and a session layer with throughput
-and latency stats. Direct use of the ``repro.core`` multi-entry functions
+router for adaptive backend selection, a session layer with throughput
+and latency stats, and an async serving layer
+(:class:`AsyncChordalityEngine`, DESIGN.md §9) that micro-batches a live
+request stream onto the same planner/cache/router. Direct use of the ``repro.core`` multi-entry functions
 is deprecated for serving/benchmark callers — go through
 :class:`ChordalityEngine`.
 
@@ -30,12 +32,22 @@ from repro.engine.planner import (
     plan_requests,
     realize_unit,
     realize_unit_csr,
+    unit_for_chunk,
 )
 from repro.engine.router import (
     BackendCost,
     DEFAULT_COST_MODEL,
+    DEFAULT_FIT_N_RANGE,
     Router,
     fit_cost_model,
+)
+from repro.engine.service import (
+    AsyncChordalityEngine,
+    QueueFullError,
+    ServiceClosedError,
+    ServiceResponse,
+    ServiceStats,
+    gather,
 )
 from repro.engine.session import (
     Certificate,
@@ -59,10 +71,18 @@ __all__ = [
     "plan_requests",
     "realize_unit",
     "realize_unit_csr",
+    "unit_for_chunk",
     "BackendCost",
     "DEFAULT_COST_MODEL",
+    "DEFAULT_FIT_N_RANGE",
     "Router",
     "fit_cost_model",
+    "AsyncChordalityEngine",
+    "QueueFullError",
+    "ServiceClosedError",
+    "ServiceResponse",
+    "ServiceStats",
+    "gather",
     "Certificate",
     "ChordalityEngine",
     "EngineResult",

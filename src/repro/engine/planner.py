@@ -91,6 +91,34 @@ def plan_requests(
     return Plan(units=units, n_requests=len(graphs))
 
 
+def unit_for_chunk(
+    n_pad: int,
+    count: int,
+    max_batch: int,
+    backend: Optional[str] = None,
+) -> WorkUnit:
+    """One work unit for ``count`` requests already grouped in an n_pad
+    bucket — the admission-time entry point the async service uses.
+
+    Unlike :func:`plan_requests` (which schedules a whole stream at once),
+    the caller here has *drained a bucket*: the requests are consecutive, so
+    indices are local positions ``0..count-1`` into the drained chunk. The
+    batch dimension rounds up exactly like a trailing partial chunk in a
+    plan, so the compile-cache keys are shared with the synchronous path.
+    """
+    if count < 1:
+        raise ValueError(f"count must be >= 1, got {count}")
+    if count > max_batch:
+        raise ValueError(
+            f"count {count} exceeds max_batch {max_batch}; drain earlier")
+    return WorkUnit(
+        n_pad=n_pad,
+        batch=engine_batch_bucket(count, max_batch),
+        indices=tuple(range(count)),
+        backend=backend,
+    )
+
+
 def realize_unit(
     unit: WorkUnit, graphs: Sequence[Graph]
 ) -> np.ndarray:

@@ -83,6 +83,14 @@ DEFAULT_COST_MODEL: Dict[str, BackendCost] = {
 #: specialist backends (pallas_peo, sharded) stay opt-in by name.
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("numpy_ref", "jax_fast", "csr")
 
+#: n-range DEFAULT_COST_MODEL was fitted over (bench_router_samples sweeps
+#: the engine's n_pad buckets, smallest 16, largest measured 8192). Outside
+#: it, the linear forms have no data behind them: below the floor the csr
+#: sweep term shrinks toward zero and beats numpy_ref's fixed per-graph
+#: cost on paper while losing in practice, so routing must clamp rather
+#: than extrapolate.
+DEFAULT_FIT_N_RANGE: Tuple[int, int] = (16, 8192)
+
 
 class Router:
     """Cost-model backend selection for plans and single requests."""
@@ -91,6 +99,7 @@ class Router:
         self,
         cost_model: Optional[CostModel] = None,
         candidates: Sequence[str] = DEFAULT_CANDIDATES,
+        fit_n_range: Tuple[int, int] = DEFAULT_FIT_N_RANGE,
     ):
         self.cost_model: Dict[str, BackendCost] = dict(
             DEFAULT_COST_MODEL if cost_model is None else cost_model)
@@ -98,6 +107,29 @@ class Router:
         unknown = [c for c in self.candidates if c not in self.cost_model]
         if unknown:
             raise ValueError(f"candidates without cost entries: {unknown}")
+        lo, hi = fit_n_range
+        if not (0 < lo <= hi):
+            raise ValueError(f"invalid fit_n_range {fit_n_range}")
+        self.fit_n_range = (int(lo), int(hi))
+
+    def clamp_features(
+        self, n: int, density: float, batch: int
+    ) -> Tuple[int, float, int]:
+        """Pull a feature point back inside the model's measured support.
+
+        Degenerate requests (n below every bucket, zero-edge graphs whose
+        density underflows, batch=1 probes) otherwise evaluate the linear
+        fit where it was never sampled, and the cheapest extrapolation wins
+        for the wrong reasons. Clamping keeps the *ordering* question
+        inside the regime the coefficients were measured on.
+        """
+        lo, hi = self.fit_n_range
+        n = min(max(int(n), lo), hi)
+        if not math.isfinite(density):
+            density = 0.0
+        density = min(max(float(density), 0.0), 1.0)
+        batch = max(int(batch), 1)
+        return n, density, batch
 
     def estimate_us_per_graph(
         self, name: str, n: int, density: float, batch: int
@@ -116,7 +148,11 @@ class Router:
         ``require`` names :class:`~repro.engine.backends.BackendCaps`
         fields (e.g. ``("certificate",)``); a backend missing any required
         capability is excluded no matter how cheap the model says it is.
+        Features are clamped to the fitted support first
+        (:meth:`clamp_features`), so degenerate inputs route like the
+        nearest measured regime instead of extrapolating.
         """
+        n, density, batch = self.clamp_features(n, density, batch)
         req = tuple(require)
         best_name, best_cost = None, math.inf
         for name in self.candidates:

@@ -1,0 +1,530 @@
+"""Async serving layer — ``AsyncChordalityEngine``: queue in, futures out.
+
+The synchronous session (``ChordalityEngine.run``) needs the whole request
+stream up front; a service sees requests one at a time. This module closes
+that gap with the classic serving triad:
+
+* **bounded admission queue** — ``submit`` buckets each request by n_pad
+  (the planner's grid) and appends it to that bucket's pending deque;
+  beyond ``max_queue`` outstanding requests it rejects (or blocks, with a
+  timeout) so queue delay stays finite under overload.
+* **micro-batching admission loop** (background thread) — a bucket drains
+  into a work unit as soon as it *fills* (``max_batch`` requests) or its
+  oldest request has waited ``max_wait_ms``; the drained chunk becomes a
+  :func:`~repro.engine.planner.unit_for_chunk` work unit, routed per unit
+  by the engine's router (``backend="auto"`` is the default serving path).
+* **background executor thread** — pops routed units off an internal FIFO
+  and drives the session's single execution path
+  (``ChordalityEngine.execute_unit``): same compile cache, same realize
+  contract (dense or padded-CSR), so admission overlaps execution and the
+  compiled-shape universe is identical to offline runs.
+
+Each ``submit`` returns a ``concurrent.futures.Future`` resolving to a
+:class:`ServiceResponse` (verdict, optional certificate, queue/execution
+latency, and where it ran). Futures support cancellation until their unit
+starts executing. ``flush`` force-drains partial buckets and waits for an
+empty backlog; ``shutdown`` (also via ``with``) stops admission, optionally
+drains, and joins both threads. :class:`ServiceStats` aggregates queue-delay
+percentiles, the batch-occupancy histogram, and the backend mix.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Deque, Dict, List, Optional, Sequence, Union
+
+import collections
+
+import numpy as np
+
+from repro.configs.service import ServiceConfig
+from repro.engine.planner import unit_for_chunk
+from repro.engine.session import Certificate, ChordalityEngine
+from repro.graphs.structure import Graph, bucket_graphs, bucket_npad
+
+
+class QueueFullError(RuntimeError):
+    """The service backlog is at ``max_queue``; the request was rejected."""
+
+
+class ServiceClosedError(RuntimeError):
+    """``submit`` after ``shutdown`` began."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceResponse:
+    """What a request's future resolves to."""
+
+    verdict: bool
+    certificate: Optional[Certificate]   # populated iff want_certificate
+    queue_ms: float      # submit -> unit execution start
+    exec_ms: float       # the unit executable call (shared across its batch)
+    backend: str         # backend the request's unit ran on
+    n_pad: int           # padding bucket the request landed in
+    batch: int           # compiled batch dimension of its unit
+    occupancy: int       # real requests in the unit (rest = padding slots)
+
+
+@dataclasses.dataclass
+class _Request:
+    graph: Graph
+    future: Future
+    t_submit: float
+    want_certificate: bool
+
+
+@dataclasses.dataclass
+class _AdmittedUnit:
+    """A drained bucket: local work unit + the requests filling its slots."""
+
+    unit: object                     # WorkUnit with indices 0..len(reqs)-1
+    requests: List[_Request]
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Aggregate serving behavior (mutated under the service lock)."""
+
+    n_submitted: int = 0
+    n_completed: int = 0
+    n_cancelled: int = 0
+    n_rejected: int = 0
+    n_failed: int = 0
+    n_units: int = 0
+    queue_delays_ms: List[float] = dataclasses.field(default_factory=list)
+    exec_latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    #: {filled slots: units executed with that occupancy}
+    occupancy_histogram: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    #: {backend name: requests it served}
+    backend_histogram: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+    #: {"full" | "timeout" | "forced": units drained for that reason}
+    drain_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def p50_queue_ms(self) -> float:
+        return float(np.median(self.queue_delays_ms)) \
+            if self.queue_delays_ms else 0.0
+
+    @property
+    def p95_queue_ms(self) -> float:
+        return float(np.percentile(self.queue_delays_ms, 95)) \
+            if self.queue_delays_ms else 0.0
+
+    @property
+    def p50_exec_ms(self) -> float:
+        return float(np.median(self.exec_latencies_ms)) \
+            if self.exec_latencies_ms else 0.0
+
+    @property
+    def mean_occupancy(self) -> float:
+        """Mean real requests per executed unit."""
+        total = sum(k * v for k, v in self.occupancy_histogram.items())
+        units = sum(self.occupancy_histogram.values())
+        return total / units if units else 0.0
+
+
+class AsyncChordalityEngine:
+    """Request-at-a-time serving on top of :class:`ChordalityEngine`.
+
+    Args:
+      config: queue/batching knobs (:class:`~repro.configs.service
+        .ServiceConfig`); default preset accepts 1024 outstanding requests
+        and holds partial buckets up to 2 ms.
+      backend: overrides ``config.backend`` (a registered name or
+        ``"auto"``).
+      engine: inject a pre-built session engine (must be constructed with
+        the config's ``max_batch``); default builds one, so the service
+        owns its compile cache.
+      buckets / router: forwarded to the inner engine.
+
+    Thread safety: ``submit`` may be called from any number of threads.
+    The service runs exactly two daemon threads (admission + executor);
+    ``shutdown(drain=True)`` — or leaving a ``with`` block — resolves every
+    accepted future before returning.
+    """
+
+    def __init__(
+        self,
+        config: Optional[ServiceConfig] = None,
+        backend: Optional[str] = None,
+        engine: Optional[ChordalityEngine] = None,
+        buckets: Optional[Sequence[int]] = None,
+        router=None,
+    ):
+        self.config = config if config is not None else ServiceConfig()
+        if engine is not None:
+            if backend is not None or buckets is not None \
+                    or router is not None:
+                raise ValueError(
+                    "pass either a pre-built engine or "
+                    "backend/buckets/router, not both")
+            if engine.max_batch != self.config.max_batch:
+                raise ValueError(
+                    f"engine.max_batch={engine.max_batch} != "
+                    f"config.max_batch={self.config.max_batch}")
+            self.engine = engine
+        else:
+            self.engine = ChordalityEngine(
+                backend=backend if backend is not None
+                else self.config.backend,
+                max_batch=self.config.max_batch,
+                buckets=buckets,
+                router=router,
+            )
+        self.stats = ServiceStats()
+
+        self._lock = threading.Lock()
+        self._work_cv = threading.Condition(self._lock)   # admission wakeups
+        self._done_cv = threading.Condition(self._lock)   # backlog drains
+        self._pending: Dict[int, Deque[_Request]] = \
+            collections.defaultdict(collections.deque)
+        self._backlog = 0          # submitted, not yet resolved
+        self._closed = False
+        self._force_drain = False
+        self._ready: "queue.Queue[Optional[_AdmittedUnit]]" = queue.Queue()
+        self._admitter = threading.Thread(
+            target=self._admission_loop, name="chordality-admission",
+            daemon=True)
+        self._executor = threading.Thread(
+            target=self._executor_loop, name="chordality-executor",
+            daemon=True)
+        self._admitter.start()
+        self._executor.start()
+
+    # -- client surface ----------------------------------------------------
+    def warmup(self, sample: Sequence[Graph]) -> "AsyncChordalityEngine":
+        """Pre-compile every shape traffic drawn like ``sample`` can hit.
+
+        The synchronous engine warms a *plan* — full-occupancy units. A
+        service additionally executes partial-occupancy batches whenever
+        the wait window closes a bucket early, so this warms each
+        power-of-two batch size per n_pad bucket (up to the bucket's
+        request count and ``max_batch``). Call it before going live;
+        otherwise the first minutes of traffic pay the jit compiles as
+        queue delay. Only call while the service is idle — it drives the
+        inner engine's compile cache from the caller's thread.
+        """
+        by_bucket = bucket_graphs(sample, self.engine.buckets)
+        for _, idxs in sorted(by_bucket.items()):
+            b = 1
+            while True:
+                chunk = [sample[i] for i in idxs[:b]]
+                self.engine.warmup_plan(self.engine.plan(chunk), chunk)
+                if b >= min(len(idxs), self.config.max_batch):
+                    break
+                b *= 2
+        return self
+
+    def submit(
+        self,
+        graph: Union[Graph, np.ndarray],
+        want_certificate: bool = False,
+        timeout: Optional[float] = None,
+    ) -> "Future[ServiceResponse]":
+        """Enqueue one request; returns its future.
+
+        ``graph`` is a :class:`Graph` or a dense bool adjacency. With the
+        backlog at ``max_queue``: raises :class:`QueueFullError`
+        immediately when ``timeout`` is None, else waits up to ``timeout``
+        seconds for space. ``want_certificate`` attaches the detailed
+        (order, violation-count) witness to the response — costs one extra
+        single-graph pass on a certificate-capable backend.
+        """
+        if not isinstance(graph, Graph):
+            adj = np.asarray(graph, dtype=bool)
+            graph = Graph(n_nodes=adj.shape[0], adj=adj)
+        fut: Future = Future()
+        req = _Request(
+            graph=graph, future=fut, t_submit=time.perf_counter(),
+            want_certificate=want_certificate)
+        deadline = None if timeout is None else \
+            time.monotonic() + timeout
+        with self._lock:
+            while True:
+                if self._closed:
+                    raise ServiceClosedError("service is shut down")
+                if self._backlog < self.config.max_queue:
+                    break
+                if deadline is None:
+                    self.stats.n_rejected += 1
+                    raise QueueFullError(
+                        f"backlog at max_queue={self.config.max_queue}")
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    self.stats.n_rejected += 1
+                    raise QueueFullError(
+                        f"backlog still full after {timeout}s")
+                self._done_cv.wait(remaining)
+            self._backlog += 1
+            self.stats.n_submitted += 1
+            n_pad = bucket_npad(
+                max(graph.n_nodes, 1), self.engine.buckets)
+            self._pending[n_pad].append(req)
+            self._work_cv.notify_all()
+        return fut
+
+    def submit_many(
+        self,
+        graphs: Sequence[Union[Graph, np.ndarray]],
+        want_certificate: bool = False,
+        timeout: Optional[float] = None,
+    ) -> List["Future[ServiceResponse]"]:
+        """``submit`` each graph in order; returns the futures in order."""
+        return [
+            self.submit(g, want_certificate=want_certificate,
+                        timeout=timeout)
+            for g in graphs
+        ]
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Force-drain partial buckets and wait for an empty backlog.
+
+        Requests submitted *while* flushing are drained too (the force flag
+        stays up until the pending buckets empty). Raises TimeoutError if
+        the backlog has not cleared within ``timeout`` (default: the
+        config's ``drain_timeout_s``).
+        """
+        t = self.config.drain_timeout_s if timeout is None else timeout
+        deadline = time.monotonic() + t
+        with self._lock:
+            while self._backlog > 0:
+                # Re-assert every wakeup: admission clears the flag once
+                # pending empties, but a submit racing in right after
+                # would otherwise sit out its full batching window.
+                self._force_drain = True
+                self._work_cv.notify_all()
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(
+                        f"backlog {self._backlog} after {t}s flush")
+                self._done_cv.wait(remaining)
+            # Backlog empty => pending empty: restore windowed batching.
+            # (The admission loop's own reset only runs on a drain pass,
+            # which never happens when the last wakeup was in-flight work
+            # finishing rather than a bucket draining.)
+            self._force_drain = self._closed
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop admission and join the worker threads.
+
+        ``drain=True`` resolves every accepted future first; ``drain=False``
+        cancels requests still waiting in buckets (already-admitted units
+        still execute). Idempotent.
+        """
+        with self._lock:
+            if self._closed and not self._admitter.is_alive():
+                return
+            self._closed = True
+            if drain:
+                self._force_drain = True
+            else:
+                for dq in self._pending.values():
+                    while dq:
+                        req = dq.popleft()
+                        if req.future.cancel():
+                            self.stats.n_cancelled += 1
+                        self._backlog -= 1
+                self._done_cv.notify_all()
+            self._work_cv.notify_all()
+        t = self.config.drain_timeout_s if timeout is None else timeout
+        self._admitter.join(t)
+        self._executor.join(t)
+        if self._admitter.is_alive() or self._executor.is_alive():
+            raise TimeoutError(f"service threads alive after {t}s")
+
+    def __enter__(self) -> "AsyncChordalityEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown(drain=exc_type is None)
+
+    @property
+    def backlog(self) -> int:
+        """Requests submitted but not yet resolved (queued + in flight)."""
+        with self._lock:
+            return self._backlog
+
+    # -- admission loop ----------------------------------------------------
+    def _drainable(self, now: float):
+        """(bucket n_pads to drain now, seconds until the next deadline)."""
+        drain, next_wait = [], None
+        wait_s = self.config.max_wait_ms / 1e3
+        for n_pad, dq in self._pending.items():
+            if not dq:
+                continue
+            if self._force_drain or len(dq) >= self.config.max_batch:
+                drain.append(n_pad)
+                continue
+            deadline = dq[0].t_submit + wait_s
+            if now >= deadline:
+                drain.append(n_pad)
+            else:
+                remaining = deadline - now
+                if next_wait is None or remaining < next_wait:
+                    next_wait = remaining
+        return drain, next_wait
+
+    def _admission_loop(self) -> None:
+        while True:
+            admitted: List[_AdmittedUnit] = []
+            with self._lock:
+                while True:
+                    drain, next_wait = self._drainable(time.perf_counter())
+                    if drain:
+                        break
+                    if self._closed and not any(
+                            self._pending.values()):
+                        self._ready.put(None)     # executor stop sentinel
+                        return
+                    self._work_cv.wait(timeout=next_wait)
+                for n_pad in drain:
+                    admitted.extend(self._drain_bucket_locked(n_pad))
+                if self._force_drain and not any(self._pending.values()):
+                    self._force_drain = self._closed  # keep for shutdown
+            for au in admitted:
+                self._ready.put(au)
+
+    def _drain_bucket_locked(self, n_pad: int) -> List[_AdmittedUnit]:
+        """Pop up to max_batch live requests; route; skip cancelled ones."""
+        dq = self._pending[n_pad]
+        out: List[_AdmittedUnit] = []
+        reqs: List[_Request] = []
+        while dq and len(reqs) < self.config.max_batch:
+            req = dq.popleft()
+            if req.future.cancelled():
+                self.stats.n_cancelled += 1
+                self._backlog -= 1
+                self._done_cv.notify_all()
+                continue
+            reqs.append(req)
+        if not reqs:
+            return out
+        full = len(reqs) >= self.config.max_batch
+        reason = ("full" if full
+                  else "forced" if self._force_drain else "timeout")
+        self.stats.drain_reasons[reason] = \
+            self.stats.drain_reasons.get(reason, 0) + 1
+        unit = unit_for_chunk(
+            n_pad, len(reqs), self.config.max_batch)
+        try:
+            unit = self.engine.route_unit(unit, [r.graph for r in reqs])
+        except Exception as e:
+            # A misconfigured router must fail these requests, not kill
+            # the admission thread (which would strand the whole service).
+            for r in reqs:
+                if r.future.set_running_or_notify_cancel():
+                    r.future.set_exception(e)
+                    self.stats.n_failed += 1
+                else:
+                    self.stats.n_cancelled += 1
+                self._backlog -= 1
+            self._done_cv.notify_all()
+            return out
+        out.append(_AdmittedUnit(unit=unit, requests=reqs))
+        return out
+
+    # -- executor loop -----------------------------------------------------
+    def _executor_loop(self) -> None:
+        while True:
+            au = self._ready.get()
+            if au is None:
+                return
+            try:
+                self._execute(au)
+            except Exception as e:                  # pragma: no cover
+                # Last-resort guard: an executor death would strand every
+                # outstanding future and hang all future submits, so any
+                # escaped exception fails this unit's requests instead.
+                self._fail_unit(au, e)
+
+    def _fail_unit(self, au: _AdmittedUnit, exc: Exception) -> None:
+        with self._lock:
+            for r in au.requests:
+                if r.future.cancelled():
+                    self.stats.n_cancelled += 1
+                elif r.future.done():
+                    continue                        # already resolved
+                else:
+                    if r.future.set_running_or_notify_cancel():
+                        r.future.set_exception(exc)
+                        self.stats.n_failed += 1
+                    else:
+                        self.stats.n_cancelled += 1
+                self._backlog -= 1
+            self._done_cv.notify_all()
+
+    def _execute(self, au: _AdmittedUnit) -> None:
+        t_start = time.perf_counter()
+        live = [r.future.set_running_or_notify_cancel()
+                for r in au.requests]
+        graphs = [r.graph for r in au.requests]
+        try:
+            out, backend_name, exec_ms = self.engine.execute_unit(
+                au.unit, graphs)
+        except Exception as e:
+            with self._lock:
+                for r, ok in zip(au.requests, live):
+                    if ok:
+                        r.future.set_exception(e)
+                        self.stats.n_failed += 1
+                    else:
+                        self.stats.n_cancelled += 1
+                    self._backlog -= 1
+                self._done_cv.notify_all()
+            return
+        # Certificates are per-request extras: one failing must neither
+        # fail its unit-mates nor kill the executor thread.
+        certs: List[Optional[Certificate]] = []
+        cert_errs: List[Optional[Exception]] = []
+        for r, ok in zip(au.requests, live):
+            cert, err = None, None
+            if ok and r.want_certificate:
+                try:
+                    cert = self.engine.certificate(r.graph)
+                except Exception as e:
+                    err = e
+            certs.append(cert)
+            cert_errs.append(err)
+        with self._lock:
+            self.stats.n_units += 1
+            self.stats.exec_latencies_ms.append(exec_ms)
+            occ = sum(live)       # cancelled-after-drain slots don't count
+            self.stats.occupancy_histogram[occ] = \
+                self.stats.occupancy_histogram.get(occ, 0) + 1
+            for slot, (r, ok) in enumerate(zip(au.requests, live)):
+                if not ok:
+                    self.stats.n_cancelled += 1
+                elif cert_errs[slot] is not None:
+                    r.future.set_exception(cert_errs[slot])
+                    self.stats.n_failed += 1
+                else:
+                    queue_ms = (t_start - r.t_submit) * 1e3
+                    self.stats.queue_delays_ms.append(queue_ms)
+                    self.stats.backend_histogram[backend_name] = \
+                        self.stats.backend_histogram.get(
+                            backend_name, 0) + 1
+                    r.future.set_result(ServiceResponse(
+                        verdict=bool(out[slot]),
+                        certificate=certs[slot],
+                        queue_ms=queue_ms,
+                        exec_ms=exec_ms,
+                        backend=backend_name,
+                        n_pad=au.unit.n_pad,
+                        batch=au.unit.batch,
+                        occupancy=occ,
+                    ))
+                    self.stats.n_completed += 1
+                self._backlog -= 1
+            self._done_cv.notify_all()
+
+
+def gather(futures: Sequence["Future[ServiceResponse]"],
+           timeout: Optional[float] = None) -> List[ServiceResponse]:
+    """Resolve a batch of service futures in submission order."""
+    return [f.result(timeout=timeout) for f in futures]

@@ -62,6 +62,11 @@ class EngineStats:
         return float(np.median(self.unit_latencies_ms)) \
             if self.unit_latencies_ms else 0.0
 
+    @property
+    def p95_latency_ms(self) -> float:
+        return float(np.percentile(self.unit_latencies_ms, 95)) \
+            if self.unit_latencies_ms else 0.0
+
 
 @dataclasses.dataclass
 class EngineResult:
@@ -160,6 +165,20 @@ class ChordalityEngine:
             plan = self.router.annotate(plan, graphs)
         return plan
 
+    def route_unit(self, unit, graphs: Sequence[Graph]):
+        """Annotate one work unit with the router's per-unit choice.
+
+        Fixed-backend engines return the unit unchanged (the engine's own
+        backend applies); auto engines route it exactly like a unit inside
+        a full plan. This is the admission-time twin of :meth:`plan` —
+        the async service routes each drained bucket through it.
+        """
+        if self.router is None:
+            return unit
+        routed = self.router.annotate(
+            Plan(units=[unit], n_requests=len(unit.indices)), graphs)
+        return routed.units[0]
+
     def warmup(self, n_pads: Sequence[int], batch: Optional[int] = None):
         """Pre-compile the given buckets at one batch size (default
         ``max_batch`` — the steady-state full-chunk shape). Requires a
@@ -201,6 +220,25 @@ class ChordalityEngine:
         return self
 
     # -- execution ---------------------------------------------------------
+    def execute_unit(self, unit, graphs: Sequence[Graph]):
+        """Run one work unit: ``(verdicts, backend_name, exec_ms)``.
+
+        The single execution path shared by :meth:`run` and the async
+        service's executor thread: resolve the unit's backend, realize the
+        payload (dense or padded-CSR by capability), fetch the executable
+        from the compile cache, run it. ``verdicts`` align to
+        ``unit.indices`` order (padding slots already dropped); ``exec_ms``
+        covers the executable call only (realize/compile time is visible
+        through the cache counters instead).
+        """
+        backend = self._resolve(unit.backend)
+        payload = self._realize(backend, unit, graphs)
+        fn = self.cache.get(backend, unit.n_pad, unit.batch)
+        t1 = time.perf_counter()
+        out = fn(payload)
+        exec_ms = (time.perf_counter() - t1) * 1e3
+        return out[: len(unit.indices)], backend.name, exec_ms
+
     def run(self, graphs: Sequence[Graph]) -> EngineResult:
         """Test a stream of graphs; verdicts come back in request order."""
         plan = self.plan(graphs)
@@ -210,16 +248,11 @@ class ChordalityEngine:
         hits0, misses0 = self.cache.hits, self.cache.misses
         t0 = time.perf_counter()
         for unit in plan.units:
-            backend = self._resolve(unit.backend)
-            payload = self._realize(backend, unit, graphs)
-            fn = self.cache.get(backend, unit.n_pad, unit.batch)
-            t1 = time.perf_counter()
-            out = fn(payload)
-            stats.unit_latencies_ms.append(
-                (time.perf_counter() - t1) * 1e3)
-            verdicts[list(unit.indices)] = out[: len(unit.indices)]
-            stats.backend_histogram[backend.name] = (
-                stats.backend_histogram.get(backend.name, 0)
+            out, backend_name, exec_ms = self.execute_unit(unit, graphs)
+            stats.unit_latencies_ms.append(exec_ms)
+            verdicts[list(unit.indices)] = out
+            stats.backend_histogram[backend_name] = (
+                stats.backend_histogram.get(backend_name, 0)
                 + len(unit.indices))
         stats.wall_s = time.perf_counter() - t0
         stats.compile_hits = self.cache.hits - hits0

@@ -1,0 +1,89 @@
+"""Regression corpus: adversarial fixtures as permanent tier-1 cases.
+
+Every ``tests/corpus/*.json`` graph runs through every registered backend
+(verdict vs the fixture's expected answer AND vs the numpy_ref oracle) and
+through the async service in one batch. Past fuzz failures get minimized
+into this directory so they can never regress silently — see
+tests/corpus/README.md for the schema and TESTING.md for the workflow.
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.service import ServiceConfig
+from repro.engine import (
+    AsyncChordalityEngine,
+    ChordalityEngine,
+    backend_names,
+    gather,
+)
+from repro.graphs.structure import Graph
+
+CORPUS_DIR = pathlib.Path(__file__).parent / "corpus"
+CASES = sorted(CORPUS_DIR.glob("*.json"))
+assert CASES, "corpus directory must not be empty"
+
+
+def load_case(path: pathlib.Path):
+    spec = json.loads(path.read_text())
+    n = spec["n"]
+    adj = np.zeros((n, n), dtype=bool)
+    for u, v in spec["edges"]:
+        assert u != v, f"{spec['name']}: self-loop {u}"
+        assert 0 <= u < n and 0 <= v < n, f"{spec['name']}: edge OOB"
+        adj[u, v] = adj[v, u] = True
+    return Graph(n_nodes=n, adj=adj), bool(spec["chordal"]), spec["name"]
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return [load_case(p) for p in CASES]
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            cache[name] = ChordalityEngine(backend=name, max_batch=8)
+        return cache[name]
+
+    return get
+
+
+def test_fixture_names_match_filenames(corpus):
+    for path, (_, _, name) in zip(CASES, corpus):
+        assert path.stem == name, f"{path.name} declares name={name!r}"
+
+
+@pytest.mark.parametrize("backend", sorted(backend_names()))
+def test_corpus_verdicts_per_backend(backend, corpus, engines):
+    graphs = [g for g, _, _ in corpus]
+    want = np.array([chordal for _, chordal, _ in corpus])
+    got = engines(backend).run(graphs).verdicts
+    bad = [corpus[i][2] for i in np.nonzero(got != want)[0]]
+    assert not bad, f"{backend} disagrees on corpus cases: {bad}"
+
+
+def test_corpus_oracle_certificates_self_consistent(corpus, engines):
+    """numpy_ref's own certificate must match the fixture labels — guards
+    the fixtures themselves against mislabeled expectations."""
+    eng = engines("numpy_ref")
+    for g, chordal, name in corpus:
+        cert = eng.certificate(g)
+        assert cert.chordal == chordal, name
+        assert (cert.n_violations == 0) == chordal, name
+
+
+def test_corpus_through_async_service(corpus):
+    graphs = [g for g, _, _ in corpus]
+    want = np.array([chordal for _, chordal, _ in corpus])
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=1.0)
+    with AsyncChordalityEngine(config=cfg) as svc:      # auto routing
+        resps = gather(svc.submit_many(graphs), timeout=300)
+    got = np.array([r.verdict for r in resps])
+    bad = [corpus[i][2] for i in np.nonzero(got != want)[0]]
+    assert not bad, f"async service disagrees on corpus cases: {bad}"

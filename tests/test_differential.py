@@ -1,0 +1,243 @@
+"""Differential harness: every registered backend vs the numpy_ref oracle.
+
+Strategy (TESTING.md): ``numpy_ref`` — the dense host twin with no jit, no
+batching, no padding tricks — is the oracle. Hypothesis draws graphs from
+the families where chordality testers historically break (density sweeps
+around the ER threshold, k-trees = guaranteed chordal, long cycles ± a few
+chords = guaranteed non-chordal until heavily chorded, disconnected
+unions), and every other backend must agree on the verdict *and* on the
+PEO-violation count (the quantitative witness — all pipelines produce
+bit-identical LexBFS orders, so the count must match exactly, not just its
+zero-ness). The same assertions then run through the async service under
+concurrent submission: batching, routing, and thread handoff must not
+change a single answer.
+
+Heavier sweeps (hypothesis over the two slow specialist backends) carry
+the ``slow`` marker; the fixed-zoo pass over all six backends stays tier-1.
+"""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import generators as G
+from repro.configs.service import ServiceConfig
+from repro.engine import (
+    AsyncChordalityEngine,
+    ChordalityEngine,
+    backend_names,
+    gather,
+)
+from repro.graphs.structure import Graph
+
+# Keep every draw inside the 16/32/64 buckets: the jit backends compile a
+# handful of shapes total across the whole module.
+MAX_N = 60
+
+# Module-scope engines so compile caches persist across examples.
+_ENGINES = {}
+
+
+def _engine(backend: str) -> ChordalityEngine:
+    if backend not in _ENGINES:
+        _ENGINES[backend] = ChordalityEngine(backend=backend, max_batch=8)
+    return _ENGINES[backend]
+
+
+def _oracle(g: Graph):
+    """(verdict, n_violations) from the numpy reference certificate."""
+    c = _engine("numpy_ref").certificate(g)
+    return c.chordal, c.n_violations
+
+
+def _assert_agrees(backend: str, g: Graph):
+    want_v, want_viol = _oracle(g)
+    c = _engine(backend).certificate(g)
+    assert c.chordal == want_v, (
+        f"{backend} verdict {c.chordal} != oracle {want_v} "
+        f"(n={g.n_nodes}, m={g.n_edges})")
+    assert c.n_violations == want_viol, (
+        f"{backend} violations {c.n_violations} != oracle {want_viol} "
+        f"(n={g.n_nodes}, m={g.n_edges})")
+
+
+# ---------------------------------------------------------------------------
+# Graph families (generators live in repro.core.generators; these wrappers
+# only fix the size envelope).
+# ---------------------------------------------------------------------------
+def er_graph(n, p_milli, seed):
+    return G.gnp(n, p_milli / 1000.0, seed=seed)
+
+
+def ktree_graph(n, k, seed):
+    return G.k_tree(n, k=min(k, n - 1), seed=seed)
+
+
+def cycle_with_chords(n, n_chords, seed):
+    return G.long_cycle(n, n_chords=n_chords, seed=seed)
+
+
+def disconnected_union(n_a, n_b, p_milli, seed):
+    """Block-diagonal union of an ER graph and a clique: chordality is
+    component-wise, so verdict = ER component's verdict."""
+    a = G.gnp(n_a, p_milli / 1000.0, seed=seed).with_dense().adj
+    b = G.clique(n_b).with_dense().adj
+    n = n_a + n_b
+    adj = np.zeros((n, n), dtype=bool)
+    adj[:n_a, :n_a] = a
+    adj[n_a:, n_a:] = b
+    return Graph(n_nodes=n, adj=adj)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps on the router's candidate backends (the fast three).
+# ---------------------------------------------------------------------------
+FAST_BACKENDS = ("jax_faithful", "jax_fast", "csr")
+
+
+@pytest.mark.parametrize("backend", FAST_BACKENDS)
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, MAX_N), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_er_density_sweep_matches_oracle(backend, n, p_milli, seed):
+    _assert_agrees(backend, er_graph(n, p_milli, seed))
+
+
+@pytest.mark.parametrize("backend", FAST_BACKENDS)
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, MAX_N), k=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_ktrees_are_chordal_everywhere(backend, n, k, seed):
+    g = ktree_graph(n, k, seed)
+    want_v, _ = _oracle(g)
+    assert want_v, "k-tree generator must produce chordal graphs"
+    _assert_agrees(backend, g)
+
+
+@pytest.mark.parametrize("backend", FAST_BACKENDS)
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(4, MAX_N), n_chords=st.integers(0, 4),
+       seed=st.integers(0, 10_000))
+def test_long_cycles_with_chords_match_oracle(backend, n, n_chords, seed):
+    _assert_agrees(backend, cycle_with_chords(n, n_chords, seed))
+
+
+@pytest.mark.parametrize("backend", FAST_BACKENDS)
+@settings(max_examples=15, deadline=None)
+@given(n_a=st.integers(4, 24), n_b=st.integers(1, 12),
+       p_milli=st.integers(0, 700), seed=st.integers(0, 10_000))
+def test_disconnected_unions_match_oracle(backend, n_a, n_b, p_milli, seed):
+    _assert_agrees(backend, disconnected_union(n_a, n_b, p_milli, seed))
+
+
+# ---------------------------------------------------------------------------
+# All six registered backends on one deterministic family sampler (the
+# specialist backends are orders slower per graph; a fixed zoo keeps this
+# tier-1). sharded has no certificate — verdict-only via the engine.
+# ---------------------------------------------------------------------------
+def _family_zoo():
+    zoo = []
+    for i, n in enumerate((5, 17, 33, 47)):
+        zoo.append(er_graph(n, 80 + 200 * i, seed=i))
+        zoo.append(ktree_graph(n, k=2 + (i % 3), seed=i))
+        zoo.append(cycle_with_chords(n, n_chords=i, seed=i))
+        zoo.append(disconnected_union(n, 4 + i, 300, seed=i))
+    return zoo
+
+
+@pytest.fixture(scope="module")
+def zoo_oracle():
+    zoo = _family_zoo()
+    return zoo, ChordalityEngine(
+        backend="numpy_ref", max_batch=8).run(zoo).verdicts
+
+
+@pytest.mark.parametrize(
+    "backend", [b for b in backend_names() if b != "numpy_ref"])
+def test_every_backend_matches_oracle_on_family_zoo(backend, zoo_oracle):
+    zoo, want = zoo_oracle
+    got = _engine(backend).run(zoo).verdicts
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize(
+    "backend",
+    [b for b in backend_names()
+     if b not in ("numpy_ref", "sharded")])   # sharded: no certificate
+def test_certificate_backends_match_violation_counts(backend, zoo_oracle):
+    zoo, _ = zoo_oracle
+    for g in zoo[::3]:                        # every 3rd: bounded runtime
+        _assert_agrees(backend, g)
+
+
+# ---------------------------------------------------------------------------
+# Differential through the async service under concurrent submission.
+# ---------------------------------------------------------------------------
+def test_async_service_matches_oracle_under_concurrency(zoo_oracle):
+    zoo, want = zoo_oracle
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=2.0, max_queue=512)
+    with AsyncChordalityEngine(config=cfg) as svc:   # auto routing
+        futures = [None] * len(zoo)
+
+        def worker(tid, stride=4):
+            for i in range(tid, len(zoo), stride):
+                futures[i] = svc.submit(zoo[i])
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        resps = gather(futures, timeout=300)
+    got = np.array([r.verdict for r in resps])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_async_certificates_match_oracle_counts(zoo_oracle):
+    zoo, _ = zoo_oracle
+    picks = zoo[::5]
+    cfg = ServiceConfig(max_batch=4, max_wait_ms=1.0)
+    with AsyncChordalityEngine(config=cfg) as svc:
+        resps = gather(
+            svc.submit_many(picks, want_certificate=True), timeout=300)
+    for g, r in zip(picks, resps):
+        want_v, want_viol = _oracle(g)
+        assert r.verdict == want_v
+        assert r.certificate.chordal == want_v
+        assert r.certificate.n_violations == want_viol
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep over the slow specialists — opt-in (slow marker).
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ("pallas_peo",))
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(4, 40), p_milli=st.integers(0, 800),
+       seed=st.integers(0, 10_000))
+def test_pallas_er_sweep_matches_oracle(backend, n, p_milli, seed):
+    _assert_agrees(backend, er_graph(n, p_milli, seed))
+
+
+@pytest.mark.slow
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(4, 40), n_chords=st.integers(0, 3),
+       seed=st.integers(0, 10_000))
+def test_sharded_cycle_sweep_matches_oracle(n, n_chords, seed):
+    g = cycle_with_chords(n, n_chords, seed)
+    want = _engine("numpy_ref").run([g]).verdicts
+    got = _engine("sharded").run([g]).verdicts
+    np.testing.assert_array_equal(got, want)
+
+
+# Graph dataclass sanity for the union builder (dense-only graphs flow
+# through the CSR realize path too — caught a packing assumption once).
+def test_union_builder_exposes_consistent_views():
+    g = disconnected_union(6, 3, 500, seed=1)
+    assert g.n_nodes == 9
+    gc = g.with_csr()
+    assert dataclasses.replace(gc).indptr[-1] == g.n_edges

@@ -155,6 +155,73 @@ def test_custom_router_overrides_choice():
     assert res.verdicts.tolist() == [False, True]
 
 
+# ---------------------------------------------------------------------------
+# Degenerate inputs: the cost model must not extrapolate below its fitted
+# support — tiny n, zero-edge graphs, and batch=1 route like the nearest
+# measured regime (ISSUE 3 satellite; clamp_features).
+# ---------------------------------------------------------------------------
+def test_choose_clamps_n_below_fitted_floor():
+    r = Router()
+    lo, _ = r.fit_n_range
+    floor_choice = r.choose(lo, 0.0, 1)
+    for n in (1, 2, 3, 5, lo - 1):
+        assert r.choose(n, 0.0, 1) == floor_choice
+    # Unclamped extrapolation used to hand these to csr; the measured
+    # floor regime belongs to the host reference (no dispatch overhead).
+    assert floor_choice == "numpy_ref"
+
+
+def test_choose_clamps_degenerate_density_and_batch():
+    r = Router()
+    # density > 1 (bogus caller math) and batch=0 must not blow up, and
+    # must agree with their clamped twins.
+    assert r.choose(4, 5.0, 0) == r.choose(16, 1.0, 1)
+    assert r.choose(64, float("nan"), 1) == r.choose(64, 0.0, 1)
+    assert r.choose(10 ** 9, 0.0, 8) == r.choose(r.fit_n_range[1], 0.0, 8)
+
+
+def test_clamp_features_bounds():
+    r = Router()
+    lo, hi = r.fit_n_range
+    assert r.clamp_features(1, -0.5, 0) == (lo, 0.0, 1)
+    assert r.clamp_features(10 ** 9, 2.0, 7) == (hi, 1.0, 7)
+    n, d, b = r.clamp_features(64, 0.25, 4)
+    assert (n, d, b) == (64, 0.25, 4)      # in-range points untouched
+
+
+def test_router_rejects_invalid_fit_range():
+    with pytest.raises(ValueError, match="fit_n_range"):
+        Router(fit_n_range=(0, 16))
+    with pytest.raises(ValueError, match="fit_n_range"):
+        Router(fit_n_range=(32, 16))
+
+
+def test_degenerate_streams_execute_on_routed_backends():
+    # n smaller than every bucket, zero-edge graphs, batch=1 — end to end
+    # through the auto engine, agreeing with the reference.
+    graphs = [
+        G.cycle(3),                                    # n=3 < smallest bucket
+        Graph(n_nodes=2, adj=np.zeros((2, 2), dtype=bool)),   # zero edges
+        Graph(n_nodes=1, adj=np.zeros((1, 1), dtype=bool)),   # single vertex
+        Graph(n_nodes=5, edges=np.zeros((2, 0), dtype=np.int32)),  # edge view
+    ]
+    auto = ChordalityEngine(backend="auto", max_batch=4)
+    ref = ChordalityEngine(backend="numpy_ref", max_batch=4)
+    for g in graphs:                                   # batch=1 plans
+        np.testing.assert_array_equal(
+            auto.run([g]).verdicts, ref.run([g]).verdicts)
+    res = auto.run(graphs)
+    np.testing.assert_array_equal(res.verdicts, ref.run(graphs).verdicts)
+    for unit in res.plan.units:
+        assert unit.backend in auto.router.candidates
+
+
+def test_zero_edge_certificate_routes_to_capable_backend():
+    eng = ChordalityEngine(backend="auto")
+    cert = eng.certificate(np.zeros((3, 3), dtype=bool))
+    assert cert.chordal and cert.n_violations == 0
+
+
 def test_routing_density_uses_edge_views_without_densifying():
     # Graphs that carry only an edge list: planning must not densify them.
     g = G.sparse_erdos_renyi(512, c=6, seed=0)

@@ -159,6 +159,47 @@ def bench_engine_amortization(
     return rows
 
 
+def bench_witness(
+    ns=(64, 256), densities=(0.05, 0.3), batches=(1, 16),
+    requests=16, repeats=2, backend="jax_fast",
+) -> List[Dict]:
+    """Certificate overhead: verdict-only vs full-witness engine runs.
+
+    Same warm engine, same plan, two executables per bucket: the verdict
+    program and the fused witness program (verdict + clique tree +
+    treewidth + optimal coloring or chordless cycle, ``repro.witness``).
+    The derived column reports the witness pass's overhead factor — the
+    price of making every answer independently checkable — across
+    n × density × batch (batch amortizes the fixed dispatch for both).
+    """
+    from benchmarks.paper_tables import time_fn
+    from repro.core import generators as G
+    from repro.engine import ChordalityEngine
+
+    rows = []
+    for n in ns:
+        for d in densities:
+            graphs = [G.gnp(n, d, seed=s) for s in range(requests)]
+            n_chordal = 0
+            for b in batches:
+                eng = ChordalityEngine(backend=backend, max_batch=b)
+                eng.run(graphs)                      # compile: verdict
+                res = eng.run(graphs, witness=True)  # compile: witness
+                n_chordal = int(res.verdicts.sum())
+                t_v = time_fn(lambda: eng.run(graphs), repeats)
+                t_w = time_fn(
+                    lambda: eng.run(graphs, witness=True), repeats)
+                rows.append({
+                    "name": f"witness_{backend}_n{n}_d{int(d * 100)}_B{b}",
+                    "us_per_call": t_w * 1e3,
+                    "derived": (
+                        f"verdict_only_us={t_v * 1e3:.1f};"
+                        f"overhead_x={t_w / t_v:.2f};"
+                        f"chordal={n_chordal}/{requests}"),
+                })
+    return rows
+
+
 def bench_service(
     n=256, requests=96, max_batch=32, c=6.0,
     waits_ms=(0.0, 2.0, 8.0), offered_gps=(0, 200),

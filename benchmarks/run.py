@@ -24,7 +24,7 @@ def main(argv=None) -> int:
                     help="minimal sizes for CI smoke (implies --quick)")
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
-                         "kernels,lexbfs,engine,router,service")
+                         "kernels,lexbfs,engine,router,service,witness")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -33,7 +33,7 @@ def main(argv=None) -> int:
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs", "engine", "router", "service"]
+         "lexbfs", "engine", "router", "service", "witness"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -128,6 +128,19 @@ def main(argv=None) -> int:
             emit(kernel_bench.bench_service(
                 n=256, requests=96, max_batch=32,
                 waits_ms=(0.0, 2.0, 8.0), offered_gps=(0, 200)))
+    if "witness" in which:
+        print("# witness bench - verdict-only vs +certificate overhead",
+              file=sys.stderr)
+        if args.smoke:
+            emit(kernel_bench.bench_witness(
+                ns=(64,), densities=(0.1,), batches=(1, 8),
+                requests=8, repeats=1))
+        elif args.quick:
+            emit(kernel_bench.bench_witness(
+                ns=(64, 128), densities=(0.05, 0.3), batches=(1, 8),
+                requests=12))
+        else:
+            emit(kernel_bench.bench_witness())
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

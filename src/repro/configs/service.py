@@ -12,7 +12,7 @@ service benchmark (``benchmarks.run --tables service``) sweeps
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +28,12 @@ class ServiceConfig:
         oldest request has waited this long, full or not. 0 disables
         batching-by-time (every admission pass drains what it sees).
       backend: engine backend name; ``"auto"`` routes per drained unit.
+      deadline_ms: default per-request deadline. A request still waiting
+        in the admission queue this long after submission is dropped —
+        its future is cancelled and ``ServiceStats.n_expired`` counts it.
+        None (default) disables expiry; ``submit(deadline_ms=...)``
+        overrides per request. Expiry applies only while queued: a
+        request already drained into a work unit always executes.
       drain_timeout_s: default wait bound for ``flush``/``shutdown``.
     """
 
@@ -35,6 +41,7 @@ class ServiceConfig:
     max_batch: int = 32
     max_wait_ms: float = 2.0
     backend: str = "auto"
+    deadline_ms: Optional[float] = None
     drain_timeout_s: float = 60.0
 
     def __post_init__(self):
@@ -45,6 +52,10 @@ class ServiceConfig:
         if self.max_wait_ms < 0:
             raise ValueError(
                 f"max_wait_ms must be >= 0, got {self.max_wait_ms}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive or None, "
+                f"got {self.deadline_ms}")
 
 
 #: Standard operating points. ``throughput`` holds buckets longer for

@@ -7,7 +7,13 @@ streams into fixed-shape work units (dense or padded-CSR), a cost-model
 router for adaptive backend selection, a session layer with throughput
 and latency stats, and an async serving layer
 (:class:`AsyncChordalityEngine`, DESIGN.md §9) that micro-batches a live
-request stream onto the same planner/cache/router. Direct use of the ``repro.core`` multi-entry functions
+request stream onto the same planner/cache/router — with per-request
+deadlines and an ``asubmit`` asyncio adapter. Witness runs
+(``run(..., witness=True)``, ``submit(want_witness=True)``) attach
+independently checkable certificates from ``repro.witness`` (clique
+tree / treewidth / optimal coloring, or an induced chordless cycle —
+DESIGN.md §10), compiled and cached per bucket exactly like verdict
+programs. Direct use of the ``repro.core`` multi-entry functions
 is deprecated for serving/benchmark callers — go through
 :class:`ChordalityEngine`.
 

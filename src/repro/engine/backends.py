@@ -14,18 +14,23 @@ capability flags, and exposes exactly two operations:
 * ``certificate(adj)`` — the detailed single-graph answer
   ``(chordal, order, n_violations)`` for backends that can produce one.
 
+Witness-capable backends additionally expose ``compile_witness_batch`` —
+the same fixed-shape contract, but the executable returns a
+``repro.witness.WitnessBatch`` (verdict + clique tree/treewidth/coloring
+or chordless-cycle counterexample in one pass, see DESIGN.md §10).
+
 Registered backends:
 
-========== ======== ======= ============ ====== ==============================
-name       batched  device  certificate  sparse implementation
-========== ======== ======= ============ ====== ==============================
-numpy_ref  no       no      yes          no     lexbfs_numpy_dense + peo numpy
-jax_faithful yes    yes     yes          no     lexbfs (§6.1) + peo_check
-jax_fast   yes      yes     yes          no     lexbfs_fast (lazy compaction)
-pallas_peo no       yes     yes          no     lexbfs + fused Pallas PEO
-sharded    yes      yes     no           no     pjit over a device mesh
-csr        yes      yes     yes          yes    repro.sparse CSR pipelines
-========== ======== ======= ============ ====== ==============================
+========== ======== ======= ============ ====== ======= ====================
+name       batched  device  certificate  sparse witness implementation
+========== ======== ======= ============ ====== ======= ====================
+numpy_ref  no       no      yes          no     yes     lexbfs_numpy_dense
+jax_faithful yes    yes     yes          no     yes     lexbfs (§6.1)
+jax_fast   yes      yes     yes          no     yes     lexbfs_fast (lazy)
+pallas_peo no       yes     yes          no     yes     lexbfs + Pallas PEO
+sharded    yes      yes     no           no     no      pjit over a mesh
+csr        yes      yes     yes          yes    yes     repro.sparse CSR
+========== ======== ======= ============ ====== ======= ====================
 
 ``sparse`` backends consume :class:`repro.sparse.packing.PackedCSRBatch`
 payloads (the planner realizes those without densifying); every backend's
@@ -48,6 +53,7 @@ class BackendCaps:
     device: bool        # runs under jit on the accelerator
     certificate: bool   # can produce (order, n_violations) witnesses
     sparse: bool = False  # consumes PackedCSRBatch work units (O(N+M) path)
+    witness: bool = False  # compiles WitnessBatch executables (repro.witness)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +90,21 @@ class ChordalityBackend:
         raise NotImplementedError(
             f"backend {self.name!r} does not produce certificates")
 
+    def compile_witness_batch(self, n_pad: int, batch: int):
+        """Executable for the witness pass at one fixed shape.
+
+        Contract: ``fn(payload, n_nodes) -> repro.witness.WitnessBatch``
+        where ``payload`` follows the backend's batch contract (dense
+        host array, or PackedCSRBatch for sparse backends) and
+        ``n_nodes`` is the (batch,) vector of logical sizes. Entries may
+        be 0 — padding slots are passed as 0 and must come back with
+        empty structures. Backends carrying the ``witness`` capability
+        must implement this; the planner's compile cache stores the
+        result under ``kind="witness"``.
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} does not produce witnesses")
+
 
 # ---------------------------------------------------------------------------
 # Implementations (thin adapters over repro.core / repro.kernels).
@@ -94,7 +115,8 @@ class NumpyRefBackend(ChordalityBackend):
     so the planner treats every backend uniformly."""
 
     name = "numpy_ref"
-    caps = BackendCaps(batched=False, device=False, certificate=True)
+    caps = BackendCaps(batched=False, device=False, certificate=True,
+                       witness=True)
 
     def compile_batch(self, n_pad, batch):
         from repro.core.lexbfs import lexbfs_numpy_dense
@@ -116,6 +138,17 @@ class NumpyRefBackend(ChordalityBackend):
         order = lexbfs_numpy_dense(np.asarray(adj, dtype=bool))
         viol = peo_violations_numpy(adj, order)
         return viol == 0, np.asarray(order), viol
+
+    def compile_witness_batch(self, n_pad, batch):
+        from repro.core.lexbfs import lexbfs_numpy_dense
+        from repro.witness import witness_batch_numpy
+
+        def run(adjs, n_nodes):
+            adjs = np.asarray(adjs, dtype=bool)
+            orders = np.stack([lexbfs_numpy_dense(a) for a in adjs])
+            return witness_batch_numpy(adjs, orders, n_nodes)
+
+        return run
 
 
 class _JaxBackendBase(ChordalityBackend):
@@ -151,12 +184,18 @@ class _JaxBackendBase(ChordalityBackend):
         viol = int(peo_violations(jnp.asarray(adj), order))
         return viol == 0, np.asarray(order), viol
 
+    def compile_witness_batch(self, n_pad, batch):
+        from repro.witness import make_witness_kernel
+
+        return make_witness_kernel(self._order_fn())
+
 
 class JaxFaithfulBackend(_JaxBackendBase):
     """Paper-faithful pipeline: per-iteration rank compaction (§6.1+§6.2)."""
 
     name = "jax_faithful"
-    caps = BackendCaps(batched=True, device=True, certificate=True)
+    caps = BackendCaps(batched=True, device=True, certificate=True,
+                       witness=True)
 
     def _order_fn(self):
         from repro.core.lexbfs import lexbfs
@@ -169,7 +208,8 @@ class JaxFastBackend(_JaxBackendBase):
     to jax_faithful — asserted in tests/test_engine_backends.py."""
 
     name = "jax_fast"
-    caps = BackendCaps(batched=True, device=True, certificate=True)
+    caps = BackendCaps(batched=True, device=True, certificate=True,
+                       witness=True)
 
     def _order_fn(self):
         from repro.core.lexbfs import lexbfs_fast
@@ -183,10 +223,14 @@ class PallasPeoBackend(ChordalityBackend):
     Not natively batched: the kernel's grid is per-graph, so the batch
     contract is met with a host loop over jit'd single-graph calls (one
     compile per n_pad, amortized by the cache like every other backend).
+    The witness pass has no fused-kernel specialization — it uses the
+    shared ``repro.witness`` device kernel over the same ``lexbfs`` orders
+    the Pallas verdict path consumes.
     """
 
     name = "pallas_peo"
-    caps = BackendCaps(batched=False, device=True, certificate=True)
+    caps = BackendCaps(batched=False, device=True, certificate=True,
+                       witness=True)
 
     def __init__(self, interpret: bool = True):
         self._interpret = interpret
@@ -219,6 +263,12 @@ class PallasPeoBackend(ChordalityBackend):
         order = lexbfs(a)
         viol = int(peo_violations_count(a, order, interpret=self._interpret))
         return viol == 0, np.asarray(order), viol
+
+    def compile_witness_batch(self, n_pad, batch):
+        from repro.core.lexbfs import lexbfs
+        from repro.witness import make_witness_kernel
+
+        return make_witness_kernel(lexbfs)
 
 
 class ShardedBackend(ChordalityBackend):
@@ -286,11 +336,17 @@ class CSRBackend(ChordalityBackend):
 
     ``pipeline="auto"`` (default) picks ``host`` on CPU, ``device``
     otherwise.
+
+    Witness pass: orders come from the CSR LexBFS host twin
+    (bit-identical to every other pipeline); the clique/coloring/cycle
+    extraction then runs on a densified view — witness structures
+    (membership matrices, intersection weights) are Θ(n²) objects anyway,
+    so the O(N+M) operand advantage does not extend to them.
     """
 
     name = "csr"
     caps = BackendCaps(batched=True, device=True, certificate=True,
-                       sparse=True)
+                       sparse=True, witness=True)
 
     def __init__(self, pipeline: str = "auto"):
         if pipeline not in ("auto", "host", "device"):
@@ -331,6 +387,25 @@ class CSRBackend(ChordalityBackend):
 
             rp, ci = packed.device_arrays()
             return np.asarray(csr_verdicts_batched(rp, ci, packed.deg_pad))
+
+        return run
+
+    def compile_witness_batch(self, n_pad, batch):
+        from repro.sparse import lexbfs_csr_numpy_batch
+        from repro.witness import witness_batch_numpy
+
+        def run(payload, n_nodes):
+            packed = self._pack(payload, n_pad)
+            orders = lexbfs_csr_numpy_batch(
+                packed.row_ptr, packed.col_idx, packed.deg_pad)
+            b, np1 = packed.row_ptr.shape
+            adjs = np.zeros((b, np1 - 1, np1 - 1), dtype=bool)
+            for i in range(b):
+                nnz = int(packed.row_ptr[i, -1])
+                deg = np.diff(packed.row_ptr[i])
+                rows = np.repeat(np.arange(np1 - 1), deg)
+                adjs[i, rows, packed.col_idx[i, :nnz]] = True
+            return witness_batch_numpy(adjs, orders, n_nodes)
 
         return run
 

@@ -155,27 +155,38 @@ def realize_unit_csr(unit: WorkUnit, graphs: Sequence[Graph]):
 
 
 class CompileCache:
-    """Executable cache keyed on (backend name, n_pad, batch).
+    """Executable cache keyed on (backend name, kind, n_pad, batch).
 
-    A miss calls ``backend.compile_batch`` (tracing + XLA compile for the
-    device backends); a hit reuses the executable. The hit/miss counters
-    feed the engine's stats — in steady-state serving, misses stay flat.
+    ``kind`` selects the executable family: ``"verdict"`` programs come
+    from ``backend.compile_batch``, ``"witness"`` programs (verdict +
+    certificate extraction in one fused pass, see ``repro.witness``) from
+    ``backend.compile_witness_batch``. Both ride the same bucket grid, so
+    enabling witnesses adds at most one extra compile per bucket shape. A
+    miss pays tracing + XLA compile for the device backends; a hit reuses
+    the executable. The hit/miss counters feed the engine's stats — in
+    steady-state serving, misses stay flat.
     """
 
     def __init__(self):
-        self._fns: Dict[Tuple[str, int, int], Callable] = {}
+        self._fns: Dict[Tuple[str, str, int, int], Callable] = {}
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
         return len(self._fns)
 
-    def get(self, backend, n_pad: int, batch: int) -> Callable:
-        key = (backend.name, n_pad, batch)
+    def get(self, backend, n_pad: int, batch: int,
+            kind: str = "verdict") -> Callable:
+        key = (backend.name, kind, n_pad, batch)
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
-            fn = backend.compile_batch(n_pad, batch)
+            if kind == "verdict":
+                fn = backend.compile_batch(n_pad, batch)
+            elif kind == "witness":
+                fn = backend.compile_witness_batch(n_pad, batch)
+            else:
+                raise ValueError(f"unknown executable kind {kind!r}")
             self._fns[key] = fn
         else:
             self.hits += 1

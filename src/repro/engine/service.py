@@ -20,12 +20,29 @@ that gap with the classic serving triad:
   compiled-shape universe is identical to offline runs.
 
 Each ``submit`` returns a ``concurrent.futures.Future`` resolving to a
-:class:`ServiceResponse` (verdict, optional certificate, queue/execution
-latency, and where it ran). Futures support cancellation until their unit
-starts executing. ``flush`` force-drains partial buckets and waits for an
-empty backlog; ``shutdown`` (also via ``with``) stops admission, optionally
-drains, and joins both threads. :class:`ServiceStats` aggregates queue-delay
-percentiles, the batch-occupancy histogram, and the backend mix.
+:class:`ServiceResponse` (verdict, optional certificate, optional checkable
+witness, queue/execution latency, and where it ran). Futures support
+cancellation until their unit starts executing. ``flush`` force-drains
+partial buckets and waits for an empty backlog; ``shutdown`` (also via
+``with``) stops admission, optionally drains, and joins both threads.
+:class:`ServiceStats` aggregates queue-delay percentiles, the
+batch-occupancy histogram, and the backend mix.
+
+Three client-surface extras on top of the triad:
+
+* **witnesses** — ``submit(want_witness=True)`` resolves the future with a
+  ``repro.witness.WitnessResult`` (clique tree / treewidth / coloring, or
+  a chordless-cycle counterexample). If any request in a drained unit
+  wants one, the whole unit runs the fused witness executable — same
+  buckets, same compile cache (``kind="witness"``).
+* **deadlines** — ``ServiceConfig.deadline_ms`` (or per-request
+  ``submit(deadline_ms=...)``): requests still in the admission queue past
+  their deadline are dropped, their futures cancelled,
+  ``ServiceStats.n_expired`` incremented. Under overload this sheds the
+  stalest work instead of serving answers nobody is waiting for anymore.
+* **asyncio** — :meth:`AsyncChordalityEngine.asubmit` wraps the
+  thread-based future for ``await``-style clients (coroutine servers,
+  ``asyncio.gather`` fan-in); see examples/serve_chordality.py.
 """
 from __future__ import annotations
 
@@ -60,12 +77,13 @@ class ServiceResponse:
 
     verdict: bool
     certificate: Optional[Certificate]   # populated iff want_certificate
-    queue_ms: float      # submit -> unit execution start
-    exec_ms: float       # the unit executable call (shared across its batch)
-    backend: str         # backend the request's unit ran on
-    n_pad: int           # padding bucket the request landed in
-    batch: int           # compiled batch dimension of its unit
-    occupancy: int       # real requests in the unit (rest = padding slots)
+    witness: Optional[object] = None     # WitnessResult iff want_witness
+    queue_ms: float = 0.0  # submit -> unit execution start
+    exec_ms: float = 0.0   # the unit executable call (shared across batch)
+    backend: str = ""      # backend the request's unit ran on
+    n_pad: int = 0         # padding bucket the request landed in
+    batch: int = 0         # compiled batch dimension of its unit
+    occupancy: int = 0     # real requests in the unit (rest = padding)
 
 
 @dataclasses.dataclass
@@ -74,6 +92,8 @@ class _Request:
     future: Future
     t_submit: float
     want_certificate: bool
+    want_witness: bool = False
+    deadline: Optional[float] = None     # absolute perf_counter seconds
 
 
 @dataclasses.dataclass
@@ -93,6 +113,7 @@ class ServiceStats:
     n_cancelled: int = 0
     n_rejected: int = 0
     n_failed: int = 0
+    n_expired: int = 0     # dropped in-queue past their deadline
     n_units: int = 0
     queue_delays_ms: List[float] = dataclasses.field(default_factory=list)
     exec_latencies_ms: List[float] = dataclasses.field(default_factory=list)
@@ -184,6 +205,7 @@ class AsyncChordalityEngine:
         self._pending: Dict[int, Deque[_Request]] = \
             collections.defaultdict(collections.deque)
         self._backlog = 0          # submitted, not yet resolved
+        self._n_deadlined = 0      # queued requests carrying a deadline
         self._closed = False
         self._force_drain = False
         self._ready: "queue.Queue[Optional[_AdmittedUnit]]" = queue.Queue()
@@ -197,7 +219,8 @@ class AsyncChordalityEngine:
         self._executor.start()
 
     # -- client surface ----------------------------------------------------
-    def warmup(self, sample: Sequence[Graph]) -> "AsyncChordalityEngine":
+    def warmup(self, sample: Sequence[Graph],
+               witness: bool = False) -> "AsyncChordalityEngine":
         """Pre-compile every shape traffic drawn like ``sample`` can hit.
 
         The synchronous engine warms a *plan* — full-occupancy units. A
@@ -208,13 +231,16 @@ class AsyncChordalityEngine:
         otherwise the first minutes of traffic pay the jit compiles as
         queue delay. Only call while the service is idle — it drives the
         inner engine's compile cache from the caller's thread.
+        ``witness=True`` additionally warms the fused witness executables
+        (for traffic that will ask ``want_witness``).
         """
         by_bucket = bucket_graphs(sample, self.engine.buckets)
         for _, idxs in sorted(by_bucket.items()):
             b = 1
             while True:
                 chunk = [sample[i] for i in idxs[:b]]
-                self.engine.warmup_plan(self.engine.plan(chunk), chunk)
+                self.engine.warmup_plan(
+                    self.engine.plan(chunk), chunk, witness=witness)
                 if b >= min(len(idxs), self.config.max_batch):
                     break
                 b *= 2
@@ -224,6 +250,8 @@ class AsyncChordalityEngine:
         self,
         graph: Union[Graph, np.ndarray],
         want_certificate: bool = False,
+        want_witness: bool = False,
+        deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> "Future[ServiceResponse]":
         """Enqueue one request; returns its future.
@@ -234,14 +262,29 @@ class AsyncChordalityEngine:
         seconds for space. ``want_certificate`` attaches the detailed
         (order, violation-count) witness to the response — costs one extra
         single-graph pass on a certificate-capable backend.
+        ``want_witness`` resolves the future with a checkable
+        ``repro.witness.WitnessResult``; its unit then runs the fused
+        witness executable (batched — no per-request extra pass).
+        ``deadline_ms`` (default: the config's) drops the request if it is
+        still queued this long after submission — the future is cancelled
+        and ``ServiceStats.n_expired`` counts it.
         """
         if not isinstance(graph, Graph):
             adj = np.asarray(graph, dtype=bool)
             graph = Graph(n_nodes=adj.shape[0], adj=adj)
+        if deadline_ms is None:
+            deadline_ms = self.config.deadline_ms
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive or None, got {deadline_ms}")
+        t_submit = time.perf_counter()
         fut: Future = Future()
         req = _Request(
-            graph=graph, future=fut, t_submit=time.perf_counter(),
-            want_certificate=want_certificate)
+            graph=graph, future=fut, t_submit=t_submit,
+            want_certificate=want_certificate,
+            want_witness=want_witness,
+            deadline=None if deadline_ms is None
+            else t_submit + deadline_ms / 1e3)
         deadline = None if timeout is None else \
             time.monotonic() + timeout
         with self._lock:
@@ -262,6 +305,8 @@ class AsyncChordalityEngine:
                 self._done_cv.wait(remaining)
             self._backlog += 1
             self.stats.n_submitted += 1
+            if req.deadline is not None:
+                self._n_deadlined += 1
             n_pad = bucket_npad(
                 max(graph.n_nodes, 1), self.engine.buckets)
             self._pending[n_pad].append(req)
@@ -272,14 +317,48 @@ class AsyncChordalityEngine:
         self,
         graphs: Sequence[Union[Graph, np.ndarray]],
         want_certificate: bool = False,
+        want_witness: bool = False,
+        deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> List["Future[ServiceResponse]"]:
         """``submit`` each graph in order; returns the futures in order."""
         return [
             self.submit(g, want_certificate=want_certificate,
-                        timeout=timeout)
+                        want_witness=want_witness,
+                        deadline_ms=deadline_ms, timeout=timeout)
             for g in graphs
         ]
+
+    def asubmit(
+        self,
+        graph: Union[Graph, np.ndarray],
+        want_certificate: bool = False,
+        want_witness: bool = False,
+        deadline_ms: Optional[float] = None,
+        timeout: Optional[float] = None,
+    ):
+        """``await``-able twin of :meth:`submit` for asyncio clients.
+
+        A thin adapter: the request goes through the exact same admission
+        queue and thread-based executor; the returned ``asyncio.Future``
+        wraps the concurrent future, so resolution hops onto the calling
+        event loop. Must be called with a running loop (i.e. from a
+        coroutine):
+
+            resp = await svc.asubmit(graph, want_witness=True)
+
+        Admission control still applies *synchronously*: a full queue
+        raises :class:`QueueFullError` in the caller's coroutine (use
+        ``timeout`` to block the loop at most that long — prefer 0/None
+        and retry at the application layer to keep the loop responsive).
+        """
+        import asyncio
+
+        fut = self.submit(
+            graph, want_certificate=want_certificate,
+            want_witness=want_witness, deadline_ms=deadline_ms,
+            timeout=timeout)
+        return asyncio.wrap_future(fut)
 
     def flush(self, timeout: Optional[float] = None) -> None:
         """Force-drain partial buckets and wait for an empty backlog.
@@ -327,6 +406,8 @@ class AsyncChordalityEngine:
                 for dq in self._pending.values():
                     while dq:
                         req = dq.popleft()
+                        if req.deadline is not None:
+                            self._n_deadlined -= 1
                         if req.future.cancel():
                             self.stats.n_cancelled += 1
                         self._backlog -= 1
@@ -351,6 +432,45 @@ class AsyncChordalityEngine:
             return self._backlog
 
     # -- admission loop ----------------------------------------------------
+    def _expire_locked(self, now: float) -> Optional[float]:
+        """Drop queued requests past their deadline; cancel their futures.
+
+        Returns the earliest deadline still pending (the admission loop's
+        extra wakeup bound), or None when nothing is deadlined. Only
+        queued requests expire — once drained into a unit, a request
+        always executes (its result may simply arrive late). The
+        ``_n_deadlined`` counter (maintained at submit/expire/dequeue)
+        makes this a no-op for deadline-free traffic — the default
+        config never pays the backlog scan.
+        """
+        if self._n_deadlined == 0:
+            return None
+        earliest: Optional[float] = None
+        dropped = 0
+        for n_pad, dq in self._pending.items():
+            if not any(r.deadline is not None for r in dq):
+                continue
+            keep: Deque[_Request] = collections.deque()
+            for req in dq:
+                if req.deadline is not None and now >= req.deadline:
+                    if req.future.cancelled():  # client beat the deadline
+                        self.stats.n_cancelled += 1
+                    else:
+                        req.future.cancel()
+                        self.stats.n_expired += 1
+                    self._backlog -= 1
+                    self._n_deadlined -= 1
+                    dropped += 1
+                    continue
+                if req.deadline is not None and (
+                        earliest is None or req.deadline < earliest):
+                    earliest = req.deadline
+                keep.append(req)
+            self._pending[n_pad] = keep
+        if dropped:
+            self._done_cv.notify_all()
+        return earliest
+
     def _drainable(self, now: float):
         """(bucket n_pads to drain now, seconds until the next deadline)."""
         drain, next_wait = [], None
@@ -375,13 +495,19 @@ class AsyncChordalityEngine:
             admitted: List[_AdmittedUnit] = []
             with self._lock:
                 while True:
-                    drain, next_wait = self._drainable(time.perf_counter())
+                    now = time.perf_counter()
+                    next_expiry = self._expire_locked(now)
+                    drain, next_wait = self._drainable(now)
                     if drain:
                         break
                     if self._closed and not any(
                             self._pending.values()):
                         self._ready.put(None)     # executor stop sentinel
                         return
+                    if next_expiry is not None:
+                        expiry_wait = max(next_expiry - now, 0.0)
+                        next_wait = expiry_wait if next_wait is None \
+                            else min(next_wait, expiry_wait)
                     self._work_cv.wait(timeout=next_wait)
                 for n_pad in drain:
                     admitted.extend(self._drain_bucket_locked(n_pad))
@@ -397,6 +523,8 @@ class AsyncChordalityEngine:
         reqs: List[_Request] = []
         while dq and len(reqs) < self.config.max_batch:
             req = dq.popleft()
+            if req.deadline is not None:
+                self._n_deadlined -= 1     # leaves the queue either way
             if req.future.cancelled():
                 self.stats.n_cancelled += 1
                 self._backlog -= 1
@@ -464,9 +592,18 @@ class AsyncChordalityEngine:
         live = [r.future.set_running_or_notify_cancel()
                 for r in au.requests]
         graphs = [r.graph for r in au.requests]
+        # One witness-wanting live request upgrades the whole unit to the
+        # fused witness executable: the certificates are batched, so they
+        # ride the unit's single device call instead of per-request passes.
+        unit_wits: Optional[List] = None
         try:
-            out, backend_name, exec_ms = self.engine.execute_unit(
-                au.unit, graphs)
+            if any(r.want_witness and ok
+                   for r, ok in zip(au.requests, live)):
+                out, unit_wits, backend_name, exec_ms = \
+                    self.engine.execute_unit_witness(au.unit, graphs)
+            else:
+                out, backend_name, exec_ms = self.engine.execute_unit(
+                    au.unit, graphs)
         except Exception as e:
             with self._lock:
                 for r, ok in zip(au.requests, live):
@@ -512,6 +649,9 @@ class AsyncChordalityEngine:
                     r.future.set_result(ServiceResponse(
                         verdict=bool(out[slot]),
                         certificate=certs[slot],
+                        witness=unit_wits[slot]
+                        if unit_wits is not None and r.want_witness
+                        else None,
                         queue_ms=queue_ms,
                         exec_ms=exec_ms,
                         backend=backend_name,

@@ -9,6 +9,12 @@
     result.plan.unit_of(i).backend   # router's per-unit choice (auto mode)
     eng.certificate(graphs[i])       # (chordal, PEO-or-witness)
 
+    result = eng.run(graphs, witness=True)   # checkable certificates
+    result.witnesses[i]               # WitnessResult: clique tree /
+                                      # treewidth / coloring, or a
+                                      # chordless cycle (repro.witness)
+    eng.witness(graphs[i])            # single-graph witness
+
 The engine owns one backend instance (or, under ``backend="auto"``, a
 router plus lazily-built instances of its candidates) and one compile cache
 for its lifetime, so repeated ``run`` calls amortize compilation the way a
@@ -71,11 +77,17 @@ class EngineStats:
 @dataclasses.dataclass
 class EngineResult:
     """Verdicts aligned to the input request order, plus the shape plan
-    that produced them (per-request metadata via ``plan.unit_of(i)``)."""
+    that produced them (per-request metadata via ``plan.unit_of(i)``).
+
+    ``witnesses`` is populated by witness runs (``run(..., witness=True)``)
+    — one ``repro.witness.WitnessResult`` per request, same order as
+    ``verdicts``; None on verdict-only runs.
+    """
 
     verdicts: np.ndarray          # (n_requests,) bool
     plan: Plan
     stats: EngineStats
+    witnesses: Optional[List] = None   # List[repro.witness.WitnessResult]
 
     def __len__(self) -> int:
         return len(self.verdicts)
@@ -102,6 +114,9 @@ class ChordalityEngine:
       buckets: override the n_pad bucket grid (default
         ``configs.shapes.ENGINE_NPAD_BUCKETS``). Mainly for tests.
       router: override the router used by ``backend="auto"``.
+      witness: default for ``run``'s witness flag — witness runs return
+        checkable certificates (``repro.witness.WitnessResult``) alongside
+        verdicts, through the same buckets and compile cache.
       backend_opts: forwarded to the backend factory (named backends only).
     """
 
@@ -111,6 +126,7 @@ class ChordalityEngine:
         max_batch: int = 64,
         buckets: Optional[Sequence[int]] = None,
         router=None,
+        witness: bool = False,
         **backend_opts,
     ):
         self.router = None
@@ -133,6 +149,7 @@ class ChordalityEngine:
             self.backend = backend
         self.max_batch = max_batch
         self.buckets = tuple(buckets) if buckets is not None else None
+        self.witness_default = witness
         self.cache = CompileCache()
 
     # -- backend resolution ------------------------------------------------
@@ -151,11 +168,35 @@ class ChordalityEngine:
             inst = self._instances[name] = make_backend(name)
         return inst
 
+    def _resolve_witness(self, name: Optional[str]) -> ChordalityBackend:
+        """Like :meth:`_resolve` but guarantees the witness capability.
+
+        Units routed (or engines fixed) onto a witness-less backend
+        (``sharded``) fall back to ``jax_faithful`` for the witness pass —
+        the same fallback :meth:`certificate` uses.
+        """
+        backend = self._resolve(name)
+        if backend.caps.witness:
+            return backend
+        inst = self._instances.get("jax_faithful")
+        if inst is None or not inst.caps.witness:
+            inst = self._instances["jax_faithful"] = \
+                make_backend("jax_faithful")
+        return inst
+
     @staticmethod
     def _realize(backend: ChordalityBackend, unit, graphs):
         if backend.caps.sparse:
             return realize_unit_csr(unit, graphs)
         return realize_unit(unit, graphs)
+
+    @staticmethod
+    def _unit_n_nodes(unit, graphs) -> np.ndarray:
+        """(batch,) logical sizes (0 legal: empty structures come back)."""
+        n_vec = np.zeros(unit.batch, dtype=np.int32)
+        for slot, idx in enumerate(unit.indices):
+            n_vec[slot] = graphs[idx].n_nodes
+        return n_vec
 
     # -- planning ----------------------------------------------------------
     def plan(self, graphs: Sequence[Graph]) -> Plan:
@@ -179,22 +220,33 @@ class ChordalityEngine:
             Plan(units=[unit], n_requests=len(unit.indices)), graphs)
         return routed.units[0]
 
-    def warmup(self, n_pads: Sequence[int], batch: Optional[int] = None):
+    def warmup(self, n_pads: Sequence[int], batch: Optional[int] = None,
+               witness: Optional[bool] = None):
         """Pre-compile the given buckets at one batch size (default
         ``max_batch`` — the steady-state full-chunk shape). Requires a
         fixed backend; auto engines warm up per plan (:meth:`warmup_plan`,
-        which knows the router's choices)."""
+        which knows the router's choices). ``witness`` (default: the
+        engine's witness setting) additionally warms the fused witness
+        executables for the same shapes."""
         if self.backend is None:
             raise ValueError(
                 "warmup() needs a fixed backend; use warmup_plan() with "
                 "an auto engine")
+        witness = self.witness_default if witness is None else witness
         b = batch if batch is not None else self.max_batch
+        wbackend = self._resolve_witness(self.backend.name) \
+            if witness else None
         for n_pad in n_pads:
             fn = self.cache.get(self.backend, n_pad, b)
             fn(np.zeros((b, n_pad, n_pad), dtype=bool))
+            if wbackend is not None:
+                wfn = self.cache.get(wbackend, n_pad, b, kind="witness")
+                wfn(np.zeros((b, n_pad, n_pad), dtype=bool),
+                    np.zeros(b, dtype=np.int32))
         return self
 
-    def warmup_plan(self, plan: Plan, graphs: Optional[Sequence[Graph]] = None):
+    def warmup_plan(self, plan: Plan, graphs: Optional[Sequence[Graph]] = None,
+                    witness: Optional[bool] = None):
         """Pre-compile exactly the shapes a plan needs.
 
         For dense backends the (backend, n_pad, batch) key fully determines
@@ -205,18 +257,31 @@ class ChordalityEngine:
         buckets only (best effort — real traffic may still compile once
         per new edge-count bucket).
         """
+        witness = self.witness_default if witness is None else witness
         seen = set()
         for unit in plan.units:
             backend = self._resolve(unit.backend)
             key = (backend.name, unit.n_pad, unit.batch)
             fn = self.cache.get(backend, unit.n_pad, unit.batch)
+            wfn = None
+            if witness:
+                wbackend = self._resolve_witness(unit.backend)
+                wfn = self.cache.get(
+                    wbackend, unit.n_pad, unit.batch, kind="witness")
             if backend.caps.sparse and graphs is not None:
-                fn(realize_unit_csr(unit, graphs))
+                payload = realize_unit_csr(unit, graphs)
+                fn(payload)
+                if wfn is not None:
+                    wfn(payload, self._unit_n_nodes(unit, graphs))
                 continue
             if key in seen:
                 continue
             seen.add(key)
-            fn(np.zeros((unit.batch, unit.n_pad, unit.n_pad), dtype=bool))
+            probe = np.zeros(
+                (unit.batch, unit.n_pad, unit.n_pad), dtype=bool)
+            fn(probe)
+            if wfn is not None:
+                wfn(probe, np.ones(unit.batch, dtype=np.int32))
         return self
 
     # -- execution ---------------------------------------------------------
@@ -239,16 +304,63 @@ class ChordalityEngine:
         exec_ms = (time.perf_counter() - t1) * 1e3
         return out[: len(unit.indices)], backend.name, exec_ms
 
-    def run(self, graphs: Sequence[Graph]) -> EngineResult:
-        """Test a stream of graphs; verdicts come back in request order."""
+    def execute_unit_witness(self, unit, graphs: Sequence[Graph]):
+        """Run one work unit's witness pass:
+        ``(verdicts, witnesses, backend_name, exec_ms)``.
+
+        The witness twin of :meth:`execute_unit`: one fused executable
+        (cached under ``kind="witness"`` on the same bucket key) produces
+        verdict **and** certificate structures per slot; the padded
+        :class:`~repro.witness.WitnessBatch` is cropped to per-request
+        ``WitnessResult``\\ s. A non-witness backend on the unit falls
+        back to ``jax_faithful`` (see :meth:`_resolve_witness`).
+        """
+        backend = self._resolve_witness(unit.backend)
+        payload = self._realize(backend, unit, graphs)
+        n_vec = self._unit_n_nodes(unit, graphs)
+        fn = self.cache.get(
+            backend, unit.n_pad, unit.batch, kind="witness")
+        t1 = time.perf_counter()
+        wb = fn(payload, n_vec)
+        exec_ms = (time.perf_counter() - t1) * 1e3
+        witnesses = []
+        for slot, idx in enumerate(unit.indices):
+            g = graphs[idx]
+            adj = None
+            if not wb.chordal[slot] and wb.cycle_len[slot] < 4:
+                adj = g.with_dense().adj       # exhaustive-fallback input
+            witnesses.append(wb.result(slot, g.n_nodes, adj=adj))
+        verdicts = np.asarray(wb.chordal[: len(unit.indices)], dtype=bool)
+        return verdicts, witnesses, backend.name, exec_ms
+
+    def run(
+        self, graphs: Sequence[Graph], witness: Optional[bool] = None
+    ) -> EngineResult:
+        """Test a stream of graphs; verdicts come back in request order.
+
+        ``witness=True`` (or constructing the engine with
+        ``witness=True``) additionally returns one checkable
+        ``repro.witness.WitnessResult`` per request — same plan, same
+        buckets, one fused witness executable per unit instead of the
+        verdict-only one.
+        """
+        witness = self.witness_default if witness is None else witness
         plan = self.plan(graphs)
         verdicts = np.zeros(plan.n_requests, dtype=bool)
+        witnesses: Optional[List] = [None] * plan.n_requests \
+            if witness else None
         stats = EngineStats(
             n_requests=plan.n_requests, n_units=len(plan.units))
         hits0, misses0 = self.cache.hits, self.cache.misses
         t0 = time.perf_counter()
         for unit in plan.units:
-            out, backend_name, exec_ms = self.execute_unit(unit, graphs)
+            if witness:
+                out, wits, backend_name, exec_ms = \
+                    self.execute_unit_witness(unit, graphs)
+                for idx, w in zip(unit.indices, wits):
+                    witnesses[idx] = w
+            else:
+                out, backend_name, exec_ms = self.execute_unit(unit, graphs)
             stats.unit_latencies_ms.append(exec_ms)
             verdicts[list(unit.indices)] = out
             stats.backend_histogram[backend_name] = (
@@ -258,7 +370,35 @@ class ChordalityEngine:
         stats.compile_hits = self.cache.hits - hits0
         stats.compile_misses = self.cache.misses - misses0
         stats.bucket_histogram = plan.bucket_histogram
-        return EngineResult(verdicts=verdicts, plan=plan, stats=stats)
+        return EngineResult(
+            verdicts=verdicts, plan=plan, stats=stats, witnesses=witnesses)
+
+    def _pad_single(self, graph_or_adj):
+        """Normalize one request to its bucket: ``(padded, n, n_pad)``.
+
+        Graphs are sliced to their logical size first (pre-existing
+        padding vertices are isolated by contract), so the request lands
+        in the bucket its logical size deserves.
+        """
+        if isinstance(graph_or_adj, Graph):
+            g = graph_or_adj.with_dense()
+            n = g.n_nodes
+            adj = g.adj[:n, :n]
+        else:
+            adj = np.asarray(graph_or_adj, dtype=bool)
+            n = adj.shape[0]
+        n_pad = bucket_npad(max(n, 1), self.buckets)
+        padded = np.zeros((n_pad, n_pad), dtype=bool)
+        padded[:n, :n] = adj[:n, :n]
+        return padded, n, n_pad
+
+    def _route_single(self, padded, n_pad: int, require) -> Optional[str]:
+        """Router's pick for a padded batch=1 request (None on fixed
+        engines — the caller applies its own fallback policy)."""
+        if self.router is None:
+            return None
+        density = float(padded.sum()) / float(n_pad * n_pad)
+        return self.router.choose(n_pad, density, batch=1, require=require)
 
     def certificate(self, graph_or_adj) -> Certificate:
         """Detailed single-graph answer through the engine's shape planning.
@@ -267,22 +407,10 @@ class ChordalityEngine:
         fixed engines fall back to ``jax_faithful`` when their backend
         cannot produce certificates (e.g. ``sharded``).
         """
-        if isinstance(graph_or_adj, Graph):
-            g = graph_or_adj.with_dense()
-            # Slice off any pre-existing padding (isolated by contract) so
-            # the request lands in the bucket its logical size deserves.
-            n = g.n_nodes
-            adj = g.adj[:n, :n]
-        else:
-            adj = np.asarray(graph_or_adj, dtype=bool)
-            n = adj.shape[0]
-        n_pad = bucket_npad(max(n, 1), self.buckets)
-        padded = np.zeros((n_pad, n_pad), dtype=bool)
-        padded[:n, :n] = adj
-        if self.router is not None:
-            density = float(adj.sum()) / float(n_pad * n_pad)
-            backend = self._resolve(self.router.choose(
-                n_pad, density, batch=1, require=("certificate",)))
+        padded, n, n_pad = self._pad_single(graph_or_adj)
+        name = self._route_single(padded, n_pad, ("certificate",))
+        if name is not None:
+            backend = self._resolve(name)
         else:
             backend = self.backend
             if not backend.caps.certificate:
@@ -291,3 +419,21 @@ class ChordalityEngine:
         return Certificate(
             chordal=bool(ok), order=np.asarray(order),
             n_violations=int(viol), n_pad=n_pad)
+
+    def witness(self, graph_or_adj):
+        """Checkable single-graph witness (``repro.witness.WitnessResult``).
+
+        Rides the same bucket grid and compile cache as batch runs — the
+        request pads to its bucket and executes a ``batch=1`` witness
+        program. Auto engines route with the witness capability required;
+        fixed engines fall back to ``jax_faithful`` if their backend
+        cannot produce witnesses.
+        """
+        padded, n, n_pad = self._pad_single(graph_or_adj)
+        backend = self._resolve_witness(
+            self._route_single(padded, n_pad, ("witness",)))
+        fn = self.cache.get(backend, n_pad, 1, kind="witness")
+        wb = fn(padded[None], np.array([n], dtype=np.int32))
+        adj_fallback = padded if (
+            not wb.chordal[0] and wb.cycle_len[0] < 4) else None
+        return wb.result(0, n, adj=adj_fallback)

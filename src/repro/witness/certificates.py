@@ -1,0 +1,227 @@
+"""Positive certificates from a PEO — cliques, clique tree, coloring.
+
+For a chordal graph, the LexBFS order the engine already computes is not
+just a verdict input: eliminating vertices in reverse visit order, each
+vertex v's earlier-visited neighborhood LN(v) is exactly its "remaining"
+neighborhood at elimination time, so
+
+* ``C(v) = {v} ∪ LN(v)`` enumerates candidate maximal cliques; C(v) is
+  **non-maximal** iff some child u (p(u) = v, where p(u) is u's
+  rightmost left-neighbor) has ``|LN(u)| = |LN(v)| + 1`` — the classical
+  representative test (Blair & Peyton, clique-tree construction);
+* the **clique tree** is a maximum-weight spanning tree of the clique
+  intersection graph (weights ``|C_i ∩ C_j|``) — for chordal graphs any
+  such tree satisfies the running-intersection property
+  (Bernstein–Goodman), checked independently by ``repro.witness.verify``;
+* **treewidth** = max clique size − 1 (exact on chordal graphs);
+* greedy coloring **in visit order** (= reverse elimination order) colors
+  each v against the clique LN(v), so it uses exactly ω colors — an
+  optimal coloring, cross-certifying the clique extraction (χ ≥ ω).
+
+Every producer has two implementations with bit-identical outputs:
+
+* numpy host twins (``*_numpy``) — per-graph loops/array ops, the CPU
+  path and the reference the device path is tested against;
+* a vectorized jax device path (:func:`make_witness_kernel`) — one
+  fused jit program per ``(batch, n_pad)`` bucket shape, vmapped over the
+  engine's existing work units. Tie-breaking is argmax/argmin-first
+  everywhere, which numpy and jnp share, so the twins match bit for bit.
+
+Padding contract: callers pass the logical sizes ``n_nodes``; vertices
+``>= n`` are isolated by the engine's padding contract and are masked out
+of the clique/tree/color structures here (they'd otherwise show up as
+singleton cliques of the padded graph).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Host twins (numpy).
+# ---------------------------------------------------------------------------
+def left_neighborhoods_numpy(adj: np.ndarray, order: np.ndarray):
+    """(ln, p, has_ln): LN matrix, rightmost-left-neighbor, nonempty mask."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = np.empty(n, dtype=np.int64)
+    pos[np.asarray(order)] = np.arange(n)
+    ln = adj & (pos[None, :] < pos[:, None])
+    p = np.argmax(np.where(ln, pos[None, :], -1), axis=1)
+    return ln, p, ln.any(axis=1)
+
+
+def cliques_from_ln_numpy(
+    ln: np.ndarray, p: np.ndarray, has_ln: np.ndarray, n_nodes: int
+):
+    """:func:`peo_cliques_numpy` body over precomputed LN state — the
+    combined extraction (``witness_from_order_numpy``) shares one LN
+    matrix between the clique and counterexample producers."""
+    n = ln.shape[0]
+    size = ln.sum(axis=1)
+    kill = has_ln & (size == size[p] + 1)
+    nonmax = np.zeros(n, dtype=bool)
+    nonmax[p[kill]] = True
+    members = ln | np.eye(n, dtype=bool)
+    valid = (np.arange(n) < n_nodes) & ~nonmax
+    return members, valid
+
+
+def peo_cliques_numpy(
+    adj: np.ndarray, order: np.ndarray, n_nodes: int
+):
+    """Maximal-clique candidates from a PEO.
+
+    Returns ``(members, valid)``: ``members[v] = C(v) = {v} ∪ LN(v)`` as a
+    bool row, ``valid[v]`` true iff v < n_nodes and C(v) is maximal. Only
+    meaningful when the order is a PEO (chordal graph) — callers gate on
+    the verdict.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    ln, p, has_ln = left_neighborhoods_numpy(adj, order)
+    return cliques_from_ln_numpy(ln, p, has_ln, n_nodes)
+
+
+def clique_tree_numpy(members: np.ndarray, valid: np.ndarray) -> np.ndarray:
+    """Max-weight spanning tree (Prim) over clique intersection sizes.
+
+    Cliques are indexed by their representative vertex. Returns
+    ``parent`` (n,) int32: parent representative per valid clique, -1 for
+    the root and for invalid rows. Zero-weight attachments connect the
+    components of a disconnected graph (running intersection holds
+    trivially across them — the intersections are empty).
+    """
+    n = members.shape[0]
+    parent = np.full(n, -1, dtype=np.int32)
+    if not valid.any():
+        return parent
+    mv = (members & valid[:, None]).astype(np.int32)
+    weights = mv @ mv.T
+    root = int(np.argmax(valid))
+    in_tree = np.zeros(n, dtype=bool)
+    in_tree[root] = True
+    best_w = weights[root].copy()
+    best_src = np.full(n, root, dtype=np.int32)
+    for _ in range(n - 1):
+        eligible = valid & ~in_tree
+        if not eligible.any():
+            break
+        k = int(np.argmax(np.where(eligible, best_w, -1)))
+        in_tree[k] = True
+        parent[k] = best_src[k]
+        improve = valid & ~in_tree & (weights[k] > best_w)
+        best_w = np.where(improve, weights[k], best_w)
+        best_src = np.where(improve, k, best_src).astype(np.int32)
+    return parent
+
+
+def greedy_coloring_numpy(adj: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Greedy colors in visit order (reverse PEO) — optimal on chordal G.
+
+    Each vertex takes the smallest color absent from its already-colored
+    neighbors; on a chordal graph those form the clique LN(v), so the
+    color count equals the max clique size.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    colors = np.full(n, -1, dtype=np.int32)
+    for v in np.asarray(order):
+        used = np.zeros(n + 1, dtype=bool)
+        nbr = adj[v] & (colors >= 0)
+        used[colors[nbr]] = True
+        colors[v] = np.int32(np.argmin(used))      # first free color
+    return colors
+
+
+def treewidth_from_cliques_numpy(
+    members: np.ndarray, valid: np.ndarray
+) -> int:
+    sizes = members.sum(axis=1)
+    return int(np.max(np.where(valid, sizes, 1))) - 1
+
+
+# ---------------------------------------------------------------------------
+# Device path (jax) — mirrors the host twins op for op.
+# ---------------------------------------------------------------------------
+def _cliques_device(adj, ln, p, has_ln, n_nodes):
+    import jax.numpy as jnp
+
+    n = adj.shape[0]
+    size = ln.sum(axis=1)
+    kill = has_ln & (size == size[p] + 1)
+    nonmax = jnp.zeros(n, dtype=bool).at[p].max(kill)
+    members = ln | jnp.eye(n, dtype=bool)
+    valid = (jnp.arange(n) < n_nodes) & ~nonmax
+    return members, valid
+
+
+def _clique_tree_device(members, valid):
+    import jax
+    import jax.numpy as jnp
+
+    n = members.shape[0]
+    mv = (members & valid[:, None]).astype(jnp.int32)
+    weights = mv @ mv.T
+    root = jnp.argmax(valid).astype(jnp.int32)
+    any_valid = valid.any()
+    in_tree0 = jnp.zeros(n, dtype=bool).at[root].set(any_valid)
+    parent0 = jnp.full(n, -1, dtype=jnp.int32)
+    best_w0 = weights[root]
+    best_src0 = jnp.full(n, root, dtype=jnp.int32)
+
+    def step(carry, _):
+        in_tree, parent, best_w, best_src = carry
+        eligible = valid & ~in_tree
+        grow = eligible.any()
+        k = jnp.argmax(jnp.where(eligible, best_w, -1)).astype(jnp.int32)
+        in_tree = in_tree.at[k].set(in_tree[k] | grow)
+        parent = parent.at[k].set(
+            jnp.where(grow, best_src[k], parent[k]))
+        improve = grow & valid & ~in_tree & (weights[k] > best_w)
+        best_w = jnp.where(improve, weights[k], best_w)
+        best_src = jnp.where(improve, k, best_src)
+        return (in_tree, parent, best_w, best_src), None
+
+    (_, parent, _, _), _ = jax.lax.scan(
+        step, (in_tree0, parent0, best_w0, best_src0), None, length=n - 1)
+    return parent
+
+
+def _coloring_device(adj, order):
+    import jax
+    import jax.numpy as jnp
+
+    n = adj.shape[0]
+
+    def step(colors, v):
+        nbr_color = jnp.where(
+            adj[v] & (colors >= 0), colors, n)       # sink lane n
+        used = jnp.zeros(n + 1, dtype=bool).at[nbr_color].set(True)
+        free = jnp.argmin(used[:n]).astype(jnp.int32)
+        return colors.at[v].set(free), None
+
+    colors0 = jnp.full(n, -1, dtype=jnp.int32)
+    colors, _ = jax.lax.scan(step, colors0, order)
+    return colors
+
+
+def certificates_device(adj, ln, p, has_ln, order, n_nodes):
+    """(members, valid, parent, treewidth, colors, n_colors) for one graph.
+
+    Single-graph body — callers vmap it over the batch (see
+    ``repro.witness.make_witness_kernel``). ``ln/p/has_ln`` come from the
+    shared ``repro.core.peo.peo_prepare`` so the verdict and the witness
+    ride one pass over the adjacency.
+    """
+    import jax.numpy as jnp
+
+    n = adj.shape[0]
+    members, valid = _cliques_device(adj, ln, p, has_ln, n_nodes)
+    parent = _clique_tree_device(members, valid)
+    sizes = members.sum(axis=1)
+    treewidth = jnp.max(jnp.where(valid, sizes, 1)).astype(jnp.int32) - 1
+    colors = _coloring_device(adj, order)
+    n_colors = jnp.max(
+        jnp.where(jnp.arange(n) < n_nodes, colors, -1)
+    ).astype(jnp.int32) + 1
+    return members, valid, parent, treewidth, colors, n_colors

@@ -1,0 +1,197 @@
+"""Negative certificates — an induced chordless cycle from a failed PEO.
+
+When the engine's PEO test fails, the violating position is a triple
+``(v, u, w)``: ``u = p(v)`` is v's rightmost earlier-visited neighbor and
+``w`` an earlier-visited neighbor of v **not** adjacent to u. The classic
+recovery (Tarjan–Yannakakis certifying test): take a shortest path from
+``w`` to ``u`` in ``G − (N[v] \\ {u, w})``. Every interior vertex of that
+path is a non-neighbor of v and the path is induced (it is shortest), so
+``v · w · … · u`` closes an induced cycle of length ``dist(w, u) + 2 >= 4``
+(u and w are non-adjacent, so the path has at least one interior vertex).
+
+Deterministic choices make host and device outputs bit-identical: the
+violating ``v`` is the one latest in the visit order (the *first* failure
+in elimination order), ``w`` the latest-visited violating partner, BFS
+levels are computed by synchronous relaxation, and backtracking always
+takes the smallest-index neighbor one level closer to the source.
+
+The shortest path exists for every violation LexBFS itself produces
+(exercised across the corpus and the hypothesis sweeps); for arbitrary
+orders :func:`find_chordless_cycle_numpy` is the guaranteed fallback —
+for **any** non-chordal graph, some chordless cycle ``c₁…c_k`` makes the
+triple ``(c₁, c₂, c_k)`` succeed, so scanning all non-adjacent neighbor
+pairs must terminate with a verified cycle.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.witness.certificates import left_neighborhoods_numpy
+
+
+# ---------------------------------------------------------------------------
+# Host twins (numpy).
+# ---------------------------------------------------------------------------
+def bad_matrix_numpy(
+    adj: np.ndarray, ln: np.ndarray, p: np.ndarray, has_ln: np.ndarray
+) -> np.ndarray:
+    """PEO violation matrix over precomputed LN state."""
+    n = adj.shape[0]
+    z = np.arange(n)[None, :]
+    return ln & (z != p[:, None]) & (~adj[p]) & has_ln[:, None]
+
+
+def triple_from_bad_numpy(
+    bad: np.ndarray, pos: np.ndarray, p: np.ndarray
+) -> Optional[Tuple[int, int, int]]:
+    """Deterministic violating (v, u, w) from a violation matrix."""
+    rows = bad.any(axis=1)
+    if not rows.any():
+        return None
+    v = int(np.argmax(np.where(rows, pos, -1)))
+    u = int(p[v])
+    w = int(np.argmax(np.where(bad[v], pos, -1)))
+    return v, u, w
+
+
+def violation_triple_numpy(
+    adj: np.ndarray, order: np.ndarray
+) -> Optional[Tuple[int, int, int]]:
+    """The deterministic violating triple (v, u, w), or None if PEO holds."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = np.empty(n, dtype=np.int64)
+    pos[np.asarray(order)] = np.arange(n)
+    ln, p, has_ln = left_neighborhoods_numpy(adj, order)
+    return triple_from_bad_numpy(
+        bad_matrix_numpy(adj, ln, p, has_ln), pos, p)
+
+
+def _bfs_levels_numpy(
+    adj: np.ndarray, allowed: np.ndarray, src: int
+) -> np.ndarray:
+    """Synchronous-relaxation BFS distances inside ``allowed`` (INF = n+1)."""
+    n = adj.shape[0]
+    inf = n + 1
+    dist = np.full(n, inf, dtype=np.int64)
+    dist[src] = 0
+    for _ in range(n):
+        cand = np.where(
+            adj & allowed[None, :], dist[None, :], inf).min(axis=1) + 1
+        nxt = np.where(allowed, np.minimum(dist, cand), inf)
+        if (nxt == dist).all():
+            break
+        dist = nxt
+    return dist
+
+
+def cycle_from_violation_numpy(
+    adj: np.ndarray, v: int, u: int, w: int
+) -> Optional[np.ndarray]:
+    """Induced chordless cycle through v from a violating (v, u, w).
+
+    None iff u and w are disconnected in ``G − (N[v] \\ {u, w})`` — the
+    triple then certifies nothing and the caller tries another.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    allowed = ~adj[v]
+    allowed[[u, w]] = True
+    allowed[v] = False
+    dist = _bfs_levels_numpy(adj, allowed, u)
+    if dist[w] > n:
+        return None
+    path = [w]
+    cur = w
+    while cur != u:
+        step_mask = adj[cur] & allowed & (dist == dist[cur] - 1)
+        cur = int(np.argmax(step_mask))       # smallest-index predecessor
+        path.append(cur)
+    return np.array([v] + path, dtype=np.int32)   # v, w, …, u
+
+
+def chordless_cycle_numpy(
+    adj: np.ndarray, order: np.ndarray
+) -> Optional[np.ndarray]:
+    """Cycle for the order's deterministic violation; None if PEO holds
+    (or, for non-LexBFS orders, if that one triple happens not to span)."""
+    triple = violation_triple_numpy(adj, order)
+    if triple is None:
+        return None
+    return cycle_from_violation_numpy(adj, *triple)
+
+
+def find_chordless_cycle_numpy(adj: np.ndarray) -> Optional[np.ndarray]:
+    """Exhaustive fallback: works on *every* non-chordal graph.
+
+    Scans vertices v and non-adjacent pairs (u, w) in N(v); for a
+    chordless cycle c₁…c_k the triple (c₁, c₂, c_k) always yields a path,
+    so non-chordal graphs cannot exhaust the scan. Returns None iff the
+    graph is chordal.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    for v in range(n):
+        nbrs = np.nonzero(adj[v])[0]
+        for i, u in enumerate(nbrs):
+            for w in nbrs[i + 1:]:
+                if adj[u, w]:
+                    continue
+                cycle = cycle_from_violation_numpy(
+                    adj, v, int(u), int(w))
+                if cycle is not None:
+                    return cycle
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Device path (jax) — mirrors the host twin op for op.
+# ---------------------------------------------------------------------------
+def counterexample_device(adj, p, bad, pos):
+    """(cycle, cycle_len) for one graph; vmapped by the witness kernel.
+
+    ``cycle`` is (n_pad,) int32, sentinel ``n_pad`` beyond ``cycle_len``.
+    ``cycle_len == 0`` means no violation (chordal) *or* — possible only
+    for non-LexBFS orders — an unreachable (u, w); the session layer falls
+    back to :func:`find_chordless_cycle_numpy` in the latter case.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = adj.shape[0]
+    inf = n + 1
+    rows = bad.any(axis=1)
+    has_viol = rows.any()
+    v = jnp.argmax(jnp.where(rows, pos, -1)).astype(jnp.int32)
+    u = p[v]
+    w = jnp.argmax(jnp.where(bad[v], pos, -1)).astype(jnp.int32)
+    idx = jnp.arange(n)
+    allowed = (~adj[v]) | (idx == u) | (idx == w)
+    allowed = allowed & (idx != v)
+
+    dist0 = jnp.where(idx == u, 0, inf)
+
+    def relax(dist, _):
+        cand = jnp.where(
+            adj & allowed[None, :], dist[None, :], inf).min(axis=1) + 1
+        return jnp.where(allowed, jnp.minimum(dist, cand), inf), None
+
+    dist, _ = jax.lax.scan(relax, dist0, None, length=n)
+    reached = dist[w] <= n
+
+    def back(cur, _):
+        step_mask = adj[cur] & allowed & (dist == dist[cur] - 1)
+        nxt = jnp.argmax(step_mask).astype(jnp.int32)
+        return jnp.where(cur == u, cur, nxt), cur
+
+    _, trail = jax.lax.scan(back, w, None, length=n - 1)   # w, …, u, u, …
+    ok = has_viol & reached
+    cycle_len = jnp.where(ok, dist[w] + 2, 0).astype(jnp.int32)
+    slots = jnp.arange(n - 1)
+    cycle = jnp.full(n, n, dtype=jnp.int32)
+    cycle = cycle.at[0].set(jnp.where(ok, v, n))
+    cycle = cycle.at[1 + slots].set(
+        jnp.where(ok & (slots < cycle_len - 1), trail, n))
+    return cycle, cycle_len

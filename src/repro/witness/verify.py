@@ -1,0 +1,222 @@
+"""Independent witness checkers — the subsystem's own oracle.
+
+Every structure ``repro.witness`` produces is checkable in (near-)linear
+time by code that shares **nothing** with the producers: no LN matrices,
+no rank representation, no jnp — plain per-vertex loops over a dense bool
+adjacency. That separation is the point of a certifying system
+(McConnell et al., "Certifying algorithms"): a bug in the producer and a
+bug in the checker would have to conspire to let a wrong certificate
+through.
+
+Each ``check_*`` function returns ``None`` on success or a short human
+string naming the first problem found. :func:`verify_witness` aggregates
+the checks for one :class:`~repro.witness.WitnessResult`.
+
+Contracts checked:
+
+* :func:`check_peo` — the order is a perfect elimination order (processed
+  right-to-left, each vertex's earlier neighborhood minus its rightmost
+  member is inside the rightmost member's neighborhood).
+* :func:`check_clique_tree` — every node is a clique of G, every vertex
+  and every edge of G is covered, parent pointers form a tree, and each
+  vertex's cliques induce a connected subtree (running intersection).
+* :func:`check_coloring` — proper, and uses exactly ``n_colors`` colors.
+* :func:`check_chordless_cycle` — an induced cycle of length >= 4:
+  consecutive vertices adjacent, all others non-adjacent, no repeats.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+
+def _as_adj(adj: np.ndarray) -> np.ndarray:
+    adj = np.asarray(adj, dtype=bool)
+    if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    return adj
+
+
+def check_peo(adj: np.ndarray, order: np.ndarray) -> Optional[str]:
+    """None iff ``order`` (a visit order; eliminate right-to-left) is a PEO.
+
+    Loop formulation, independent of the producers' LN-matrix algebra:
+    for each vertex v, its earlier-ordered neighbors minus the latest one
+    (p) must all be neighbors of p.
+    """
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    order = np.asarray(order)
+    if sorted(order.tolist()) != list(range(n)):
+        return f"order is not a permutation of 0..{n - 1}"
+    seen: list = []                      # vertices ordered before v
+    for v in order:
+        earlier = [u for u in seen if adj[v, u]]
+        if earlier:
+            p = earlier[-1]              # latest-ordered earlier neighbor
+            for u in earlier[:-1]:
+                if not adj[p, u]:
+                    return (f"PEO violated at v={v}: earlier neighbor {u} "
+                            f"not adjacent to p={p}")
+        seen.append(int(v))
+    return None
+
+
+def check_clique_tree(
+    adj: np.ndarray,
+    cliques: Sequence[np.ndarray],
+    parent: np.ndarray,
+) -> Optional[str]:
+    """None iff (cliques, parent) is a valid clique tree of ``adj``.
+
+    ``parent[i]`` is the index (into ``cliques``) of clique i's tree
+    parent, or -1 for a root. A forest is accepted (disconnected graphs);
+    the running-intersection check is per-vertex subtree connectivity.
+    """
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    k = len(cliques)
+    parent = np.asarray(parent)
+    if parent.shape != (k,):
+        return f"parent shape {parent.shape} != ({k},)"
+    if k == 0:
+        return "no cliques" if n else None
+
+    sets = []
+    for i, c in enumerate(cliques):
+        c = np.asarray(c)
+        if c.size == 0:
+            return f"clique {i} is empty"
+        if len(set(c.tolist())) != c.size:
+            return f"clique {i} repeats a vertex"
+        if c.min() < 0 or c.max() >= n:
+            return f"clique {i} has out-of-range vertex"
+        for a_i, a in enumerate(c):
+            for b in c[a_i + 1:]:
+                if not adj[a, b]:
+                    return f"clique {i} is not a clique: {a}-{b} missing"
+        sets.append(set(int(x) for x in c))
+
+    covered_v = set().union(*sets)
+    if covered_v != set(range(n)):
+        missing = sorted(set(range(n)) - covered_v)
+        return f"vertices not covered by any clique: {missing[:5]}"
+    for a in range(n):
+        for b in range(a + 1, n):
+            if adj[a, b] and not any(a in s and b in s for s in sets):
+                return f"edge {a}-{b} not inside any clique"
+
+    # Tree shape: parent pointers must be acyclic with in-range targets.
+    for i in range(k):
+        p = int(parent[i])
+        if p == i or not (-1 <= p < k):
+            return f"bad parent pointer at clique {i}: {p}"
+    for i in range(k):
+        slow, steps = i, 0
+        while parent[slow] != -1:
+            slow = int(parent[slow])
+            steps += 1
+            if steps > k:
+                return f"parent pointers cycle through clique {i}"
+
+    # Running intersection: for each vertex, its cliques span a connected
+    # subtree — in a forest that is exactly (#edges inside) == (#nodes - 1).
+    for v in range(n):
+        holders = [i for i in range(k) if v in sets[i]]
+        inside = sum(
+            1 for i in holders
+            if parent[i] != -1 and v in sets[int(parent[i])])
+        if inside != len(holders) - 1:
+            return (f"running intersection fails for vertex {v}: "
+                    f"{len(holders)} cliques, {inside} tree edges")
+    return None
+
+
+def check_coloring(
+    adj: np.ndarray,
+    colors: np.ndarray,
+    n_colors: Optional[int] = None,
+) -> Optional[str]:
+    """None iff ``colors`` is proper (and uses exactly ``n_colors``)."""
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    colors = np.asarray(colors)
+    if colors.shape != (n,):
+        return f"colors shape {colors.shape} != ({n},)"
+    if n and colors.min() < 0:
+        return "negative color"
+    for a in range(n):
+        for b in range(a + 1, n):
+            if adj[a, b] and colors[a] == colors[b]:
+                return f"edge {a}-{b} monochromatic (color {colors[a]})"
+    if n_colors is not None:
+        used = int(colors.max()) + 1 if n else 0
+        if used != n_colors:
+            return f"claimed {n_colors} colors, used {used}"
+    return None
+
+
+def check_chordless_cycle(
+    adj: np.ndarray, cycle: np.ndarray
+) -> Optional[str]:
+    """None iff ``cycle`` is an induced (chordless) cycle of length >= 4."""
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    cycle = np.asarray(cycle)
+    k = cycle.size
+    if k < 4:
+        return f"cycle length {k} < 4"
+    if len(set(cycle.tolist())) != k:
+        return "cycle repeats a vertex"
+    if cycle.min() < 0 or cycle.max() >= n:
+        return "cycle has out-of-range vertex"
+    for i in range(k):
+        a, b = int(cycle[i]), int(cycle[(i + 1) % k])
+        if not adj[a, b]:
+            return f"cycle edge {a}-{b} missing from graph"
+    for i in range(k):
+        for j in range(i + 2, k):
+            if i == 0 and j == k - 1:
+                continue                  # the closing edge
+            a, b = int(cycle[i]), int(cycle[j])
+            if adj[a, b]:
+                return f"chord {a}-{b} inside the cycle"
+    return None
+
+
+def verify_witness(adj: np.ndarray, witness) -> Optional[str]:
+    """Run every applicable checker on one ``WitnessResult``.
+
+    For a chordal witness: the order is a PEO, the clique tree stands,
+    the coloring is proper with exactly ``n_colors`` colors, and the
+    optimality cross-check holds (``n_colors == treewidth + 1`` — a
+    verified clique of that size forces chi >= omega >= treewidth + 1,
+    while the verified coloring shows chi <= n_colors, pinning both).
+    For a non-chordal witness: the cycle is induced and chordless.
+    """
+    adj = _as_adj(adj)
+    if witness.chordal:
+        err = check_peo(adj, witness.order)
+        if err:
+            return f"peo: {err}"
+        err = check_clique_tree(adj, witness.cliques, witness.clique_parent)
+        if err:
+            return f"clique_tree: {err}"
+        err = check_coloring(adj, witness.coloring, witness.n_colors)
+        if err:
+            return f"coloring: {err}"
+        if not witness.cliques:            # 0-vertex graph
+            if witness.treewidth != -1 or witness.n_colors != 0:
+                return "empty graph must claim treewidth -1, 0 colors"
+            return None
+        sizes = [len(c) for c in witness.cliques]
+        if max(sizes) - 1 != witness.treewidth:
+            return (f"treewidth {witness.treewidth} != max clique size "
+                    f"{max(sizes)} - 1")
+        if witness.n_colors != witness.treewidth + 1:
+            return (f"optimality gap: {witness.n_colors} colors vs clique "
+                    f"size {witness.treewidth + 1}")
+        return None
+    err = check_chordless_cycle(adj, witness.cycle)
+    return f"cycle: {err}" if err else None

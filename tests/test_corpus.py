@@ -2,9 +2,13 @@
 
 Every ``tests/corpus/*.json`` graph runs through every registered backend
 (verdict vs the fixture's expected answer AND vs the numpy_ref oracle) and
-through the async service in one batch. Past fuzz failures get minimized
-into this directory so they can never regress silently — see
-tests/corpus/README.md for the schema and TESTING.md for the workflow.
+through the async service in one batch. Fixtures additionally pin the
+*witness* surface: expected treewidth / chromatic number for chordal
+cases, a known-good chordless cycle for non-chordal ones — validated
+through the independent ``repro.witness.verify`` checkers, sync and
+async. Past fuzz failures get minimized into this directory so they can
+never regress silently — see tests/corpus/README.md for the schema and
+TESTING.md for the workflow.
 """
 import json
 import pathlib
@@ -20,6 +24,7 @@ from repro.engine import (
     gather,
 )
 from repro.graphs.structure import Graph
+from repro.witness import check_chordless_cycle, verify_witness
 
 CORPUS_DIR = pathlib.Path(__file__).parent / "corpus"
 CASES = sorted(CORPUS_DIR.glob("*.json"))
@@ -35,6 +40,29 @@ def load_case(path: pathlib.Path):
         assert 0 <= u < n and 0 <= v < n, f"{spec['name']}: edge OOB"
         adj[u, v] = adj[v, u] = True
     return Graph(n_nodes=n, adj=adj), bool(spec["chordal"]), spec["name"]
+
+
+def load_spec(path: pathlib.Path):
+    return json.loads(path.read_text())
+
+
+def assert_witness_matches_fixture(graph, spec, witness):
+    """One witness vs one fixture: independent checkers + pinned values."""
+    name = spec["name"]
+    n = graph.n_nodes
+    adj = graph.adj[:n, :n]
+    assert witness.chordal == spec["chordal"], name
+    err = verify_witness(adj, witness)
+    assert err is None, f"{name}: {err}"
+    if spec["chordal"]:
+        assert witness.treewidth == spec["treewidth"], \
+            f"{name}: treewidth {witness.treewidth} != {spec['treewidth']}"
+        assert witness.n_colors == spec["chromatic_number"], \
+            f"{name}: chi {witness.n_colors} != {spec['chromatic_number']}"
+    else:
+        # The fixture documents one known-good cycle; it must verify too.
+        err = check_chordless_cycle(adj, np.array(spec["chordless_cycle"]))
+        assert err is None, f"{name}: stored cycle invalid: {err}"
 
 
 @pytest.fixture(scope="module")
@@ -87,3 +115,35 @@ def test_corpus_through_async_service(corpus):
     got = np.array([r.verdict for r in resps])
     bad = [corpus[i][2] for i in np.nonzero(got != want)[0]]
     assert not bad, f"async service disagrees on corpus cases: {bad}"
+
+
+# ---------------------------------------------------------------------------
+# Witness surface: expected treewidth / chromatic number / chordless cycle,
+# validated through repro.witness.verify (sync engine and async service).
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def specs():
+    return [load_spec(p) for p in CASES]
+
+
+@pytest.mark.parametrize("backend", ["numpy_ref", "jax_fast", "csr"])
+def test_corpus_witnesses_per_backend(backend, corpus, specs, engines):
+    graphs = [g for g, _, _ in corpus]
+    result = engines(backend).run(graphs, witness=True)
+    for (g, _, _), spec, w in zip(corpus, specs, result.witnesses):
+        assert_witness_matches_fixture(g, spec, w)
+    # witness runs report the same verdicts as verdict-only runs
+    np.testing.assert_array_equal(
+        result.verdicts, engines(backend).run(graphs).verdicts)
+
+
+def test_corpus_witnesses_through_async_service(corpus, specs):
+    graphs = [g for g, _, _ in corpus]
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=1.0)
+    with AsyncChordalityEngine(config=cfg) as svc:      # auto routing
+        resps = gather(
+            svc.submit_many(graphs, want_witness=True), timeout=300)
+    for (g, _, _), spec, r in zip(corpus, specs, resps):
+        assert r.witness is not None
+        assert r.verdict == spec["chordal"]
+        assert_witness_matches_fixture(g, spec, r.witness)

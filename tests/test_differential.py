@@ -29,9 +29,11 @@ from repro.engine import (
     AsyncChordalityEngine,
     ChordalityEngine,
     backend_names,
+    backend_spec,
     gather,
 )
 from repro.graphs.structure import Graph
+from repro.witness import verify_witness
 
 # Keep every draw inside the 16/32/64 buckets: the jit backends compile a
 # handful of shapes total across the whole module.
@@ -174,6 +176,72 @@ def test_certificate_backends_match_violation_counts(backend, zoo_oracle):
 
 
 # ---------------------------------------------------------------------------
+# Witness differential: every backend carrying the witness capability must
+# produce certificates that pass the independent checkers
+# (repro.witness.verify) — clique tree + optimal coloring on chordal
+# draws, an induced chordless cycle on non-chordal ones — and agree with
+# the oracle's verdict. Together with tests/test_witness.py these sweeps
+# put well over 200 hypothesis cases through the witness surface.
+# ---------------------------------------------------------------------------
+WITNESS_BACKENDS = tuple(
+    b for b in FAST_BACKENDS if backend_spec(b).caps.witness)
+assert WITNESS_BACKENDS == FAST_BACKENDS, \
+    "router candidates must all be witness-capable"
+
+
+def _assert_witness_ok(backend: str, g: Graph):
+    n = g.n_nodes
+    adj = g.with_dense().adj[:n, :n]
+    res = _engine(backend).run([g], witness=True)
+    w = res.witnesses[0]
+    want_v, _ = _oracle(g)
+    assert bool(res.verdicts[0]) == want_v
+    assert w.chordal == want_v
+    err = verify_witness(adj, w)
+    assert err is None, f"{backend} (n={n}, m={g.n_edges}): {err}"
+
+
+@pytest.mark.parametrize("backend", WITNESS_BACKENDS)
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, MAX_N), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_er_witnesses_verify(backend, n, p_milli, seed):
+    _assert_witness_ok(backend, er_graph(n, p_milli, seed))
+
+
+@pytest.mark.parametrize("backend", WITNESS_BACKENDS)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, MAX_N), k=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_ktree_witnesses_are_optimal_certificates(backend, n, k, seed):
+    g = ktree_graph(n, k, seed)
+    _assert_witness_ok(backend, g)
+    w = _engine(backend).run([g], witness=True).witnesses[0]
+    # a k-tree on > k vertices has treewidth exactly k
+    assert w.treewidth == min(k, n - 1)
+    assert w.n_colors == w.treewidth + 1
+
+
+@pytest.mark.parametrize("backend", WITNESS_BACKENDS)
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, MAX_N), n_chords=st.integers(0, 4),
+       seed=st.integers(0, 10_000))
+def test_cycle_witnesses_verify(backend, n, n_chords, seed):
+    _assert_witness_ok(backend, cycle_with_chords(n, n_chords, seed))
+
+
+def test_witness_verdicts_equal_plain_verdicts_on_zoo(zoo_oracle):
+    zoo, want = zoo_oracle
+    for backend in WITNESS_BACKENDS:
+        res = _engine(backend).run(zoo, witness=True)
+        np.testing.assert_array_equal(res.verdicts, want)
+        for g, w in zip(zoo, res.witnesses):
+            n = g.n_nodes
+            assert verify_witness(
+                g.with_dense().adj[:n, :n], w) is None
+
+
+# ---------------------------------------------------------------------------
 # Differential through the async service under concurrent submission.
 # ---------------------------------------------------------------------------
 def test_async_service_matches_oracle_under_concurrency(zoo_oracle):
@@ -195,6 +263,32 @@ def test_async_service_matches_oracle_under_concurrency(zoo_oracle):
         resps = gather(futures, timeout=300)
     got = np.array([r.verdict for r in resps])
     np.testing.assert_array_equal(got, want)
+
+
+def test_async_witnesses_verify_under_concurrency(zoo_oracle):
+    zoo, want = zoo_oracle
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=2.0, max_queue=512)
+    with AsyncChordalityEngine(config=cfg) as svc:   # auto routing
+        futures = [None] * len(zoo)
+
+        def worker(tid, stride=4):
+            for i in range(tid, len(zoo), stride):
+                futures[i] = svc.submit(zoo[i], want_witness=True)
+
+        threads = [threading.Thread(target=worker, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        resps = gather(futures, timeout=300)
+    got = np.array([r.verdict for r in resps])
+    np.testing.assert_array_equal(got, want)
+    for g, r in zip(zoo, resps):
+        n = g.n_nodes
+        assert r.witness is not None
+        assert r.witness.chordal == r.verdict
+        assert verify_witness(g.with_dense().adj[:n, :n], r.witness) is None
 
 
 def test_async_certificates_match_oracle_counts(zoo_oracle):

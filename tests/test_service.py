@@ -467,3 +467,127 @@ def test_unit_for_chunk_contract():
         unit_for_chunk(32, 0, max_batch=8)
     with pytest.raises(ValueError, match="exceeds"):
         unit_for_chunk(32, 9, max_batch=8)
+
+
+# ---------------------------------------------------------------------------
+# Witness responses: batched certificates through the serving path.
+# ---------------------------------------------------------------------------
+def test_want_witness_attaches_checkable_witness():
+    from repro.witness import verify_witness
+
+    chordal_g, cyclic_g = G.clique(6), G.cycle(12)
+    with AsyncChordalityEngine(
+            config=ServiceConfig(max_batch=4, max_wait_ms=1.0),
+            backend="numpy_ref") as svc:
+        good = svc.submit(chordal_g, want_witness=True).result(60)
+        bad = svc.submit(cyclic_g, want_witness=True).result(60)
+        plain = svc.submit(chordal_g).result(60)
+    assert good.witness.chordal and good.verdict
+    assert good.witness.treewidth == 5 and good.witness.n_colors == 6
+    assert verify_witness(chordal_g.adj, good.witness) is None
+    assert not bad.witness.chordal and not bad.verdict
+    assert verify_witness(cyclic_g.adj, bad.witness) is None
+    assert plain.witness is None            # witness is opt-in
+
+
+def test_witness_and_plain_requests_share_a_unit():
+    """One want_witness request upgrades its whole unit; plain unit-mates
+    still get plain responses (witness=None) with identical verdicts."""
+    with AsyncChordalityEngine(
+            config=_quiet_config(max_batch=4),
+            backend="numpy_ref") as svc:
+        futs = [svc.submit(G.cycle(9), want_witness=(i == 1))
+                for i in range(3)]
+        svc.flush()
+        resps = gather(futs, timeout=60)
+    assert [r.witness is not None for r in resps] == [False, True, False]
+    assert all(not r.verdict for r in resps)
+    # all three rode the same drained unit
+    assert len({(r.n_pad, r.batch, r.occupancy) for r in resps}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Per-request deadlines: queued-too-long requests drop, futures cancel.
+# ---------------------------------------------------------------------------
+def test_expired_requests_are_dropped_and_counted():
+    svc = AsyncChordalityEngine(
+        config=_quiet_config(deadline_ms=25.0), backend="numpy_ref")
+    try:
+        futs = [svc.submit(G.cycle(9)) for _ in range(4)]
+        deadline = time.monotonic() + 10
+        while svc.backlog and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert all(f.cancelled() for f in futs)
+        assert svc.stats.n_expired == 4
+        assert svc.backlog == 0
+    finally:
+        svc.shutdown()
+
+
+def test_per_request_deadline_overrides_config():
+    svc = AsyncChordalityEngine(
+        config=_quiet_config(deadline_ms=25.0), backend="numpy_ref")
+    try:
+        doomed = svc.submit(G.cycle(9))
+        survivor = svc.submit(G.clique(5), deadline_ms=120_000.0)
+        deadline = time.monotonic() + 10
+        while not doomed.cancelled() and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert doomed.cancelled()
+        svc.flush()
+        assert survivor.result(60).verdict      # clique: chordal
+        assert svc.stats.n_expired == 1
+    finally:
+        svc.shutdown()
+
+
+def test_deadline_only_applies_while_queued():
+    """A drained request executes even if its deadline passes mid-flight."""
+    cfg = ServiceConfig(max_batch=1, max_wait_ms=0.0, deadline_ms=3_000.0,
+                        backend="numpy_ref")
+    with AsyncChordalityEngine(config=cfg) as svc:
+        resps = gather(svc.submit_many(_stream()), timeout=60)
+    assert len(resps) == len(_stream())
+    assert svc.stats.n_expired == 0
+
+
+def test_deadline_validation():
+    with pytest.raises(ValueError, match="deadline_ms"):
+        ServiceConfig(deadline_ms=0.0)
+    with AsyncChordalityEngine(
+            config=_quiet_config(), backend="numpy_ref") as svc:
+        with pytest.raises(ValueError, match="deadline_ms"):
+            svc.submit(G.cycle(4), deadline_ms=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# asyncio adapter: thread-based futures awaited from an event loop.
+# ---------------------------------------------------------------------------
+def test_asubmit_resolves_on_the_event_loop(sync_verdicts):
+    import asyncio
+
+    async def drive(svc):
+        futs = [svc.asubmit(g) for g in _stream()]
+        return await asyncio.gather(*futs)
+
+    with AsyncChordalityEngine(
+            config=ServiceConfig(max_batch=8, max_wait_ms=1.0),
+            backend="numpy_ref") as svc:
+        resps = asyncio.run(drive(svc))
+    got = np.array([r.verdict for r in resps])
+    np.testing.assert_array_equal(got, sync_verdicts)
+
+
+def test_asubmit_carries_witness_and_deadline_kwargs():
+    import asyncio
+
+    async def drive(svc):
+        return await svc.asubmit(
+            G.clique(6), want_witness=True, deadline_ms=60_000.0)
+
+    with AsyncChordalityEngine(
+            config=ServiceConfig(max_batch=4, max_wait_ms=1.0),
+            backend="numpy_ref") as svc:
+        resp = asyncio.run(drive(svc))
+    assert resp.verdict and resp.witness.chordal
+    assert resp.witness.treewidth == 5

@@ -1,0 +1,302 @@
+"""Unit tests for repro.witness: producers, device/host twins, checkers.
+
+Three layers of assurance, strongest first:
+
+* **independent oracles** — maximal cliques vs a from-scratch
+  Bron–Kerbosch, every produced witness through the independent
+  ``verify`` checkers (which share no code with the producers);
+* **twin equality** — the jax device kernel must match the numpy host
+  twin bit for bit on padded mixed batches;
+* **checker skepticism** — corrupted witnesses (dropped clique, merged
+  colors, chord added to a cycle, broken parent pointer) must be
+  *rejected*; a checker that passes everything proves nothing.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.witness as W
+from repro.core import generators as G
+from repro.core.lexbfs import lexbfs_numpy_dense
+
+
+def _family(kind: int, n: int, seed: int):
+    if kind == 0:
+        return G.gnp(n, 0.15 + 0.1 * (seed % 7), seed=seed)
+    if kind == 1:
+        return G.k_tree(n, k=min(3, n - 1), seed=seed)
+    if kind == 2:
+        return G.long_cycle(n, n_chords=seed % 4, seed=seed)
+    return G.random_tree(n, seed=seed)
+
+
+def _adj(g):
+    n = g.n_nodes
+    return g.with_dense().adj[:n, :n]
+
+
+def _witness(adj):
+    n = adj.shape[0]
+    order = lexbfs_numpy_dense(adj)
+    wb = W.witness_batch_numpy(
+        adj[None], np.asarray(order)[None], np.array([n]))
+    return wb.result(0, n, adj=adj)
+
+
+def bron_kerbosch(adj):
+    """Independent maximal-clique enumeration (pivotless, n <= ~24)."""
+    n = adj.shape[0]
+    out = []
+
+    def expand(r, p, x):
+        if not p and not x:
+            out.append(frozenset(r))
+            return
+        for v in sorted(p):
+            nv = {u for u in range(n) if adj[v, u]}
+            expand(r | {v}, p & nv, x & nv)
+            p = p - {v}
+            x = x | {v}
+
+    expand(set(), set(range(n)), set())
+    return set(out)
+
+
+# ---------------------------------------------------------------------------
+# Producers vs independent oracles.
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(kind=st.integers(0, 3), n=st.integers(2, 20),
+       seed=st.integers(0, 10_000))
+def test_cliques_match_bron_kerbosch_on_chordal(kind, n, seed):
+    adj = _adj(_family(kind, n, seed))
+    w = _witness(adj)
+    if not w.chordal:
+        return
+    got = {frozenset(int(x) for x in c) for c in w.cliques}
+    assert got == bron_kerbosch(adj)
+
+
+@settings(max_examples=40, deadline=None)
+@given(kind=st.integers(0, 3), n=st.integers(1, 40),
+       seed=st.integers(0, 10_000))
+def test_host_witness_always_verifies(kind, n, seed):
+    adj = _adj(_family(kind, n, seed))
+    w = _witness(adj)
+    assert W.verify_witness(adj, w) is None
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=st.integers(0, 3), n=st.integers(4, 40),
+       seed=st.integers(0, 10_000))
+def test_guided_counterexample_needs_no_fallback_on_lexbfs_orders(
+        kind, n, seed):
+    """The violating-position recovery must find the cycle itself —
+    the exhaustive fallback exists for non-LexBFS orders only."""
+    adj = _adj(_family(kind, n, seed))
+    order = lexbfs_numpy_dense(adj)
+    triple = W.violation_triple_numpy(adj, order)
+    if triple is None:
+        return
+    cycle = W.cycle_from_violation_numpy(adj, *triple)
+    assert cycle is not None
+    assert W.check_chordless_cycle(adj, cycle) is None
+
+
+def test_exhaustive_fallback_finds_cycles():
+    for n in (4, 5, 9, 16):
+        adj = _adj(G.cycle(n))
+        cycle = W.find_chordless_cycle_numpy(adj)
+        assert cycle is not None and len(cycle) == n
+        assert W.check_chordless_cycle(adj, cycle) is None
+    assert W.find_chordless_cycle_numpy(_adj(G.clique(6))) is None
+
+
+def test_coloring_is_optimal_on_chordal():
+    for n, k in ((8, 2), (20, 3), (33, 4)):
+        adj = _adj(G.k_tree(n, k=k, seed=n))
+        w = _witness(adj)
+        assert w.chordal
+        assert w.treewidth == k          # k-trees have treewidth exactly k
+        assert w.n_colors == k + 1
+
+
+def test_empty_and_tiny_graph_conventions():
+    w = _witness(np.zeros((0, 0), dtype=bool))
+    assert w.chordal and w.cliques == [] and w.treewidth == -1
+    assert w.n_colors == 0
+    w = _witness(np.zeros((1, 1), dtype=bool))
+    assert w.chordal and w.treewidth == 0 and w.n_colors == 1
+    assert [c.tolist() for c in w.cliques] == [[0]]
+
+
+# ---------------------------------------------------------------------------
+# Device kernel == host twin, bit for bit, on padded mixed batches.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n_pad", [16, 32])
+def test_device_kernel_bit_identical_to_host(n_pad):
+    from repro.core.lexbfs import lexbfs
+
+    kern = W.make_witness_kernel(lexbfs)
+    rng = np.random.default_rng(n_pad)
+    adjs, ns = [], []
+    for trial in range(8):
+        n = int(rng.integers(2, n_pad + 1))
+        g = _family(trial % 4, n, trial)
+        a = np.zeros((n_pad, n_pad), dtype=bool)
+        a[:n, :n] = _adj(g)
+        adjs.append(a)
+        ns.append(n)
+    adjs, ns = np.stack(adjs), np.array(ns, dtype=np.int32)
+    dev = kern(adjs, ns)
+    host = W.witness_batch_numpy(
+        adjs, np.stack([lexbfs_numpy_dense(a) for a in adjs]), ns)
+    for field in ("chordal", "orders", "members", "valid", "parent",
+                  "treewidth", "colors", "n_colors", "cycle", "cycle_len"):
+        np.testing.assert_array_equal(
+            getattr(host, field), getattr(dev, field), err_msg=field)
+    for i in range(len(ns)):
+        w = dev.result(i, int(ns[i]), adj=adjs[i])
+        assert W.verify_witness(adjs[i][: ns[i], : ns[i]], w) is None
+
+
+# ---------------------------------------------------------------------------
+# Checker skepticism: corrupted witnesses must be rejected.
+# ---------------------------------------------------------------------------
+def test_check_peo_rejects_bad_order():
+    adj = _adj(G.cycle(4))
+    assert W.check_peo(adj, np.array([0, 1, 2, 3])) is not None
+    assert W.check_peo(adj, np.array([0, 0, 2, 3])) is not None   # not a perm
+
+
+def test_check_clique_tree_rejects_corruptions():
+    adj = _adj(G.k_tree(10, k=2, seed=3))
+    w = _witness(adj)
+    ok = (w.cliques, w.clique_parent)
+    assert W.check_clique_tree(adj, *ok) is None
+    # dropped clique -> coverage hole
+    assert W.check_clique_tree(
+        adj, w.cliques[1:], w.clique_parent[1:]) is not None
+    # non-clique node
+    bad = [np.array([0, 1, 2, 3, 4, 5, 6, 7, 8, 9])] + list(w.cliques[1:])
+    assert W.check_clique_tree(
+        adj, bad, w.clique_parent) is not None
+    # self-parent cycle
+    bad_parent = w.clique_parent.copy()
+    bad_parent[0] = 0
+    assert W.check_clique_tree(adj, w.cliques, bad_parent) is not None
+    # star re-wiring that breaks running intersection on most k-trees
+    if len(w.cliques) >= 3:
+        star = np.zeros(len(w.cliques), dtype=np.int32)
+        star[0] = -1
+        err_star = W.check_clique_tree(adj, w.cliques, star)
+        # (may legally pass if clique 0 intersects everything; just make
+        # sure the checker runs the RIP logic without crashing)
+        assert err_star is None or "running intersection" in err_star
+
+
+def test_check_coloring_rejects_merged_colors():
+    adj = _adj(G.clique(4))
+    colors = np.array([0, 1, 2, 3])
+    assert W.check_coloring(adj, colors, 4) is None
+    assert W.check_coloring(adj, colors, 3) is not None   # wrong count
+    colors[3] = 0
+    assert W.check_coloring(adj, colors, 4) is not None   # improper
+
+
+def test_check_chordless_cycle_rejects_chords_and_gaps():
+    adj = _adj(G.cycle(5))
+    good = np.array([0, 1, 2, 3, 4])
+    assert W.check_chordless_cycle(adj, good) is None
+    assert W.check_chordless_cycle(adj, good[:3]) is not None      # short
+    assert W.check_chordless_cycle(
+        adj, np.array([0, 1, 2, 4])) is not None                   # gap
+    chorded = adj.copy()
+    chorded[0, 2] = chorded[2, 0] = True
+    assert W.check_chordless_cycle(chorded, good) is not None      # chord
+
+
+def test_verify_witness_rejects_wrong_optimality_claim():
+    adj = _adj(G.k_tree(12, k=3, seed=0))
+    w = _witness(adj)
+    import dataclasses
+
+    lying = dataclasses.replace(w, treewidth=w.treewidth + 1)
+    assert W.verify_witness(adj, lying) is not None
+
+
+# ---------------------------------------------------------------------------
+# WitnessBatch.result crop semantics.
+# ---------------------------------------------------------------------------
+def test_result_crops_padding_out():
+    n, n_pad = 6, 16
+    adj = np.zeros((n_pad, n_pad), dtype=bool)
+    adj[:n, :n] = _adj(G.k_tree(n, k=2, seed=1))
+    order = lexbfs_numpy_dense(adj)
+    wb = W.witness_batch_numpy(
+        adj[None], np.asarray(order)[None], np.array([n]))
+    w = wb.result(0, n)
+    assert len(w.order) == n and w.order.max() < n
+    assert all(c.max() < n for c in w.cliques)
+    assert len(w.coloring) == n
+    assert W.verify_witness(adj[:n, :n], w) is None
+
+
+def test_result_fallback_requires_adjacency():
+    # A non-LexBFS order whose single violating triple spans no cycle
+    # would need the fallback; simulate by corrupting cycle_len.
+    adj = _adj(G.cycle(5))
+    order = lexbfs_numpy_dense(adj)
+    wb = W.witness_batch_numpy(
+        adj[None], np.asarray(order)[None], np.array([5]))
+    broken = W.WitnessBatch(
+        chordal=wb.chordal, orders=wb.orders, members=wb.members,
+        valid=wb.valid, parent=wb.parent, treewidth=wb.treewidth,
+        colors=wb.colors, n_colors=wb.n_colors,
+        cycle=np.full_like(wb.cycle, 5), cycle_len=np.zeros(1, np.int32))
+    with pytest.raises(ValueError):
+        broken.result(0, 5)
+    w = broken.result(0, 5, adj=adj)
+    assert W.check_chordless_cycle(adj, w.cycle) is None
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: specialist backends and the witness-less fallback.
+# ---------------------------------------------------------------------------
+def test_pallas_backend_produces_witnesses():
+    from repro.engine import ChordalityEngine
+
+    eng = ChordalityEngine(backend="pallas_peo", max_batch=2)
+    graphs = [G.k_tree(10, k=2, seed=0), G.cycle(8)]
+    res = eng.run(graphs, witness=True)
+    assert res.witnesses[0].chordal and res.witnesses[0].treewidth == 2
+    assert not res.witnesses[1].chordal
+    for g, w in zip(graphs, res.witnesses):
+        assert W.verify_witness(_adj(g), w) is None
+
+
+def test_sharded_backend_falls_back_for_witnesses():
+    from repro.engine import ChordalityEngine
+
+    eng = ChordalityEngine(backend="sharded", max_batch=2)
+    graphs = [G.clique(6), G.cycle(8)]
+    res = eng.run(graphs, witness=True)
+    # verdicts must match the witness-capable fallback's results
+    np.testing.assert_array_equal(res.verdicts, [True, False])
+    for g, w in zip(graphs, res.witnesses):
+        assert W.verify_witness(_adj(g), w) is None
+    # and the fallback rode the cache under its own name
+    assert any(k[0] == "jax_faithful" and k[1] == "witness"
+               for k in eng.cache._fns)
+
+
+def test_engine_witness_default_flag():
+    from repro.engine import ChordalityEngine
+
+    eng = ChordalityEngine(backend="numpy_ref", max_batch=2, witness=True)
+    res = eng.run([G.clique(4)])          # default picks up witness=True
+    assert res.witnesses is not None
+    assert res.witnesses[0].chordal and res.witnesses[0].treewidth == 3
+    res = eng.run([G.clique(4)], witness=False)   # explicit override
+    assert res.witnesses is None

@@ -39,6 +39,95 @@ def bench_peo_paths(n=2048, p=0.3, repeats=3) -> List[Dict]:
     return rows
 
 
+def bench_kernels_fused(
+    ns=(64, 128, 256, 512), batch=8, repeats=3, dispatch_n=128,
+    dispatch_batch=8,
+):
+    """The PR 5 perf-trajectory table: ``(rows, artifact)``.
+
+    Three measurements, all machine-readable in the artifact dict that
+    ``--tables kernels`` serializes to ``BENCH_kernels.json``:
+
+    * ``lexbfs_batched_speedup_vs_scan`` — the restructured batch-major
+      LexBFS (lazy comparator compaction, one fori_loop) against the
+      pre-PR 5 vmap-of-scan at each n. The acceptance bar is factor > 1
+      at n >= 256; smaller n are recorded too so a regression there can
+      never hide.
+    * ``dispatch_per_unit`` — *measured* host-level device launches per
+      work unit for the split vs fused pallas_peo pipelines, read off
+      ``repro.kernels.dispatch_counter`` while executing one real unit
+      through each compiled executable. Split pays 2 launches per graph;
+      fused pays 1 per unit.
+    * fused vs split wall time at the dispatch-probe shape (interpret
+      mode — the CPU emulation figure, not the TPU one; the dispatch
+      count is the portable claim).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from benchmarks.paper_tables import time_fn, _block
+    from repro.core import generators as G
+    from repro.core.lexbfs import lexbfs_batched, lexbfs_batched_scan
+    from repro.engine.backends import PallasPeoBackend
+    from repro.kernels import dispatch_counter
+
+    rows: List[Dict] = []
+    artifact: Dict = {
+        "schema": "bench_kernels/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "batch": batch,
+        "lexbfs_batched_speedup_vs_scan": {},
+        "lexbfs_batched_ms": {},
+        "lexbfs_scan_ms": {},
+    }
+    for n in ns:
+        adjs = jnp.asarray(np.stack([
+            G.sparse_erdos_renyi(n, c=10.0, seed=s).with_dense().adj
+            for s in range(batch)]))
+        t_scan = time_fn(lambda: _block(lexbfs_batched_scan(adjs)), repeats)
+        t_new = time_fn(lambda: _block(lexbfs_batched(adjs)), repeats)
+        factor = t_scan / t_new if t_new > 0 else float("inf")
+        artifact["lexbfs_batched_speedup_vs_scan"][str(n)] = round(factor, 2)
+        artifact["lexbfs_scan_ms"][str(n)] = round(t_scan, 3)
+        artifact["lexbfs_batched_ms"][str(n)] = round(t_new, 3)
+        rows.append({
+            "name": f"lexbfs_batched_n{n}_B{batch}",
+            "us_per_call": t_new * 1e3,
+            "derived": (
+                f"vmap_of_scan_us={t_scan * 1e3:.1f};"
+                f"speedup_x={factor:.2f}"),
+        })
+
+    # -- measured dispatches per unit: split vs fused pallas pipelines ----
+    unit = np.stack([
+        G.sparse_erdos_renyi(dispatch_n, c=8.0, seed=s).with_dense().adj
+        for s in range(dispatch_batch)])
+    split = PallasPeoBackend(interpret=True, pipeline="split")
+    fused = PallasPeoBackend(interpret=True, pipeline="fused")
+    fn_split = split.compile_batch(dispatch_n, dispatch_batch)
+    fn_fused = fused.compile_fused_batch(dispatch_n, dispatch_batch)
+    fn_split(unit), fn_fused(unit)            # compile outside the count
+    counts = {}
+    for name, fn in (("split", fn_split), ("fused", fn_fused)):
+        c0 = dispatch_counter.count
+        out = fn(unit)
+        counts[name] = dispatch_counter.delta(c0)
+        t_ms = time_fn(lambda: fn(unit), max(1, repeats - 1))
+        rows.append({
+            "name": f"pallas_{name}_unit_n{dispatch_n}_B{dispatch_batch}",
+            "us_per_call": t_ms * 1e3,
+            "derived": (
+                f"dispatches_per_unit={counts[name]};"
+                f"verdicts={int(np.sum(out))}/{dispatch_batch};"
+                "interpret_mode_wall_time"),
+        })
+    artifact["dispatch_per_unit"] = {
+        "n_pad": dispatch_n, "batch": dispatch_batch, **counts}
+    artifact["rows"] = [r["name"] for r in rows]
+    return rows, artifact
+
+
 def bench_engine_backends(
     n_max=256, requests=32, max_batch=8, repeats=2,
     backends=("jax_faithful", "jax_fast", "numpy_ref"),
@@ -325,6 +414,14 @@ def bench_router_samples(
         ("csr", 256, 12.0, 16), ("csr", 256, 76.8, 16),
         ("csr", 512, 10.0, 16),
         ("csr", 1024, 10.0, 8), ("csr", 1024, 10.0, 32),
+        # The fused one-dispatch Pallas pipeline. On CPU these rows measure
+        # interpret-mode emulation (the only substrate available), which is
+        # exactly what DEFAULT_COST_MODEL should encode there — it keeps
+        # the router honest about never picking it on a CPU host; a TPU
+        # deployment re-fits from the same rows run off-interpret.
+        ("pallas_peo", 16, 4.0, 1), ("pallas_peo", 16, 4.0, 8),
+        ("pallas_peo", 64, 8.0, 1), ("pallas_peo", 64, 8.0, 8),
+        ("pallas_peo", 128, 8.0, 8), ("pallas_peo", 256, 12.0, 4),
     ]
     if quick:
         grid = [g for g in grid if g[1] <= 256]
@@ -332,7 +429,8 @@ def bench_router_samples(
     for name, n, c, batch in grid:
         graphs = [G.sparse_erdos_renyi(n, c=c, seed=s) for s in range(batch)]
         density = float(np.mean([g.n_edges for g in graphs])) / (n * n)
-        eng = ChordalityEngine(backend=name, max_batch=batch)
+        opts = {"pipeline": "fused"} if name == "pallas_peo" else {}
+        eng = ChordalityEngine(backend=name, max_batch=batch, **opts)
         eng.run(graphs)
         # Best-of-5 for the sub-millisecond cells (noise there flips
         # regime boundaries), median-of-2 for the expensive ones.

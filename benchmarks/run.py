@@ -84,7 +84,26 @@ def main(argv=None) -> int:
             sizes["chordal_n"], 3 if args.quick else 4))
     if "kernels" in which:
         print("# kernel micro-bench - peo paths", file=sys.stderr)
-        emit(kernel_bench.bench_peo_paths(n=1024 if args.quick else 2048))
+        if not args.smoke:
+            emit(kernel_bench.bench_peo_paths(n=1024 if args.quick else 2048))
+        print("# kernel micro-bench - fused pipeline + batched lexbfs "
+              "(-> BENCH_kernels.json)", file=sys.stderr)
+        if args.smoke:
+            rows, artifact = kernel_bench.bench_kernels_fused(
+                ns=(64, 256), batch=4, repeats=2,
+                dispatch_n=64, dispatch_batch=4)
+        elif args.quick:
+            rows, artifact = kernel_bench.bench_kernels_fused(
+                ns=(64, 128, 256), batch=8, repeats=2)
+        else:
+            rows, artifact = kernel_bench.bench_kernels_fused(
+                ns=(64, 128, 256, 512, 1024), batch=8)
+        emit(rows)
+        import json
+
+        with open("BENCH_kernels.json", "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_kernels.json", file=sys.stderr)
     if "lexbfs" in which:
         print("# kernel micro-bench - lexbfs/mcs", file=sys.stderr)
         emit(kernel_bench.bench_lexbfs(n=1024 if args.quick else 2048))

@@ -173,6 +173,41 @@ def engine_nnz_bucket(
     return 1 << (nnz - 1).bit_length()
 
 
+# ---------------------------------------------------------------------------
+# Fused-pipeline VMEM budget (DESIGN.md §11).
+#
+# The single-pass LexBFS+PEO kernel (repro.kernels.lexbfs_fused) keeps one
+# graph's full adjacency plus its rank/pos state resident in VMEM for the
+# whole sequential loop. VMEM is ~16 MB/core and Pallas double-buffers the
+# streamed adjacency block across grid steps, so the bucket cap follows
+# from 2·N² (int8 adj) + comparator tile + O(N) state fitting the budget.
+# ---------------------------------------------------------------------------
+TPU_VMEM_BYTES: int = 16 * 1024 * 1024
+
+
+def fused_vmem_bytes(n_pad: int, u_block: int = 512) -> int:
+    """Worst-case VMEM bytes one fused-kernel program needs at ``n_pad``.
+
+    2× the (n_pad, n_pad) int8 adjacency block (grid double-buffering),
+    the (u_block, n_pad) int32 comparator tile, the rank/pos scratch and
+    order output rows (int32), and the violation cell.
+    """
+    adj = 2 * n_pad * n_pad                       # int8, double-buffered
+    comparator = min(u_block, n_pad) * n_pad * 4  # (U, N) int32 tile
+    state = 3 * n_pad * 4                         # rank + pos + order rows
+    return adj + comparator + state + 4
+
+
+FUSED_MAX_NPAD: int = max(
+    (b for b in ENGINE_NPAD_BUCKETS if fused_vmem_bytes(b) <= TPU_VMEM_BYTES),
+    default=ENGINE_NPAD_BUCKETS[0],
+)
+# 2048 with the default grids: 2·4 MB adjacency + 4 MB comparator tile
+# (512·2048·4 B) + ~24 KB state ≈ 12.6 MB fits the 16 MB budget; 4096
+# (2·16 MB adjacency alone) does not. Bigger buckets take the split
+# (LexBFS + two-kernel PEO) pipeline instead — see DESIGN.md §11.
+
+
 def engine_deg_bucket(deg: int, n_pad: int) -> int:
     """Power-of-two bucket for the padded max row degree, capped at n_pad.
 

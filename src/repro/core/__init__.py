@@ -14,7 +14,14 @@ Direct multi-entry use (hand-rolled padding loops around is_chordal_batch
 et al.) is deprecated for serving and benchmark callers — the engine owns
 shape planning and compile caching (DESIGN.md §6).
 """
-from repro.core.lexbfs import lexbfs, lexbfs_batched, lexbfs_numpy_dense, lexbfs_pos
+from repro.core.lexbfs import (
+    lexbfs,
+    lexbfs_batched,
+    lexbfs_batched_scan,
+    lexbfs_numpy_dense,
+    lexbfs_pos,
+    lexbfs_scan,
+)
 from repro.core.peo import peo_check, peo_violations, peo_check_numpy
 from repro.core.chordality import (
     is_chordal,
@@ -35,7 +42,8 @@ from repro.core import properties
 from repro.core import lexbfs_ref
 
 __all__ = [
-    "lexbfs", "lexbfs_batched", "lexbfs_numpy_dense", "lexbfs_pos",
+    "lexbfs", "lexbfs_batched", "lexbfs_batched_scan", "lexbfs_numpy_dense",
+    "lexbfs_pos", "lexbfs_scan",
     "peo_check", "peo_violations", "peo_check_numpy",
     "is_chordal", "is_chordal_batch", "is_chordal_host",
     "chordality_certificate", "make_sharded_chordality",

@@ -32,7 +32,8 @@ from repro.core.peo import peo_check, peo_violations
 def is_chordal(adj: jnp.ndarray) -> jnp.ndarray:
     """True iff the graph is chordal. adj: (N, N) bool, symmetric, 0 diag.
 
-    Paper-faithful pipeline (per-iteration rank compaction, §6.1 + §6.2).
+    LexBFS (restructured batch-major hot path, §6.1 — orders bit-identical
+    to the paper-faithful ``lexbfs_scan``) + the PEO test (§6.2).
     Padding convention: isolated vertices at the top indices are harmless
     (they are simplicial, visited last, LN empty).
     """

@@ -54,6 +54,7 @@ class BackendCaps:
     certificate: bool   # can produce (order, n_violations) witnesses
     sparse: bool = False  # consumes PackedCSRBatch work units (O(N+M) path)
     witness: bool = False  # compiles WitnessBatch executables (repro.witness)
+    fused: bool = False  # compiles one-dispatch-per-unit fused executables
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +90,25 @@ class ChordalityBackend:
         """(chordal, elimination order, violation count) for one graph."""
         raise NotImplementedError(
             f"backend {self.name!r} does not produce certificates")
+
+    def verdict_kind(self, n_pad: int) -> str:
+        """Which executable family serves this backend's verdicts at a
+        bucket: ``"verdict"`` (``compile_batch``) or ``"fused"``
+        (``compile_fused_batch`` — one device dispatch per work unit).
+        The session/compile-cache key this per bucket, so a backend can
+        serve small buckets fused and fall back past its memory budget.
+        """
+        return "verdict"
+
+    def compile_fused_batch(
+        self, n_pad: int, batch: int
+    ) -> Callable[[np.ndarray], np.ndarray]:
+        """Fused-pipeline executable: same contract as :meth:`compile_batch`
+        but the whole unit must execute in one device dispatch. Backends
+        carrying the ``fused`` capability implement this; the compile
+        cache stores it under ``kind="fused"``."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no fused pipeline")
 
     def compile_witness_batch(self, n_pad: int, batch: int):
         """Executable for the witness pass at one fixed shape.
@@ -191,21 +211,23 @@ class _JaxBackendBase(ChordalityBackend):
 
 
 class JaxFaithfulBackend(_JaxBackendBase):
-    """Paper-faithful pipeline: per-iteration rank compaction (§6.1+§6.2)."""
+    """Paper-faithful pipeline: per-iteration rank compaction (§6.1+§6.2,
+    ``lexbfs_scan``) — the differential anchor among the device backends."""
 
     name = "jax_faithful"
     caps = BackendCaps(batched=True, device=True, certificate=True,
                        witness=True)
 
     def _order_fn(self):
-        from repro.core.lexbfs import lexbfs
+        from repro.core.lexbfs import lexbfs_scan
 
-        return lexbfs
+        return lexbfs_scan
 
 
 class JaxFastBackend(_JaxBackendBase):
-    """Lazy-compaction LexBFS (EXPERIMENTS.md §Perf A). Bit-identical orders
-    to jax_faithful — asserted in tests/test_engine_backends.py."""
+    """Restructured batch-major LexBFS (lazy comparator compaction, PR 5).
+    Bit-identical orders to jax_faithful — asserted in
+    tests/test_engine_backends.py."""
 
     name = "jax_fast"
     caps = BackendCaps(batched=True, device=True, certificate=True,
@@ -218,27 +240,76 @@ class JaxFastBackend(_JaxBackendBase):
 
 
 class PallasPeoBackend(ChordalityBackend):
-    """LexBFS + the fused Pallas PEO kernel (repro.kernels.peo_check).
+    """The Pallas kernel backend — two pipelines over one registry entry:
 
-    Not natively batched: the kernel's grid is per-graph, so the batch
-    contract is met with a host loop over jit'd single-graph calls (one
-    compile per n_pad, amortized by the cache like every other backend).
+    * ``fused`` — the single-pass LexBFS+PEO kernel
+      (``repro.kernels.lexbfs_fused``): the whole work unit is **one**
+      ``pallas_call`` with the batch as the leading grid axis and the
+      partition state resident in VMEM. Served through the compile
+      cache's ``kind="fused"`` entries (:meth:`verdict_kind`), capped at
+      ``configs.shapes.FUSED_MAX_NPAD`` by the VMEM budget.
+    * ``split`` — LexBFS + the two-kernel PEO test
+      (``repro.kernels.peo_check``): a host loop of two jit'd
+      single-graph dispatches per slot. The fallback above the fused
+      bucket cap, and the pre-PR 5 behavior.
+
+    ``pipeline="auto"`` (default) selects ``fused`` off-interpret (a real
+    accelerator) and ``split`` under interpret mode, where the fused
+    kernel's sequential emulation is the slower of the two on CPU.
+    ``interpret=None`` (default) resolves to ``jax.default_backend() !=
+    "tpu"`` — the same build is correct on CPU CI and compiles via Mosaic
+    on TPU. ``caps.batched`` stays False: it describes the *split* batch
+    contract; fused units are natively batched and keyed separately.
+
     The witness pass has no fused-kernel specialization — it uses the
     shared ``repro.witness`` device kernel over the same ``lexbfs`` orders
-    the Pallas verdict path consumes.
+    the Pallas verdict pipelines consume.
     """
 
     name = "pallas_peo"
     caps = BackendCaps(batched=False, device=True, certificate=True,
-                       witness=True)
+                       witness=True, fused=True)
 
-    def __init__(self, interpret: bool = True):
-        self._interpret = interpret
+    def __init__(self, interpret: Optional[bool] = None,
+                 pipeline: str = "auto"):
+        if pipeline not in ("auto", "fused", "split"):
+            raise ValueError(f"unknown pallas_peo pipeline {pipeline!r}")
+        if interpret is None:
+            import jax
+
+            interpret = jax.default_backend() != "tpu"
+        self._interpret = bool(interpret)
+        self._pipeline = pipeline
+
+    def verdict_kind(self, n_pad: int) -> str:
+        from repro.configs.shapes import FUSED_MAX_NPAD
+
+        if n_pad > FUSED_MAX_NPAD:
+            return "verdict"           # VMEM budget: split pipeline
+        if self._pipeline == "auto":
+            return "verdict" if self._interpret else "fused"
+        return "fused" if self._pipeline == "fused" else "verdict"
+
+    def compile_fused_batch(self, n_pad, batch):
+        import jax.numpy as jnp
+
+        from repro.kernels.lexbfs_fused.ops import lexbfs_peo_fused
+
+        interpret = self._interpret
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            verdicts, _, _ = lexbfs_peo_fused(
+                jnp.asarray(np.asarray(adjs, dtype=np.int8)),
+                interpret=interpret)
+            return np.asarray(verdicts)
+
+        return run
 
     def compile_batch(self, n_pad, batch):
         import jax.numpy as jnp
 
         from repro.core.lexbfs import lexbfs
+        from repro.kernels import dispatch_counter
         from repro.kernels.peo_check.ops import peo_check_pallas
 
         interpret = self._interpret
@@ -247,6 +318,7 @@ class PallasPeoBackend(ChordalityBackend):
             out = np.zeros(adjs.shape[0], dtype=bool)
             for i, adj in enumerate(adjs):
                 a = jnp.asarray(adj)
+                dispatch_counter.tick(2)   # LexBFS jit + PEO kernel launch
                 out[i] = bool(
                     peo_check_pallas(a, lexbfs(a), interpret=interpret))
             return out

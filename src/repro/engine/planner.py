@@ -158,10 +158,14 @@ class CompileCache:
     """Executable cache keyed on (backend name, kind, n_pad, batch).
 
     ``kind`` selects the executable family: ``"verdict"`` programs come
-    from ``backend.compile_batch``, ``"witness"`` programs (verdict +
-    certificate extraction in one fused pass, see ``repro.witness``) from
-    ``backend.compile_witness_batch``. Both ride the same bucket grid, so
-    enabling witnesses adds at most one extra compile per bucket shape. A
+    from ``backend.compile_batch``, ``"fused"`` programs (the whole unit
+    in one device dispatch, e.g. the single-pass LexBFS+PEO Pallas
+    kernel) from ``backend.compile_fused_batch``, and ``"witness"``
+    programs (verdict + certificate extraction in one fused pass, see
+    ``repro.witness``) from ``backend.compile_witness_batch``. All ride
+    the same bucket grid, so enabling a family adds at most one extra
+    compile per bucket shape; the session picks the verdict family per
+    bucket via ``backend.verdict_kind(n_pad)``. A
     miss pays tracing + XLA compile for the device backends; a hit reuses
     the executable. The hit/miss counters feed the engine's stats — in
     steady-state serving, misses stay flat.
@@ -183,6 +187,8 @@ class CompileCache:
             self.misses += 1
             if kind == "verdict":
                 fn = backend.compile_batch(n_pad, batch)
+            elif kind == "fused":
+                fn = backend.compile_fused_batch(n_pad, batch)
             elif kind == "witness":
                 fn = backend.compile_witness_batch(n_pad, batch)
             else:

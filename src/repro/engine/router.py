@@ -59,24 +59,38 @@ class BackendCost:
 CostModel = Mapping[str, BackendCost]
 
 # Fitted on the CI reference host (2-core CPU, jax 0.4.37) from
-# bench_router_samples (warm engines, best-of-5 sub-ms cells); regenerate
-# via
+# bench_router_samples (warm engines, best-of-5 sub-ms cells); re-fitted
+# in PR 5 after the batch-major LexBFS restructure shifted every device
+# backend's cost curve. Regenerate via
 #   PYTHONPATH=src python -m benchmarks.run --tables router
-# and repro.engine.router.fit_cost_model. Measured crossovers this model
-# encodes: numpy_ref wins single-shot tiny requests (B=1, n <= ~32, no
-# dispatch); jax_fast wins batched tiny/mid and all dense traffic; csr
-# overtakes jax_fast on sparse streams around n ~ 400-600 at density c/n
-# (earlier for lower density / bigger batches) — DESIGN.md §8.
+# and repro.engine.router.fit_cost_model (or online:
+# ChordalityEngine.refit_router). Measured crossovers this model encodes:
+# numpy_ref wins single-shot tiny requests (B=1, n <= ~32, no dispatch);
+# jax_fast wins batched tiny/mid and all dense traffic; csr overtakes
+# jax_fast on sparse streams around n ~ 512 at density c/n (earlier for
+# lower density / bigger batches) — DESIGN.md §8.
 DEFAULT_COST_MODEL: Dict[str, BackendCost] = {
     "numpy_ref": BackendCost(
-        dispatch_us=0.0, per_graph_us=237.8, sweep_us=0.0,
-        n_us=11.285, n2_us=0.05043, m_us=0.0),
+        dispatch_us=0.0, per_graph_us=228.6, sweep_us=0.0,
+        n_us=5.197, n2_us=0.08880, m_us=0.0),
     "jax_fast": BackendCost(
-        dispatch_us=534.3, per_graph_us=35.7, sweep_us=0.62,
-        n_us=0.0, n2_us=0.01946, m_us=0.0),
+        dispatch_us=829.9, per_graph_us=0.0, sweep_us=0.0,
+        n_us=0.545, n2_us=0.01601, m_us=0.0),
     "csr": BackendCost(
-        dispatch_us=0.0, per_graph_us=72.3, sweep_us=34.10,
-        n_us=0.0, n2_us=0.00349, m_us=0.334),
+        dispatch_us=231.4, per_graph_us=73.3, sweep_us=23.06,
+        n_us=0.0, n2_us=0.00637, m_us=0.172),
+    # The fused single-dispatch Pallas pipeline (pallas_peo,
+    # pipeline="fused"): one kernel launch per unit (dispatch term), then a
+    # per-graph sequential n-loop whose per-step row reads and periodic
+    # comparator compactions the n/n² terms absorb. Fitted on the CI
+    # reference host in *interpret* mode — the only Pallas substrate a CPU
+    # box has — where the emulation compiles to roughly the jnp path's
+    # speed; it stays out of CPU auto-routing because it is not in
+    # DEFAULT_CANDIDATES. A TPU deployment re-fits via --tables router (or
+    # ChordalityEngine.refit_router) and opts it into the candidate list.
+    "pallas_peo": BackendCost(
+        dispatch_us=715.4, per_graph_us=0.0, sweep_us=0.0,
+        n_us=2.358, n2_us=0.00560, m_us=0.0),
 }
 
 #: Backends "auto" chooses among. All three carry the certificate cap;
@@ -194,6 +208,9 @@ FIT_FEATURE_MASKS: Dict[str, Tuple[int, ...]] = {
     "numpy_ref": (1, 3, 4),
     "jax_fast": (0, 1, 2, 3, 4),
     "csr": (0, 1, 2, 3, 4, 5),
+    # One dispatch per unit; the in-kernel n-loop + comparator are pure
+    # per-graph n/n² costs (density-independent: dense row reads).
+    "pallas_peo": (0, 1, 3, 4),
 }
 
 

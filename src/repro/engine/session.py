@@ -57,6 +57,11 @@ class EngineStats:
     bucket_histogram: Dict[int, int] = dataclasses.field(default_factory=dict)
     backend_histogram: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    # Router-calibration rows, one per executed unit:
+    # (backend, n_pad, density, batch, us_per_graph) — the exact sample
+    # format ``repro.engine.router.fit_cost_model`` consumes, so a session
+    # can re-fit its router from its own measurements (refit_router).
+    unit_samples: List[tuple] = dataclasses.field(default_factory=list)
 
     @property
     def throughput_gps(self) -> float:
@@ -151,6 +156,14 @@ class ChordalityEngine:
         self.buckets = tuple(buckets) if buckets is not None else None
         self.witness_default = witness
         self.cache = CompileCache()
+        # Engine-lifetime measurement log feeding refit_router(); every
+        # execute_unit appends one (backend, n, density, batch, us/graph)
+        # row, from sync runs and the async service's executor alike.
+        # Bounded: beyond the cap the oldest rows roll off, so a long-lived
+        # serving process keeps a recent-window fit, not a memory leak.
+        # Appends/trims are GIL-atomic list ops; readers snapshot first.
+        self._router_samples: List[tuple] = []
+        self._router_samples_cap = 4096
 
     # -- backend resolution ------------------------------------------------
     def _resolve(self, name: Optional[str]) -> ChordalityBackend:
@@ -237,7 +250,9 @@ class ChordalityEngine:
         wbackend = self._resolve_witness(self.backend.name) \
             if witness else None
         for n_pad in n_pads:
-            fn = self.cache.get(self.backend, n_pad, b)
+            fn = self.cache.get(
+                self.backend, n_pad, b,
+                kind=self.backend.verdict_kind(n_pad))
             fn(np.zeros((b, n_pad, n_pad), dtype=bool))
             if wbackend is not None:
                 wfn = self.cache.get(wbackend, n_pad, b, kind="witness")
@@ -262,7 +277,9 @@ class ChordalityEngine:
         for unit in plan.units:
             backend = self._resolve(unit.backend)
             key = (backend.name, unit.n_pad, unit.batch)
-            fn = self.cache.get(backend, unit.n_pad, unit.batch)
+            fn = self.cache.get(
+                backend, unit.n_pad, unit.batch,
+                kind=backend.verdict_kind(unit.n_pad))
             wfn = None
             if witness:
                 wbackend = self._resolve_witness(unit.backend)
@@ -296,13 +313,33 @@ class ChordalityEngine:
         covers the executable call only (realize/compile time is visible
         through the cache counters instead).
         """
+        out, backend_name, exec_ms, _ = self._execute_unit_sampled(
+            unit, graphs)
+        return out, backend_name, exec_ms
+
+    def _execute_unit_sampled(self, unit, graphs: Sequence[Graph]):
+        """:meth:`execute_unit` plus the unit's router-calibration sample
+        (logged engine-wide and returned, so ``run`` can attribute its own
+        units' samples to its stats without racing the async executor's
+        appends to the shared log)."""
         backend = self._resolve(unit.backend)
         payload = self._realize(backend, unit, graphs)
-        fn = self.cache.get(backend, unit.n_pad, unit.batch)
+        fn = self.cache.get(
+            backend, unit.n_pad, unit.batch,
+            kind=backend.verdict_kind(unit.n_pad))
         t1 = time.perf_counter()
         out = fn(payload)
         exec_ms = (time.perf_counter() - t1) * 1e3
-        return out[: len(unit.indices)], backend.name, exec_ms
+        sample = (
+            backend.name, unit.n_pad,
+            float(np.mean([graphs[i].n_edges for i in unit.indices]))
+            / float(unit.n_pad * unit.n_pad) if unit.indices else 0.0,
+            unit.batch, exec_ms * 1e3 / max(unit.batch, 1))
+        self._router_samples.append(sample)
+        excess = len(self._router_samples) - self._router_samples_cap
+        if excess > 0:
+            del self._router_samples[:excess]
+        return out[: len(unit.indices)], backend.name, exec_ms, sample
 
     def execute_unit_witness(self, unit, graphs: Sequence[Graph]):
         """Run one work unit's witness pass:
@@ -360,7 +397,9 @@ class ChordalityEngine:
                 for idx, w in zip(unit.indices, wits):
                     witnesses[idx] = w
             else:
-                out, backend_name, exec_ms = self.execute_unit(unit, graphs)
+                out, backend_name, exec_ms, sample = \
+                    self._execute_unit_sampled(unit, graphs)
+                stats.unit_samples.append(sample)
             stats.unit_latencies_ms.append(exec_ms)
             verdicts[list(unit.indices)] = out
             stats.backend_histogram[backend_name] = (
@@ -372,6 +411,46 @@ class ChordalityEngine:
         stats.bucket_histogram = plan.bucket_histogram
         return EngineResult(
             verdicts=verdicts, plan=plan, stats=stats, witnesses=witnesses)
+
+    def refit_router(self, min_samples: int = 4):
+        """Online re-fit of the router's cost model from this session's own
+        measured unit latencies (ROADMAP PR 3 extension).
+
+        Every executed unit leaves one ``(backend, n_pad, density, batch,
+        us_per_graph)`` row in the engine's measurement log (surfaced per
+        run as ``EngineStats.unit_samples``); this re-runs the same
+        least-squares fit the offline ``--tables router`` calibration uses
+        on those rows, updates the router's coefficients for every backend
+        with at least ``min_samples`` measurements (others keep their
+        prior coefficients), and — the safety property — **clamps the
+        router's fitted support** (``fit_n_range``) to the n-range
+        actually observed, so a refit can never extrapolate routing
+        decisions outside the regime it was fitted on (regression-tested
+        in tests/test_router.py).
+
+        Returns the tuple of backend names whose coefficients were
+        refitted (empty if no backend reached ``min_samples``).
+        """
+        if self.router is None:
+            raise ValueError(
+                "refit_router() needs backend='auto' (no router to refit)")
+        from repro.engine.router import fit_cost_model
+
+        log = list(self._router_samples)   # snapshot vs concurrent appends
+        by_backend: Dict[str, List[tuple]] = {}
+        for s in log:
+            by_backend.setdefault(s[0], []).append(s)
+        samples = [
+            s for name, rows in by_backend.items()
+            if len(rows) >= min_samples for s in rows
+        ]
+        if not samples:
+            return ()
+        fitted = fit_cost_model(samples)
+        self.router.cost_model.update(fitted)
+        ns = [s[1] for s in samples]
+        self.router.fit_n_range = (min(ns), max(ns))
+        return tuple(sorted(fitted))
 
     def _pad_single(self, graph_or_adj):
         """Normalize one request to its bucket: ``(padded, n, n_pad)``.

@@ -1,3 +1,32 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-layer utilities.
+
+:data:`dispatch_counter` counts host-level compiled-program launches —
+each tick is one host->device dispatch (a jit call or a ``pallas_call``
+invocation from Python). The fused-pipeline benchmarks read deltas off it
+to report *measured* dispatches per work unit (``BENCH_kernels.json``);
+it costs one integer increment and is not thread-safe beyond CPython's
+GIL, which is all the benchmarks need.
+"""
+from __future__ import annotations
+
+
+class DispatchCounter:
+    """Counts host-level device-program launches (benchmark telemetry)."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def tick(self, k: int = 1) -> None:
+        self.count += k
+
+    def delta(self, since: int) -> int:
+        return self.count - since
+
+
+#: Process-global counter the kernel wrappers and backends tick.
+dispatch_counter = DispatchCounter()
+
+__all__ = ["DispatchCounter", "dispatch_counter"]

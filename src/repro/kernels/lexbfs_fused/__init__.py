@@ -1,0 +1,3 @@
+from repro.kernels.lexbfs_fused.ops import lexbfs_peo_fused
+
+__all__ = ["lexbfs_peo_fused"]

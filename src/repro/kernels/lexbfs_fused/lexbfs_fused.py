@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: the entire verdict hot path in ONE kernel (§6.1+§6.2).
+
+Through PR 4 the per-graph pipeline was an n-step ``lax.scan`` (LexBFS,
+re-reading the adjacency from HBM every iteration) followed by two Pallas
+kernels (parents + violations) — three host-level dispatches per graph and
+O(N²) HBM traffic *per LexBFS step*. This kernel runs the whole thing in a
+single ``pallas_call``:
+
+* **Grid** ``(B,)`` — the work-unit batch is the leading (and only) grid
+  axis; each program owns one graph. Pallas stages that graph's (N, N)
+  int8 adjacency block from HBM into VMEM once; every one of the N
+  iterations then reads on-chip rows only.
+* **State residency** — ``rank`` and ``pos`` live in (1, N) int32 VMEM
+  scratch for the program's lifetime; nothing O(N) round-trips to HBM
+  inside the loop. This is the design "Computing Treewidth on the GPU"
+  (van der Zanden & Bodlaender) and the chordless-cycle enumerator of
+  Jradi et al. use for their sequential outer loops (PAPERS.md).
+* **Sort-free compaction** — Mosaic has no sort and no efficient scatter,
+  so the paper's histogram + ``cumsum(2N)`` empty-set deletion is replaced
+  by the comparator dense order statistic
+  ``rank[v] ← #{u : 0 ≤ rank_u < rank_v}`` (see ``repro.core.lexbfs``),
+  evaluated blockwise so the (N, N) compare never materializes: a
+  (U, N) tile at a time, U = :data:`compaction_block`. Lazy cadence —
+  every ``k_inner = 30 − ⌈log₂N⌉`` steps — keeps ``2·rank + bit`` inside
+  int32 between compactions.
+* **Fused PEO test** — at the moment vertex ``v`` is visited, its
+  left-neighborhood LN(v) is exactly ``Adj[v] ∧ visited``, its parent
+  ``p_v`` the visited neighbor with max ``pos``, and the paper's
+  ``testing`` kernel reduces to two on-chip row reads
+  (``Adj[v]``, ``Adj[p_v]``) and a masked count — so the violation total
+  accumulates *inside* the LexBFS loop and no parent/violation kernels
+  (nor the (N,) parent vector) ever leave the chip.
+
+Outputs per graph: the LexBFS order (bit-identical to every other
+implementation in the repo — asserted in tests) and the violation count
+(0 ⇔ chordal). VMEM budget and the bucket cap this implies are derived in
+``repro.configs.shapes.fused_vmem_bytes`` and documented in DESIGN.md §11.
+
+Everything is masked explicitly; correctness does not rely on Pallas
+zero-padding semantics, and padded (isolated) vertices are visited last
+contributing zero violations — any engine bucket shape is a valid input.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def compaction_block(n: int) -> int:
+    """Comparator tile height U: the (U, N) compare tile staged per inner
+    step. Largest power-of-two divisor of N up to 512 (engine buckets are
+    powers of two; odd direct-call sizes fall back to one full tile)."""
+    for u in (512, 256, 128, 64, 32, 16, 8):
+        if n % u == 0 and u < max(n, 2):
+            return u
+    return n
+
+
+def _fused_kernel(n, k_inner, u_block, adj_ref, order_ref, viol_ref,
+                  rank_ref, pos_ref):
+    """One program = one graph's full LexBFS + PEO verdict.
+
+    adj_ref:   (1, N, N) int8   adjacency (VMEM-staged by the grid)
+    order_ref: (1, N) int32     LexBFS order (out)
+    viol_ref:  (1, 1) int32     PEO violation count (out)
+    rank_ref, pos_ref: (1, N) int32 VMEM scratch — the resident state.
+    ``n``/``k_inner``/``u_block`` are static (baked per bucket shape).
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+
+    # Scratch persists across grid steps: re-arm per program.
+    rank_ref[...] = jnp.zeros_like(rank_ref)
+    pos_ref[...] = jnp.zeros_like(pos_ref)
+    viol_ref[...] = jnp.zeros_like(viol_ref)
+    order_ref[...] = jnp.zeros_like(order_ref)
+
+    def compact(rank):
+        # Blockwise sort-free comparator: cnt[v] = #{u: 0 <= rank_u < rank_v}.
+        def tile(j, cnt):
+            blk = jax.lax.dynamic_slice(rank, (0, j * u_block), (1, u_block))
+            col = blk.reshape(u_block, 1)
+            less = (col >= 0) & (col < rank)            # (U, N)
+            return cnt + jnp.sum(
+                less.astype(jnp.int32), axis=0, keepdims=True)
+        cnt = jax.lax.fori_loop(
+            0, n // u_block, tile, jnp.zeros((1, n), jnp.int32))
+        return jnp.where(rank >= 0, cnt, jnp.int32(-1))
+
+    def step(i, _):
+        rank = rank_ref[...]                            # (1, N)
+        pos = pos_ref[...]
+        # Selection (paper kernel 4): visited lanes are negative, so the
+        # plain argmax picks the lexicographically last active class.
+        current = jnp.argmax(rank).astype(jnp.int32)
+        row = adj_ref[0, pl.ds(current, 1), :]          # (1, N) int8
+        nbr = row != 0
+        # Fused PEO test (paper §6.2) at visit time: LN(current) is the
+        # visited neighborhood, p the member with max pos.
+        visited = rank < 0
+        ln = nbr & visited
+        cand = jnp.where(ln, pos, jnp.int32(-1))
+        p = jnp.argmax(cand).astype(jnp.int32)          # unique: pos distinct
+        prow = adj_ref[0, pl.ds(p, 1), :]
+        bad = ln & (lane != p) & (prow == 0)            # LN empty -> all 0
+        viol_ref[0, 0] += jnp.sum(bad.astype(jnp.int32))
+        # Record the visit; split classes (paper kernels 1-3, lazy form).
+        is_cur = lane == current
+        order_ref[...] = jnp.where(lane == i, current, order_ref[...])
+        pos_ref[...] = jnp.where(is_cur, i, pos)
+        rank = jnp.where(is_cur, jnp.int32(-1), rank)
+        rank = 2 * rank + nbr.astype(jnp.int32)
+        rank = jax.lax.cond(
+            (i % k_inner) == (k_inner - 1), compact, lambda r: r, rank)
+        rank_ref[...] = rank
+        return 0
+
+    jax.lax.fori_loop(0, n, step, 0)
+
+
+def lexbfs_peo_fused_call(
+    adj_i8: jnp.ndarray,
+    *,
+    k_inner: int,
+    u_block: int,
+    interpret: bool = True,
+):
+    """Raw pallas_call: (B, N, N) int8 -> (orders (B, N), viols (B, 1))."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, n = adj_i8.shape[0], adj_i8.shape[1]
+    kernel = lambda *refs: _fused_kernel(n, k_inner, u_block, *refs)  # noqa: E731
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, n), jnp.int32),
+            pltpu.VMEM((1, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(adj_i8)

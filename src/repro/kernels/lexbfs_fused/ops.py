@@ -1,0 +1,51 @@
+"""Jit'd public wrappers around the fused LexBFS+PEO Pallas kernel.
+
+``lexbfs_peo_fused(adjs)`` maps a (B, N, N) bool work unit to
+``(verdicts (B,), orders (B, N), violations (B,))`` in **one device
+dispatch** — the whole per-bucket hot path behind a single ``pallas_call``
+(grid over the batch). Orders are bit-identical to every other LexBFS in
+the repo; verdicts to every PEO test (asserted in
+tests/test_lexbfs_fused.py).
+
+``interpret`` defaults to True (CPU-validated); on a real TPU deployment
+the wrapper is called with ``interpret=False`` and the same BlockSpecs
+compile via Mosaic. The module-level :data:`dispatch_counter` ticks once
+per host-level launch — benchmarks read it to report measured
+dispatches-per-unit (``BENCH_kernels.json``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dispatch_counter
+from repro.kernels.lexbfs_fused.lexbfs_fused import (
+    compaction_block,
+    lexbfs_peo_fused_call,
+)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused(adjs: jnp.ndarray, *, interpret: bool = True):
+    from repro.core.lexbfs import lexbfs_inner_block
+
+    n = adjs.shape[1]
+    orders, viols = lexbfs_peo_fused_call(
+        adjs.astype(jnp.int8),
+        k_inner=lexbfs_inner_block(n),
+        u_block=compaction_block(n),
+        interpret=interpret,
+    )
+    return viols[:, 0] == 0, orders, viols[:, 0]
+
+
+def lexbfs_peo_fused(adjs: jnp.ndarray, *, interpret: bool = True):
+    """(B, N, N) bool -> (verdicts (B,), orders (B, N), violations (B,)).
+
+    One ``pallas_call`` per call — the one-dispatch-per-bucket contract
+    the ``pallas_peo`` backend's ``pipeline="fused"`` serves.
+    """
+    dispatch_counter.tick()
+    return _fused(adjs, interpret=interpret)

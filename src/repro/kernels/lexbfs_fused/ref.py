@@ -1,0 +1,23 @@
+"""Reference for the fused kernel: the unfused two-stage pipeline.
+
+The fused kernel's contract is *bit-identity* with the rest of the repo,
+so its oracle is simply LexBFS (any implementation — they all agree) plus
+the jnp PEO violation count. Kept as a module so the kernel family follows
+the repo's <name>.py / ops.py / ref.py layout and tests have one obvious
+import point.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.lexbfs import lexbfs_batched
+from repro.core.peo import peo_violations
+
+
+def fused_ref(adjs: jnp.ndarray):
+    """(B, N, N) bool -> (verdicts, orders, violations) via the unfused path."""
+    import jax
+
+    orders = lexbfs_batched(adjs)
+    viols = jax.vmap(peo_violations)(adjs.astype(bool), orders)
+    return viols == 0, orders, viols

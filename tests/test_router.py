@@ -231,3 +231,64 @@ def test_routing_density_uses_edge_views_without_densifying():
     (unit,) = plan.units
     assert unit.backend == "csr"
     assert lean.adj is None               # still no dense view materialized
+
+# ---------------------------------------------------------------------------
+# Online refit (ISSUE 5 satellite): a session re-fits its router from its
+# own measured unit latencies, and the refit clamps the fitted support so
+# routing never extrapolates outside the n-range it actually measured.
+# ---------------------------------------------------------------------------
+def _run_streams(eng, ns=(64, 256), passes=3):
+    for _ in range(passes):
+        for n in ns:
+            eng.run([_edge_graph(n, 6, s) for s in range(8)])
+
+
+def test_refit_router_updates_model_and_clamps_support():
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    before = {k: v for k, v in eng.router.cost_model.items()}
+    _run_streams(eng)
+    refitted = eng.refit_router(min_samples=2)
+    assert refitted                       # at least one backend re-fitted
+    for name in refitted:
+        assert eng.router.cost_model[name] != before[name]
+    # support clamp: exactly the observed n_pad range
+    assert eng.router.fit_n_range == (64, 256)
+
+
+def test_refit_never_routes_outside_fitted_support():
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    _run_streams(eng)
+    eng.refit_router(min_samples=2)
+    r = eng.router
+    lo, hi = r.fit_n_range
+    # Any query outside the measured range routes exactly like the nearest
+    # measured regime — the refitted linear forms are never evaluated on
+    # unfitted features.
+    for d, b in ((0.0, 1), (0.02, 8), (0.5, 4)):
+        assert r.choose(1, d, b) == r.choose(lo, d, b)
+        assert r.choose(10 ** 9, d, b) == r.choose(hi, d, b)
+        assert r.clamp_features(hi * 16, d, b)[0] == hi
+
+
+def test_refit_keeps_unmeasured_backends_at_prior_coefficients():
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    _run_streams(eng, ns=(64,), passes=2)
+    prior_csr = eng.router.cost_model["csr"]
+    eng.refit_router(min_samples=10 ** 6)   # nobody reaches the bar
+    assert eng.router.cost_model["csr"] == prior_csr
+
+
+def test_refit_requires_auto_engine():
+    eng = ChordalityEngine(backend="jax_fast")
+    with pytest.raises(ValueError, match="auto"):
+        eng.refit_router()
+
+
+def test_stats_surface_unit_samples():
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    res = eng.run([_edge_graph(64, 6, s) for s in range(8)])
+    assert len(res.stats.unit_samples) == res.stats.n_units
+    name, n, density, batch, us = res.stats.unit_samples[0]
+    assert name in eng.router.candidates
+    assert n == 64 and batch == 8
+    assert 0.0 < density < 1.0 and us > 0.0

@@ -250,9 +250,13 @@ def bench_engine_amortization(
 
 def bench_witness(
     ns=(64, 256), densities=(0.05, 0.3), batches=(1, 16),
-    requests=16, repeats=2, backend="jax_fast",
-) -> List[Dict]:
+    requests=16, repeats=5, backend="jax_fast",
+    dispatch_n=64, dispatch_batch=8,
+):
     """Certificate overhead: verdict-only vs full-witness engine runs.
+
+    Returns ``(rows, artifact)``; ``--tables witness`` serializes the
+    artifact to ``BENCH_witness.json`` (the PR 6 acceptance record).
 
     Same warm engine, same plan, two executables per bucket: the verdict
     program and the fused witness program (verdict + clique tree +
@@ -260,12 +264,36 @@ def bench_witness(
     The derived column reports the witness pass's overhead factor — the
     price of making every answer independently checkable — across
     n × density × batch (batch amortizes the fixed dispatch for both).
+    The acceptance bar is overhead ≤ 1.5× at n ≤ 256.
+
+    The artifact additionally records *measured* device dispatches per
+    certified work unit: the Pallas ``fused_witness`` executable (one
+    ``pallas_call`` emits verdict + certificate raw material) and the
+    batch-major jnp witness executable are each run through one real
+    unit with ``repro.kernels.dispatch_counter`` read around the call —
+    both must report 1.
     """
+    import time as _time
+
+    import jax
+
     from benchmarks.paper_tables import time_fn
     from repro.core import generators as G
     from repro.engine import ChordalityEngine
+    from repro.engine.backends import JaxFastBackend, PallasPeoBackend
+    from repro.kernels import dispatch_counter
 
-    rows = []
+    rows: List[Dict] = []
+    artifact: Dict = {
+        "schema": "bench_witness/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "backend": backend,
+        "requests": requests,
+        "overhead_x": {},
+        "witness_ms": {},
+        "verdict_ms": {},
+    }
     for n in ns:
         for d in densities:
             graphs = [G.gnp(n, d, seed=s) for s in range(requests)]
@@ -275,18 +303,67 @@ def bench_witness(
                 eng.run(graphs)                      # compile: verdict
                 res = eng.run(graphs, witness=True)  # compile: witness
                 n_chordal = int(res.verdicts.sum())
-                t_v = time_fn(lambda: eng.run(graphs), repeats)
-                t_w = time_fn(
-                    lambda: eng.run(graphs, witness=True), repeats)
+                # Interleaved best-of pairs: the overhead *ratio* is the
+                # acceptance quantity, so both passes must see the same
+                # machine state — alternating V/W measurements and
+                # keeping each side's best cancels load drift that
+                # independent medians turn into phantom overhead.
+                t_v = t_w = float("inf")
+                for _ in range(max(1, repeats)):
+                    t0 = _time.perf_counter()
+                    eng.run(graphs)
+                    t_v = min(t_v, (_time.perf_counter() - t0) * 1e3)
+                    t0 = _time.perf_counter()
+                    eng.run(graphs, witness=True)
+                    t_w = min(t_w, (_time.perf_counter() - t0) * 1e3)
+                cell = f"n{n}_d{int(d * 100)}_B{b}"
+                factor = t_w / t_v if t_v > 0 else float("inf")
+                artifact["overhead_x"][cell] = round(factor, 2)
+                artifact["verdict_ms"][cell] = round(t_v, 3)
+                artifact["witness_ms"][cell] = round(t_w, 3)
                 rows.append({
-                    "name": f"witness_{backend}_n{n}_d{int(d * 100)}_B{b}",
+                    "name": f"witness_{backend}_{cell}",
                     "us_per_call": t_w * 1e3,
                     "derived": (
                         f"verdict_only_us={t_v * 1e3:.1f};"
-                        f"overhead_x={t_w / t_v:.2f};"
+                        f"overhead_x={factor:.2f};"
                         f"chordal={n_chordal}/{requests}"),
                 })
-    return rows
+
+    # -- measured dispatches per certified unit ---------------------------
+    # One real work unit through each witness executable; the counter
+    # delta is the host-level device-launch count. The Pallas
+    # fused_witness kind is the tentpole claim: certificate raw material
+    # rides the verdict kernel's single dispatch.
+    unit = np.stack([
+        G.sparse_erdos_renyi(dispatch_n, c=6.0, seed=s).with_dense().adj
+        for s in range(dispatch_batch)])
+    n_vec = np.full(dispatch_batch, dispatch_n, dtype=np.int32)
+    pallas = PallasPeoBackend(interpret=True)
+    jfast = JaxFastBackend()
+    counts = {}
+    for name, fn in (
+        ("pallas_fused_witness",
+         pallas.compile_fused_witness_batch(dispatch_n, dispatch_batch)),
+        ("jax_fast_witness",
+         jfast.compile_witness_batch(dispatch_n, dispatch_batch)),
+    ):
+        fn(unit, n_vec)                      # compile outside the count
+        c0 = dispatch_counter.count
+        wb = fn(unit, n_vec)
+        counts[name] = dispatch_counter.delta(c0)
+        rows.append({
+            "name": f"dispatch_{name}_n{dispatch_n}_B{dispatch_batch}",
+            "us_per_call": time_fn(
+                lambda: fn(unit, n_vec), max(1, repeats - 1)) * 1e3,
+            "derived": (
+                f"dispatches_per_certified_unit={counts[name]};"
+                f"chordal={int(np.sum(wb.chordal))}/{dispatch_batch}"),
+        })
+    artifact["dispatch_per_certified_unit"] = {
+        "n_pad": dispatch_n, "batch": dispatch_batch, **counts}
+    artifact["rows"] = [r["name"] for r in rows]
+    return rows, artifact
 
 
 def bench_service(

@@ -1,0 +1,176 @@
+"""Perf-regression gate over the committed benchmark artifacts.
+
+CI's smoke job regenerates ``BENCH_kernels.json`` (and, for certified
+traffic, ``BENCH_witness.json``) on every run; this module compares the
+fresh artifact against the committed baseline and **fails the build** if
+a structural perf property regressed:
+
+* ``dispatch_per_unit`` / ``dispatch_per_certified_unit`` — measured
+  device launches per work unit. These are exact integers (the fused
+  pipelines' whole claim is "one dispatch"), so any increase over the
+  baseline is a hard failure, no tolerance.
+* ``lexbfs_batched_speedup_vs_scan`` — wall-time speedup factors. Noisy
+  on shared CI boxes, so the gate is loose: a fresh factor below
+  ``tolerance`` × baseline (default 0.5) fails; anything above passes.
+
+Only keys present in *both* artifacts are compared — a baseline measured
+at different sizes (e.g. ``--smoke`` vs full) gates only the overlap,
+and a missing baseline file passes with a notice (first run on a branch
+that never committed one).
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \
+        [--fresh BENCH_kernels.json] [--baseline <path-or-git>] \
+        [--witness-fresh BENCH_witness.json] [--tolerance 0.5]
+
+``--baseline`` defaults to ``git show HEAD:<fresh-name>`` — the artifact
+as committed, which is what "no worse than the repo claims" means.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+from typing import Dict, List, Optional
+
+
+def _load_baseline(fresh_path: str, baseline: Optional[str]) -> Optional[Dict]:
+    """Committed twin of a fresh artifact (None = no baseline to gate on)."""
+    if baseline is not None:
+        try:
+            with open(baseline) as f:
+                return json.load(f)
+        except OSError:
+            return None
+    out = subprocess.run(
+        ["git", "show", f"HEAD:{fresh_path}"],
+        capture_output=True, text=True)
+    if out.returncode != 0:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def gate_dispatch_counts(
+    fresh: Dict, base: Dict, key: str, label: str
+) -> List[str]:
+    """Hard gate: measured dispatches per unit may never increase."""
+    errs = []
+    f, b = fresh.get(key, {}), base.get(key, {})
+    for name in sorted(set(f) & set(b)):
+        if name in ("n_pad", "batch"):
+            continue
+        if not isinstance(b[name], (int, float)):
+            continue
+        if f[name] > b[name]:
+            errs.append(
+                f"{label}.{key}[{name}]: {f[name]} dispatches > "
+                f"committed {b[name]} — the fused pipeline regressed")
+    return errs
+
+
+def gate_speedups(
+    fresh: Dict, base: Dict, key: str, label: str, tolerance: float
+) -> List[str]:
+    """Loose gate: wall-time factors may not collapse below tolerance×."""
+    errs = []
+    f, b = fresh.get(key, {}), base.get(key, {})
+    for name in sorted(set(f) & set(b)):
+        floor = tolerance * float(b[name])
+        if float(f[name]) < floor:
+            errs.append(
+                f"{label}.{key}[{name}]: {f[name]} < "
+                f"{tolerance}x committed {b[name]} (floor {floor:.2f})")
+    return errs
+
+
+def gate_overheads(
+    fresh: Dict, base: Dict, key: str, label: str, tolerance: float
+) -> List[str]:
+    """Loose gate on ratios where *smaller* is better (witness overhead):
+    fresh may not exceed baseline / tolerance."""
+    errs = []
+    f, b = fresh.get(key, {}), base.get(key, {})
+    for name in sorted(set(f) & set(b)):
+        ceil = float(b[name]) / tolerance
+        if float(f[name]) > ceil:
+            errs.append(
+                f"{label}.{key}[{name}]: {f[name]} > "
+                f"committed {b[name]} / {tolerance} (ceiling {ceil:.2f})")
+    return errs
+
+
+def run_gate(
+    fresh_path: str = "BENCH_kernels.json",
+    baseline: Optional[str] = None,
+    witness_fresh: Optional[str] = "BENCH_witness.json",
+    witness_baseline: Optional[str] = None,
+    tolerance: float = 0.5,
+) -> List[str]:
+    """All gate failures across both artifacts (empty = pass)."""
+    errs: List[str] = []
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except OSError:
+        return [f"fresh artifact {fresh_path!r} missing — run "
+                "`python -m benchmarks.run --tables kernels` first"]
+    base = _load_baseline(fresh_path, baseline)
+    if base is None:
+        print(f"# perf_gate: no committed baseline for {fresh_path}; "
+              "skipping", file=sys.stderr)
+    else:
+        errs += gate_dispatch_counts(
+            fresh, base, "dispatch_per_unit", fresh_path)
+        errs += gate_speedups(
+            fresh, base, "lexbfs_batched_speedup_vs_scan", fresh_path,
+            tolerance)
+
+    if witness_fresh is not None:
+        try:
+            with open(witness_fresh) as f:
+                wfresh = json.load(f)
+        except OSError:
+            wfresh = None
+        wbase = (_load_baseline(witness_fresh, witness_baseline)
+                 if wfresh is not None else None)
+        if wfresh is not None and wbase is not None:
+            errs += gate_dispatch_counts(
+                wfresh, wbase, "dispatch_per_certified_unit", witness_fresh)
+            errs += gate_overheads(
+                wfresh, wbase, "overhead_x", witness_fresh, tolerance)
+        elif wfresh is not None:
+            print(f"# perf_gate: no committed baseline for "
+                  f"{witness_fresh}; skipping", file=sys.stderr)
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", default="BENCH_kernels.json")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline path (default: git show HEAD:<fresh>)")
+    ap.add_argument("--witness-fresh", default="BENCH_witness.json")
+    ap.add_argument("--witness-baseline", default=None)
+    ap.add_argument("--tolerance", type=float, default=0.5,
+                    help="speedup floor / overhead ceiling factor")
+    args = ap.parse_args(argv)
+    errs = run_gate(
+        fresh_path=args.fresh, baseline=args.baseline,
+        witness_fresh=args.witness_fresh,
+        witness_baseline=args.witness_baseline,
+        tolerance=args.tolerance)
+    if errs:
+        for e in errs:
+            print(f"PERF REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print("# perf_gate: ok", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

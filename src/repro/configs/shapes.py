@@ -208,6 +208,55 @@ FUSED_MAX_NPAD: int = max(
 # (LexBFS + two-kernel PEO) pipeline instead — see DESIGN.md §11.
 
 
+def fused_witness_vmem_bytes(n_pad: int, u_block: int = 512) -> int:
+    """VMEM bytes for the fused *witness* kernel program at ``n_pad``.
+
+    The witness variant (DESIGN.md §12) streams one extra (n_pad, n_pad)
+    int8 output — the per-vertex LN membership rows, double-buffered like
+    the adjacency input — plus the parent row and the 3-cell triple on
+    top of the verdict kernel's footprint.
+    """
+    ln_out = 2 * n_pad * n_pad                    # int8, double-buffered
+    extra = n_pad * 4 + 3 * 4                     # parent row + triple
+    return fused_vmem_bytes(n_pad, u_block) + ln_out + extra
+
+
+FUSED_WITNESS_MAX_NPAD: int = max(
+    (b for b in ENGINE_NPAD_BUCKETS
+     if fused_witness_vmem_bytes(b) <= TPU_VMEM_BYTES),
+    default=ENGINE_NPAD_BUCKETS[0],
+)
+# 1024 with the default grids: the 2 MB LN output block joins the 2 MB
+# adjacency + 2 MB comparator tile well under budget at 1024, while 2048
+# (8 MB adjacency + 8 MB LN + 4 MB comparator) blows it. Bigger certified
+# buckets fall back to the batch-major jnp witness executable.
+
+
+FUSED_PACK_FACTOR: int = 8
+# Graphs per packed program: tiny buckets pack G block-diagonal units into
+# one grid step so the (B/G,) grid amortizes launch/pipeline overhead.
+
+FUSED_PACK_MAX_NPAD: int = 64
+# Packing pays off only while G adjacency blocks stay trivially VMEM-
+# resident and the per-step argmax stays lane-parallel; 64 is the largest
+# bucket where G=8 blocks plus state stay under ~1% of the VMEM budget.
+
+
+def fused_packed_vmem_bytes(
+    n_pad: int, pack: int = FUSED_PACK_FACTOR, u_block: int = 512
+) -> int:
+    """VMEM bytes for one packed program: ``pack`` block-diagonal graphs.
+
+    Every term of :func:`fused_vmem_bytes` scales by the pack factor —
+    the (G, n_pad, n_pad) adjacency block, (G, n_pad) state rows, and the
+    (G, U, n_pad) comparator tile.
+    """
+    adj = 2 * pack * n_pad * n_pad
+    comparator = pack * min(u_block, n_pad) * n_pad * 4
+    state = 3 * pack * n_pad * 4
+    return adj + comparator + state + 4 * pack
+
+
 def engine_deg_bucket(deg: int, n_pad: int) -> int:
     """Power-of-two bucket for the padded max row degree, capped at n_pad.
 

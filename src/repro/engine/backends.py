@@ -110,6 +110,15 @@ class ChordalityBackend:
         raise NotImplementedError(
             f"backend {self.name!r} has no fused pipeline")
 
+    def witness_kind(self, n_pad: int) -> str:
+        """Which executable family serves certified traffic at a bucket:
+        ``"witness"`` (:meth:`compile_witness_batch`) or
+        ``"fused_witness"`` (:meth:`compile_fused_witness_batch` — the
+        verdict kernel emits certificate raw material in the same
+        dispatch). Mirrors :meth:`verdict_kind`; the session/compile
+        cache key it per bucket."""
+        return "witness"
+
     def compile_witness_batch(self, n_pad: int, batch: int):
         """Executable for the witness pass at one fixed shape.
 
@@ -124,6 +133,24 @@ class ChordalityBackend:
         """
         raise NotImplementedError(
             f"backend {self.name!r} does not produce witnesses")
+
+    def compile_fused_witness_batch(self, n_pad: int, batch: int):
+        """Same contract as :meth:`compile_witness_batch`, but the device
+        work must be the backend's *one* fused dispatch (verdict +
+        certificate raw material in a single kernel launch); cached under
+        ``kind="fused_witness"``."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no fused witness pipeline")
+
+    def compile_fused_packed_batch(
+        self, n_pad: int, batch: int
+    ) -> Callable[[np.ndarray], np.ndarray]:
+        """Packed tiny-bucket variant of :meth:`compile_fused_batch`:
+        multiple graphs per grid program (``FUSED_PACK_FACTOR``
+        block-diagonal units), still one device dispatch per work unit;
+        cached under ``kind="fused_packed"``."""
+        raise NotImplementedError(
+            f"backend {self.name!r} has no packed fused pipeline")
 
 
 # ---------------------------------------------------------------------------
@@ -179,7 +206,6 @@ class _JaxBackendBase(ChordalityBackend):
 
     def compile_batch(self, n_pad, batch):
         import jax
-        import jax.numpy as jnp
 
         from repro.core.peo import peo_check
 
@@ -191,7 +217,9 @@ class _JaxBackendBase(ChordalityBackend):
         fn = jax.jit(jax.vmap(one))
 
         def run(adjs: np.ndarray) -> np.ndarray:
-            return np.asarray(fn(jnp.asarray(adjs)))
+            # numpy in, numpy out: jit's implicit device_put beats an
+            # explicit jnp.asarray round-trip on the small-unit hot path.
+            return np.asarray(fn(adjs))
 
         return run
 
@@ -238,6 +266,16 @@ class JaxFastBackend(_JaxBackendBase):
 
         return lexbfs_fast
 
+    def compile_witness_batch(self, n_pad, batch):
+        # The batch-major fused executable: same orders (lexbfs_fast IS
+        # the batch-major loop), one jit dispatch, and the clique/cycle
+        # follow-ups gated at batch granularity instead of vmapped
+        # select-both-branches. jax_faithful keeps the vmapped reference
+        # kernel, preserving the differential pair.
+        from repro.witness import make_fused_witness_kernel
+
+        return make_fused_witness_kernel()
+
 
 class PallasPeoBackend(ChordalityBackend):
     """The Pallas kernel backend — two pipelines over one registry entry:
@@ -261,9 +299,19 @@ class PallasPeoBackend(ChordalityBackend):
     on TPU. ``caps.batched`` stays False: it describes the *split* batch
     contract; fused units are natively batched and keyed separately.
 
-    The witness pass has no fused-kernel specialization — it uses the
-    shared ``repro.witness`` device kernel over the same ``lexbfs`` orders
-    the Pallas verdict pipelines consume.
+    PR 6 adds two more compile-cache kinds (DESIGN.md §12):
+
+    * ``fused_witness`` — the witness variant of the fused kernel emits
+      per-vertex LN rows, parent pointers, and the latest violating
+      triple alongside the verdict, so certified traffic is the same one
+      ``pallas_call`` as verdict-only (host finalization assembles the
+      WitnessBatch from the raw material). Capped at
+      ``FUSED_WITNESS_MAX_NPAD`` by the LN output's VMEM footprint;
+      bigger buckets fall back to the batch-major jnp executable.
+    * ``fused_packed`` — tiny buckets (``n_pad <= FUSED_PACK_MAX_NPAD``)
+      pack ``FUSED_PACK_FACTOR`` graphs per grid program, amortizing
+      launch/pipeline overhead at high batch. Served whenever the fused
+      pipeline would serve the bucket.
     """
 
     name = "pallas_peo"
@@ -282,13 +330,23 @@ class PallasPeoBackend(ChordalityBackend):
         self._pipeline = pipeline
 
     def verdict_kind(self, n_pad: int) -> str:
-        from repro.configs.shapes import FUSED_MAX_NPAD
+        from repro.configs.shapes import FUSED_MAX_NPAD, FUSED_PACK_MAX_NPAD
 
         if n_pad > FUSED_MAX_NPAD:
             return "verdict"           # VMEM budget: split pipeline
         if self._pipeline == "auto":
-            return "verdict" if self._interpret else "fused"
-        return "fused" if self._pipeline == "fused" else "verdict"
+            if self._interpret:
+                return "verdict"
+        elif self._pipeline != "fused":
+            return "verdict"
+        return ("fused_packed" if n_pad <= FUSED_PACK_MAX_NPAD
+                else "fused")
+
+    def witness_kind(self, n_pad: int) -> str:
+        from repro.configs.shapes import FUSED_WITNESS_MAX_NPAD
+
+        return ("fused_witness" if n_pad <= FUSED_WITNESS_MAX_NPAD
+                else "witness")
 
     def compile_fused_batch(self, n_pad, batch):
         import jax.numpy as jnp
@@ -336,11 +394,46 @@ class PallasPeoBackend(ChordalityBackend):
         viol = int(peo_violations_count(a, order, interpret=self._interpret))
         return viol == 0, np.asarray(order), viol
 
-    def compile_witness_batch(self, n_pad, batch):
-        from repro.core.lexbfs import lexbfs
-        from repro.witness import make_witness_kernel
+    def compile_fused_packed_batch(self, n_pad, batch):
+        import jax.numpy as jnp
 
-        return make_witness_kernel(lexbfs)
+        from repro.kernels.lexbfs_fused.ops import lexbfs_peo_fused_packed
+
+        interpret = self._interpret
+
+        def run(adjs: np.ndarray) -> np.ndarray:
+            verdicts, _, _ = lexbfs_peo_fused_packed(
+                jnp.asarray(np.asarray(adjs, dtype=np.int8)),
+                interpret=interpret)
+            return np.asarray(verdicts)
+
+        return run
+
+    def compile_fused_witness_batch(self, n_pad, batch):
+        import jax.numpy as jnp
+
+        from repro.kernels.lexbfs_fused.ops import lexbfs_peo_fused_witness
+        from repro.witness import witness_batch_from_fused_raw
+
+        interpret = self._interpret
+
+        def run(adjs, n_nodes):
+            adjs = np.asarray(adjs, dtype=bool)
+            _, orders, viols, ln, parent, triple = lexbfs_peo_fused_witness(
+                jnp.asarray(adjs.astype(np.int8)), interpret=interpret)
+            return witness_batch_from_fused_raw(
+                adjs, np.asarray(orders), np.asarray(viols),
+                np.asarray(ln), np.asarray(parent), np.asarray(triple),
+                n_nodes)
+
+        return run
+
+    def compile_witness_batch(self, n_pad, batch):
+        # Fallback past FUSED_WITNESS_MAX_NPAD: the batch-major jnp
+        # executable (same orders, one jit dispatch).
+        from repro.witness import make_fused_witness_kernel
+
+        return make_fused_witness_kernel()
 
 
 class ShardedBackend(ChordalityBackend):
@@ -411,9 +504,10 @@ class CSRBackend(ChordalityBackend):
 
     Witness pass: orders come from the CSR LexBFS host twin
     (bit-identical to every other pipeline); the clique/coloring/cycle
-    extraction then runs on a densified view — witness structures
-    (membership matrices, intersection weights) are Θ(n²) objects anyway,
-    so the O(N+M) operand advantage does not extend to them.
+    extraction walks the packed edge stream directly
+    (``repro.witness.csr``) — the adjacency is **never** densified. The
+    only square arrays built are certificate outputs (clique membership
+    rows on chordal slots), which are Θ(n²) payload by contract.
     """
 
     name = "csr"
@@ -464,20 +558,15 @@ class CSRBackend(ChordalityBackend):
 
     def compile_witness_batch(self, n_pad, batch):
         from repro.sparse import lexbfs_csr_numpy_batch
-        from repro.witness import witness_batch_numpy
+        from repro.witness.csr import witness_batch_csr_numpy
 
         def run(payload, n_nodes):
             packed = self._pack(payload, n_pad)
             orders = lexbfs_csr_numpy_batch(
                 packed.row_ptr, packed.col_idx, packed.deg_pad)
-            b, np1 = packed.row_ptr.shape
-            adjs = np.zeros((b, np1 - 1, np1 - 1), dtype=bool)
-            for i in range(b):
-                nnz = int(packed.row_ptr[i, -1])
-                deg = np.diff(packed.row_ptr[i])
-                rows = np.repeat(np.arange(np1 - 1), deg)
-                adjs[i, rows, packed.col_idx[i, :nnz]] = True
-            return witness_batch_numpy(adjs, orders, n_nodes)
+            return witness_batch_csr_numpy(
+                packed.row_ptr, packed.col_idx,
+                np.stack([np.asarray(o) for o in orders]), n_nodes)
 
         return run
 

@@ -160,12 +160,18 @@ class CompileCache:
     ``kind`` selects the executable family: ``"verdict"`` programs come
     from ``backend.compile_batch``, ``"fused"`` programs (the whole unit
     in one device dispatch, e.g. the single-pass LexBFS+PEO Pallas
-    kernel) from ``backend.compile_fused_batch``, and ``"witness"``
-    programs (verdict + certificate extraction in one fused pass, see
-    ``repro.witness``) from ``backend.compile_witness_batch``. All ride
+    kernel) from ``backend.compile_fused_batch``, ``"fused_packed"``
+    programs (G graphs block-diagonal per grid program for tiny buckets)
+    from ``backend.compile_fused_packed_batch``, ``"witness"`` programs
+    (verdict + certificate extraction in one fused pass, see
+    ``repro.witness``) from ``backend.compile_witness_batch``, and
+    ``"fused_witness"`` programs (the Pallas kernel emitting certificate
+    raw material alongside the verdict in the same dispatch) from
+    ``backend.compile_fused_witness_batch``. All ride
     the same bucket grid, so enabling a family adds at most one extra
     compile per bucket shape; the session picks the verdict family per
-    bucket via ``backend.verdict_kind(n_pad)``. A
+    bucket via ``backend.verdict_kind(n_pad)`` and the witness family
+    via ``backend.witness_kind(n_pad)``. A
     miss pays tracing + XLA compile for the device backends; a hit reuses
     the executable. The hit/miss counters feed the engine's stats — in
     steady-state serving, misses stay flat.
@@ -189,8 +195,12 @@ class CompileCache:
                 fn = backend.compile_batch(n_pad, batch)
             elif kind == "fused":
                 fn = backend.compile_fused_batch(n_pad, batch)
+            elif kind == "fused_packed":
+                fn = backend.compile_fused_packed_batch(n_pad, batch)
             elif kind == "witness":
                 fn = backend.compile_witness_batch(n_pad, batch)
+            elif kind == "fused_witness":
+                fn = backend.compile_fused_witness_batch(n_pad, batch)
             else:
                 raise ValueError(f"unknown executable kind {kind!r}")
             self._fns[key] = fn

@@ -58,27 +58,31 @@ class BackendCost:
 
 CostModel = Mapping[str, BackendCost]
 
-# Fitted on the CI reference host (2-core CPU, jax 0.4.37) from
-# bench_router_samples (warm engines, best-of-5 sub-ms cells); re-fitted
-# in PR 5 after the batch-major LexBFS restructure shifted every device
-# backend's cost curve. Regenerate via
+# Fitted on the CI reference host from bench_router_samples (warm
+# engines, best-of-5 sub-ms cells); re-fitted in PR 6 — in the *same
+# session* as DEFAULT_WITNESS_COST_MODEL, so cross-mode comparisons
+# (estimate_us_per_graph mode="witness" vs verdict) are coherent — after
+# the numpy-in/numpy-out wrapper restructure cut jax_fast's per-unit
+# dispatch cost ~4x. Regenerate via
 #   PYTHONPATH=src python -m benchmarks.run --tables router
 # and repro.engine.router.fit_cost_model (or online:
 # ChordalityEngine.refit_router). Measured crossovers this model encodes:
-# numpy_ref wins single-shot tiny requests (B=1, n <= ~32, no dispatch);
-# jax_fast wins batched tiny/mid and all dense traffic; csr overtakes
+# jax_fast wins tiny through dense-bulk traffic (the PR 6 wrapper fix
+# dropped its dispatch floor below numpy_ref's per-graph python cost, so
+# numpy_ref no longer wins single-shot tiny requests — it remains the
+# zero-compile fallback and the differential oracle); csr overtakes
 # jax_fast on sparse streams around n ~ 512 at density c/n (earlier for
 # lower density / bigger batches) — DESIGN.md §8.
 DEFAULT_COST_MODEL: Dict[str, BackendCost] = {
     "numpy_ref": BackendCost(
-        dispatch_us=0.0, per_graph_us=228.6, sweep_us=0.0,
-        n_us=5.197, n2_us=0.08880, m_us=0.0),
+        dispatch_us=0.0, per_graph_us=122.9, sweep_us=0.0,
+        n_us=8.121, n2_us=0.03439, m_us=0.0),
     "jax_fast": BackendCost(
-        dispatch_us=829.9, per_graph_us=0.0, sweep_us=0.0,
-        n_us=0.545, n2_us=0.01601, m_us=0.0),
+        dispatch_us=92.57, per_graph_us=0.9986, sweep_us=0.0,
+        n_us=0.4237, n2_us=0.009035, m_us=0.0),
     "csr": BackendCost(
-        dispatch_us=231.4, per_graph_us=73.3, sweep_us=23.06,
-        n_us=0.0, n2_us=0.00637, m_us=0.172),
+        dispatch_us=87.54, per_graph_us=36.89, sweep_us=9.128,
+        n_us=0.6673, n2_us=0.002517, m_us=0.1317),
     # The fused single-dispatch Pallas pipeline (pallas_peo,
     # pipeline="fused"): one kernel launch per unit (dispatch term), then a
     # per-graph sequential n-loop whose per-step row reads and periodic
@@ -89,8 +93,36 @@ DEFAULT_COST_MODEL: Dict[str, BackendCost] = {
     # DEFAULT_CANDIDATES. A TPU deployment re-fits via --tables router (or
     # ChordalityEngine.refit_router) and opts it into the candidate list.
     "pallas_peo": BackendCost(
-        dispatch_us=715.4, per_graph_us=0.0, sweep_us=0.0,
-        n_us=2.358, n2_us=0.00560, m_us=0.0),
+        dispatch_us=847.6, per_graph_us=0.0, sweep_us=0.0,
+        n_us=0.3358, n2_us=0.009781, m_us=0.0),
+}
+
+# Witness-mode coefficients: what a *certified* graph costs end to end —
+# LexBFS + PEO + certificate extraction (cliques, clique tree, coloring /
+# chordless cycle). Same linear form, separate fit: extraction shifts
+# every backend's curve differently (numpy_ref pays per-graph python
+# clique loops, jax_fast pays one heavier fused batch-major program, csr
+# pays segment-reduction passes over edge windows), so routing certified
+# traffic off the verdict coefficients would misplace every crossover.
+# Fitted on the CI reference host (PR 6) in the same session as
+# DEFAULT_COST_MODEL, over the bench_router_samples grid measured with
+# witness=True; re-fit via fit_cost_model over
+# (backend, n, density, batch, us) rows.
+DEFAULT_WITNESS_COST_MODEL: Dict[str, BackendCost] = {
+    "numpy_ref": BackendCost(
+        dispatch_us=0.0, per_graph_us=207.0, sweep_us=0.0,
+        n_us=7.322, n2_us=0.04848, m_us=0.0),
+    "jax_fast": BackendCost(
+        dispatch_us=121.3, per_graph_us=23.93, sweep_us=0.0,
+        n_us=0.0, n2_us=0.01644, m_us=0.0),
+    "csr": BackendCost(
+        dispatch_us=59.83, per_graph_us=117.8, sweep_us=8.96,
+        n_us=0.6814, n2_us=0.002221, m_us=0.1432),
+    # One pallas_call still (fused_witness kind): verdict dispatch plus the
+    # LN-row stores in-loop, then host finalization per certified graph.
+    "pallas_peo": BackendCost(
+        dispatch_us=292.0, per_graph_us=53.56, sweep_us=0.0,
+        n_us=2.447, n2_us=0.01301, m_us=0.0),
 }
 
 #: Backends "auto" chooses among. All three carry the certificate cap;
@@ -114,9 +146,16 @@ class Router:
         cost_model: Optional[CostModel] = None,
         candidates: Sequence[str] = DEFAULT_CANDIDATES,
         fit_n_range: Tuple[int, int] = DEFAULT_FIT_N_RANGE,
+        *,
+        witness_cost_model: Optional[CostModel] = None,
     ):
         self.cost_model: Dict[str, BackendCost] = dict(
             DEFAULT_COST_MODEL if cost_model is None else cost_model)
+        # Witness-mode coefficients; a backend missing here falls back to
+        # its verdict entry (custom verdict-only models keep working).
+        self.witness_cost_model: Dict[str, BackendCost] = dict(
+            DEFAULT_WITNESS_COST_MODEL if witness_cost_model is None
+            else witness_cost_model)
         self.candidates = tuple(candidates)
         unknown = [c for c in self.candidates if c not in self.cost_model]
         if unknown:
@@ -146,8 +185,15 @@ class Router:
         return n, density, batch
 
     def estimate_us_per_graph(
-        self, name: str, n: int, density: float, batch: int
+        self, name: str, n: int, density: float, batch: int,
+        *, mode: str = "verdict",
     ) -> float:
+        if mode == "witness":
+            cost = self.witness_cost_model.get(name)
+            if cost is not None:
+                return cost.us_per_graph(n, density, batch)
+        elif mode != "verdict":
+            raise ValueError(f"unknown routing mode {mode!r}")
         return self.cost_model[name].us_per_graph(n, density, batch)
 
     def choose(
@@ -156,24 +202,32 @@ class Router:
         density: float,
         batch: int,
         require: Iterable[str] = (),
+        *,
+        mode: str = "verdict",
     ) -> str:
         """Cheapest candidate whose capabilities cover ``require``.
 
         ``require`` names :class:`~repro.engine.backends.BackendCaps`
         fields (e.g. ``("certificate",)``); a backend missing any required
         capability is excluded no matter how cheap the model says it is.
+        ``mode="witness"`` prices candidates with the witness-mode
+        coefficients (and implies the witness capability requirement) —
+        certified traffic has different crossovers than verdict-only.
         Features are clamped to the fitted support first
         (:meth:`clamp_features`), so degenerate inputs route like the
         nearest measured regime instead of extrapolating.
         """
         n, density, batch = self.clamp_features(n, density, batch)
         req = tuple(require)
+        if mode == "witness" and "witness" not in req:
+            req = req + ("witness",)
         best_name, best_cost = None, math.inf
         for name in self.candidates:
             caps = backend_spec(name).caps
             if any(not getattr(caps, r) for r in req):
                 continue
-            cost = self.estimate_us_per_graph(name, n, density, batch)
+            cost = self.estimate_us_per_graph(
+                name, n, density, batch, mode=mode)
             if cost < best_cost:
                 best_name, best_cost = name, cost
         if best_name is None:
@@ -181,19 +235,23 @@ class Router:
                 f"no candidate in {self.candidates} satisfies {req}")
         return best_name
 
-    def annotate(self, plan: Plan, graphs) -> Plan:
+    def annotate(self, plan: Plan, graphs, *, witness: bool = False) -> Plan:
         """Return a plan whose units carry per-unit backend choices.
 
         The density feature is the unit mean of ``n_edges / n_pad²`` —
         what the padded work unit will actually look like on device.
+        ``witness=True`` routes with the witness-mode coefficients (the
+        plan's units will run certified executables, whose cost curves
+        cross over elsewhere).
         """
+        mode = "witness" if witness else "verdict"
         units: List[WorkUnit] = []
         for u in plan.units:
             m_mean = (
                 float(np.mean([graphs[i].n_edges for i in u.indices]))
                 if u.indices else 0.0)
             density = m_mean / float(u.n_pad * u.n_pad)
-            name = self.choose(u.n_pad, density, u.batch)
+            name = self.choose(u.n_pad, density, u.batch, mode=mode)
             units.append(dataclasses.replace(u, backend=name))
         return Plan(units=units, n_requests=plan.n_requests)
 

@@ -115,6 +115,10 @@ class ServiceStats:
     n_failed: int = 0
     n_expired: int = 0     # dropped in-queue past their deadline
     n_units: int = 0
+    #: units upgraded to the fused witness executable because at least one
+    #: live request in them asked ``want_witness`` — the batching economics
+    #: of certified serving (one heavier dispatch amortized over the unit).
+    witness_upgraded: int = 0
     queue_delays_ms: List[float] = dataclasses.field(default_factory=list)
     exec_latencies_ms: List[float] = dataclasses.field(default_factory=list)
     #: {filled slots: units executed with that occupancy}
@@ -630,6 +634,8 @@ class AsyncChordalityEngine:
             cert_errs.append(err)
         with self._lock:
             self.stats.n_units += 1
+            if unit_wits is not None:
+                self.stats.witness_upgraded += 1
             self.stats.exec_latencies_ms.append(exec_ms)
             occ = sum(live)       # cancelled-after-drain slots don't count
             self.stats.occupancy_histogram[occ] = \

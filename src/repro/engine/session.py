@@ -212,11 +212,19 @@ class ChordalityEngine:
         return n_vec
 
     # -- planning ----------------------------------------------------------
-    def plan(self, graphs: Sequence[Graph]) -> Plan:
+    def plan(self, graphs: Sequence[Graph],
+             witness: Optional[bool] = None) -> Plan:
+        """Shape-bucketed plan; auto engines route each unit.
+
+        ``witness`` (default: the engine's witness setting) prices the
+        routing with the witness-mode cost model — certified units run
+        heavier executables, so their backend crossovers differ.
+        """
+        witness = self.witness_default if witness is None else witness
         plan = plan_requests(
             graphs, max_batch=self.max_batch, buckets=self.buckets)
         if self.router is not None:
-            plan = self.router.annotate(plan, graphs)
+            plan = self.router.annotate(plan, graphs, witness=bool(witness))
         return plan
 
     def route_unit(self, unit, graphs: Sequence[Graph]):
@@ -255,7 +263,9 @@ class ChordalityEngine:
                 kind=self.backend.verdict_kind(n_pad))
             fn(np.zeros((b, n_pad, n_pad), dtype=bool))
             if wbackend is not None:
-                wfn = self.cache.get(wbackend, n_pad, b, kind="witness")
+                wfn = self.cache.get(
+                    wbackend, n_pad, b,
+                    kind=wbackend.witness_kind(n_pad))
                 wfn(np.zeros((b, n_pad, n_pad), dtype=bool),
                     np.zeros(b, dtype=np.int32))
         return self
@@ -284,7 +294,8 @@ class ChordalityEngine:
             if witness:
                 wbackend = self._resolve_witness(unit.backend)
                 wfn = self.cache.get(
-                    wbackend, unit.n_pad, unit.batch, kind="witness")
+                    wbackend, unit.n_pad, unit.batch,
+                    kind=wbackend.witness_kind(unit.n_pad))
             if backend.caps.sparse and graphs is not None:
                 payload = realize_unit_csr(unit, graphs)
                 fn(payload)
@@ -346,7 +357,9 @@ class ChordalityEngine:
         ``(verdicts, witnesses, backend_name, exec_ms)``.
 
         The witness twin of :meth:`execute_unit`: one fused executable
-        (cached under ``kind="witness"`` on the same bucket key) produces
+        (cached under ``backend.witness_kind(n_pad)`` — ``"witness"`` or
+        the raw-material ``"fused_witness"`` — on the same bucket key)
+        produces
         verdict **and** certificate structures per slot; the padded
         :class:`~repro.witness.WitnessBatch` is cropped to per-request
         ``WitnessResult``\\ s. A non-witness backend on the unit falls
@@ -356,7 +369,8 @@ class ChordalityEngine:
         payload = self._realize(backend, unit, graphs)
         n_vec = self._unit_n_nodes(unit, graphs)
         fn = self.cache.get(
-            backend, unit.n_pad, unit.batch, kind="witness")
+            backend, unit.n_pad, unit.batch,
+            kind=backend.witness_kind(unit.n_pad))
         t1 = time.perf_counter()
         wb = fn(payload, n_vec)
         exec_ms = (time.perf_counter() - t1) * 1e3
@@ -382,7 +396,7 @@ class ChordalityEngine:
         verdict-only one.
         """
         witness = self.witness_default if witness is None else witness
-        plan = self.plan(graphs)
+        plan = self.plan(graphs, witness=witness)
         verdicts = np.zeros(plan.n_requests, dtype=bool)
         witnesses: Optional[List] = [None] * plan.n_requests \
             if witness else None
@@ -471,13 +485,15 @@ class ChordalityEngine:
         padded[:n, :n] = adj[:n, :n]
         return padded, n, n_pad
 
-    def _route_single(self, padded, n_pad: int, require) -> Optional[str]:
+    def _route_single(self, padded, n_pad: int, require,
+                      mode: str = "verdict") -> Optional[str]:
         """Router's pick for a padded batch=1 request (None on fixed
         engines — the caller applies its own fallback policy)."""
         if self.router is None:
             return None
         density = float(padded.sum()) / float(n_pad * n_pad)
-        return self.router.choose(n_pad, density, batch=1, require=require)
+        return self.router.choose(
+            n_pad, density, batch=1, require=require, mode=mode)
 
     def certificate(self, graph_or_adj) -> Certificate:
         """Detailed single-graph answer through the engine's shape planning.
@@ -510,8 +526,10 @@ class ChordalityEngine:
         """
         padded, n, n_pad = self._pad_single(graph_or_adj)
         backend = self._resolve_witness(
-            self._route_single(padded, n_pad, ("witness",)))
-        fn = self.cache.get(backend, n_pad, 1, kind="witness")
+            self._route_single(padded, n_pad, ("witness",),
+                               mode="witness"))
+        fn = self.cache.get(
+            backend, n_pad, 1, kind=backend.witness_kind(n_pad))
         wb = fn(padded[None], np.array([n], dtype=np.int32))
         adj_fallback = padded if (
             not wb.chordal[0] and wb.cycle_len[0] < 4) else None

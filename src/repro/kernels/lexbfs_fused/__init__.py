@@ -1,3 +1,11 @@
-from repro.kernels.lexbfs_fused.ops import lexbfs_peo_fused
+from repro.kernels.lexbfs_fused.ops import (
+    lexbfs_peo_fused,
+    lexbfs_peo_fused_packed,
+    lexbfs_peo_fused_witness,
+)
 
-__all__ = ["lexbfs_peo_fused"]
+__all__ = [
+    "lexbfs_peo_fused",
+    "lexbfs_peo_fused_packed",
+    "lexbfs_peo_fused_witness",
+]

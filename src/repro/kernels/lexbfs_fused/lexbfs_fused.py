@@ -148,3 +148,217 @@ def lexbfs_peo_fused_call(
         ],
         interpret=interpret,
     )(adj_i8)
+
+
+def _fused_witness_kernel(n, k_inner, u_block, adj_ref, order_ref, viol_ref,
+                          ln_ref, parent_ref, triple_ref, rank_ref, pos_ref):
+    """Verdict kernel + certificate raw material in the same visit loop.
+
+    On top of :func:`_fused_kernel`'s outputs the program emits, with no
+    extra adjacency reads (DESIGN.md §12):
+
+    ln_ref:     (1, N, N) int8  LN(v) membership row, stored at row v the
+                                moment v is visited — ``Adj[v] ∧ visited``
+                                at visit time IS the final LN row;
+    parent_ref: (1, N) int32    rightmost-left-neighbor p(v) (0 when LN
+                                is empty — the host producers' argmax
+                                convention);
+    triple_ref: (1, 3) int32    latest violating (v, p(v), w); visits run
+                                in increasing pos, so the survivor is the
+                                deterministic triple the host twin picks.
+                                (-1, -1, -1) when the order is a PEO.
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, n), 1)
+    tlane = jax.lax.broadcasted_iota(jnp.int32, (1, 3), 1)
+
+    rank_ref[...] = jnp.zeros_like(rank_ref)
+    pos_ref[...] = jnp.zeros_like(pos_ref)
+    viol_ref[...] = jnp.zeros_like(viol_ref)
+    order_ref[...] = jnp.zeros_like(order_ref)
+    parent_ref[...] = jnp.zeros_like(parent_ref)
+    triple_ref[...] = jnp.full_like(triple_ref, -1)
+
+    def compact(rank):
+        def tile(j, cnt):
+            blk = jax.lax.dynamic_slice(rank, (0, j * u_block), (1, u_block))
+            col = blk.reshape(u_block, 1)
+            less = (col >= 0) & (col < rank)
+            return cnt + jnp.sum(
+                less.astype(jnp.int32), axis=0, keepdims=True)
+        cnt = jax.lax.fori_loop(
+            0, n // u_block, tile, jnp.zeros((1, n), jnp.int32))
+        return jnp.where(rank >= 0, cnt, jnp.int32(-1))
+
+    def step(i, _):
+        rank = rank_ref[...]
+        pos = pos_ref[...]
+        current = jnp.argmax(rank).astype(jnp.int32)
+        row = adj_ref[0, pl.ds(current, 1), :]
+        nbr = row != 0
+        visited = rank < 0
+        ln = nbr & visited
+        cand = jnp.where(ln, pos, jnp.int32(-1))
+        p = jnp.argmax(cand).astype(jnp.int32)
+        prow = adj_ref[0, pl.ds(p, 1), :]
+        bad = ln & (lane != p) & (prow == 0)
+        nbad = jnp.sum(bad.astype(jnp.int32))
+        viol_ref[0, 0] += nbad
+        # Certificate raw material rides the same row reads.
+        ln_ref[0, pl.ds(current, 1), :] = ln.astype(jnp.int8)
+        is_cur = lane == current
+        parent_ref[...] = jnp.where(is_cur, p, parent_ref[...])
+        w = jnp.argmax(jnp.where(bad, pos, jnp.int32(-1))).astype(jnp.int32)
+        new_triple = jnp.where(
+            tlane == 0, current, jnp.where(tlane == 1, p, w))
+        triple_ref[...] = jnp.where(nbad > 0, new_triple, triple_ref[...])
+        order_ref[...] = jnp.where(lane == i, current, order_ref[...])
+        pos_ref[...] = jnp.where(is_cur, i, pos)
+        rank = jnp.where(is_cur, jnp.int32(-1), rank)
+        rank = 2 * rank + nbr.astype(jnp.int32)
+        rank = jax.lax.cond(
+            (i % k_inner) == (k_inner - 1), compact, lambda r: r, rank)
+        rank_ref[...] = rank
+        return 0
+
+    jax.lax.fori_loop(0, n, step, 0)
+
+
+def lexbfs_peo_fused_witness_call(
+    adj_i8: jnp.ndarray,
+    *,
+    k_inner: int,
+    u_block: int,
+    interpret: bool = True,
+):
+    """Raw pallas_call: (B, N, N) int8 ->
+    (orders (B, N), viols (B, 1), ln (B, N, N) i8, parent (B, N),
+    triple (B, 3))."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, n = adj_i8.shape[0], adj_i8.shape[1]
+    kernel = lambda *refs: _fused_witness_kernel(  # noqa: E731
+        n, k_inner, u_block, *refs)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[pl.BlockSpec((1, n, n), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, n, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, n, n), jnp.int8),
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, 3), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, n), jnp.int32),
+            pltpu.VMEM((1, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(adj_i8)
+
+
+def _fused_packed_kernel(n, g, k_inner, u_block, adj_ref, order_ref,
+                         viol_ref, rank_ref, pos_ref):
+    """One program = G block-diagonal graphs, lock-stepped.
+
+    Packing geometry (DESIGN.md §12): the grid shrinks to (B/G,) and each
+    program owns a (G, N, N) adjacency block — G independent graphs whose
+    union is a block-diagonal padded graph. All state is (G, N); the
+    per-step selection is a per-row argmax, so every graph visits its own
+    vertex each iteration and orders stay bit-identical to the unpacked
+    kernel. Row gathers unroll over the static pack axis (Pallas dynamic
+    slices are per-scalar-index).
+    """
+    lane = jax.lax.broadcasted_iota(jnp.int32, (g, n), 1)
+
+    rank_ref[...] = jnp.zeros_like(rank_ref)
+    pos_ref[...] = jnp.zeros_like(pos_ref)
+    viol_ref[...] = jnp.zeros_like(viol_ref)
+    order_ref[...] = jnp.zeros_like(order_ref)
+
+    def compact(rank):
+        def tile(j, cnt):
+            blk = jax.lax.dynamic_slice(
+                rank, (0, j * u_block), (g, u_block))
+            col = blk[:, :, None]                       # (G, U, 1)
+            less = (col >= 0) & (col < rank[:, None, :])  # (G, U, N)
+            return cnt + jnp.sum(less.astype(jnp.int32), axis=1)
+        cnt = jax.lax.fori_loop(
+            0, n // u_block, tile, jnp.zeros((g, n), jnp.int32))
+        return jnp.where(rank >= 0, cnt, jnp.int32(-1))
+
+    def step(i, _):
+        rank = rank_ref[...]                            # (G, N)
+        pos = pos_ref[...]
+        current = jnp.argmax(rank, axis=1).astype(jnp.int32)   # (G,)
+        nbr = jnp.concatenate(
+            [adj_ref[j, pl.ds(current[j], 1), :] for j in range(g)],
+            axis=0) != 0                                # (G, N)
+        visited = rank < 0
+        ln = nbr & visited
+        cand = jnp.where(ln, pos, jnp.int32(-1))
+        p = jnp.argmax(cand, axis=1).astype(jnp.int32)  # (G,)
+        prow = jnp.concatenate(
+            [adj_ref[j, pl.ds(p[j], 1), :] for j in range(g)], axis=0)
+        bad = ln & (lane != p[:, None]) & (prow == 0)
+        viol_ref[...] += jnp.sum(bad.astype(jnp.int32), axis=1,
+                                 keepdims=True)
+        is_cur = lane == current[:, None]
+        order_ref[...] = jnp.where(lane == i, current[:, None],
+                                   order_ref[...])
+        pos_ref[...] = jnp.where(is_cur, i, pos)
+        rank = jnp.where(is_cur, jnp.int32(-1), rank)
+        rank = 2 * rank + nbr.astype(jnp.int32)
+        rank = jax.lax.cond(
+            (i % k_inner) == (k_inner - 1), compact, lambda r: r, rank)
+        rank_ref[...] = rank
+        return 0
+
+    jax.lax.fori_loop(0, n, step, 0)
+
+
+def lexbfs_peo_fused_packed_call(
+    adj_i8: jnp.ndarray,
+    *,
+    pack: int,
+    k_inner: int,
+    u_block: int,
+    interpret: bool = True,
+):
+    """Raw pallas_call over a (B/G,) grid of G-graph packed programs.
+
+    B must be a multiple of ``pack`` (the public wrapper pads with empty
+    graphs). Outputs match :func:`lexbfs_peo_fused_call` exactly.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    b, n = adj_i8.shape[0], adj_i8.shape[1]
+    if b % pack:
+        raise ValueError(f"batch {b} not a multiple of pack factor {pack}")
+    kernel = lambda *refs: _fused_packed_kernel(  # noqa: E731
+        n, pack, k_inner, u_block, *refs)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // pack,),
+        in_specs=[pl.BlockSpec((pack, n, n), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((pack, n), lambda i: (i, 0)),
+            pl.BlockSpec((pack, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, n), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((pack, n), jnp.int32),
+            pltpu.VMEM((pack, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(adj_i8)

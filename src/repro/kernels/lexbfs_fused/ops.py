@@ -24,6 +24,8 @@ from repro.kernels import dispatch_counter
 from repro.kernels.lexbfs_fused.lexbfs_fused import (
     compaction_block,
     lexbfs_peo_fused_call,
+    lexbfs_peo_fused_packed_call,
+    lexbfs_peo_fused_witness_call,
 )
 
 
@@ -49,3 +51,69 @@ def lexbfs_peo_fused(adjs: jnp.ndarray, *, interpret: bool = True):
     """
     dispatch_counter.tick()
     return _fused(adjs, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_witness(adjs: jnp.ndarray, *, interpret: bool = True):
+    from repro.core.lexbfs import lexbfs_inner_block
+
+    n = adjs.shape[1]
+    orders, viols, ln, parent, triple = lexbfs_peo_fused_witness_call(
+        adjs.astype(jnp.int8),
+        k_inner=lexbfs_inner_block(n),
+        u_block=compaction_block(n),
+        interpret=interpret,
+    )
+    return viols[:, 0] == 0, orders, viols[:, 0], ln, parent, triple
+
+
+def lexbfs_peo_fused_witness(adjs: jnp.ndarray, *, interpret: bool = True):
+    """(B, N, N) bool -> (verdicts, orders, violations, ln, parent, triple).
+
+    The certified hot path: one ``pallas_call`` emits the verdict *and*
+    the certificate raw material (per-vertex LN rows, parent pointers,
+    latest violating triple) — ``witness=True`` traffic costs the same
+    single dispatch as verdict-only. Host finalization lives in
+    ``repro.witness.witness_batch_from_fused_raw``.
+    """
+    dispatch_counter.tick()
+    return _fused_witness(adjs, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("pack", "interpret"))
+def _fused_packed(adjs: jnp.ndarray, *, pack: int, interpret: bool = True):
+    from repro.core.lexbfs import lexbfs_inner_block
+
+    n = adjs.shape[1]
+    orders, viols = lexbfs_peo_fused_packed_call(
+        adjs.astype(jnp.int8),
+        pack=pack,
+        k_inner=lexbfs_inner_block(n),
+        u_block=compaction_block(n),
+        interpret=interpret,
+    )
+    return viols[:, 0] == 0, orders, viols[:, 0]
+
+
+def lexbfs_peo_fused_packed(
+    adjs: jnp.ndarray, *, pack: int = 0, interpret: bool = True
+):
+    """Packed tiny-bucket dispatch: G graphs per grid program.
+
+    Same outputs as :func:`lexbfs_peo_fused`; the batch is padded up to a
+    multiple of the pack factor with empty (trivially chordal) graphs and
+    cropped back. Still one ``pallas_call`` — the dispatch counter ticks
+    once regardless of grid size.
+    """
+    from repro.configs.shapes import FUSED_PACK_FACTOR
+
+    g = pack or FUSED_PACK_FACTOR
+    b = adjs.shape[0]
+    b_pad = -(-b // g) * g
+    if b_pad != b:
+        adjs = jnp.concatenate(
+            [adjs, jnp.zeros((b_pad - b,) + adjs.shape[1:], adjs.dtype)],
+            axis=0)
+    dispatch_counter.tick()
+    verdicts, orders, viols = _fused_packed(adjs, pack=g, interpret=interpret)
+    return verdicts[:b], orders[:b], viols[:b]

@@ -141,6 +141,50 @@ def treewidth_from_cliques_numpy(
 
 
 # ---------------------------------------------------------------------------
+# Kernel raw-material consumers: the fused Pallas kernel emits LN rows and
+# parent pointers at visit time (DESIGN.md §12); these producers finish the
+# certificate on host without ever touching the adjacency again.
+# ---------------------------------------------------------------------------
+def coloring_from_ln_numpy(ln: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Greedy visit-order coloring from LN rows alone.
+
+    When v is visited, its already-colored neighbors are exactly LN(v),
+    so the mex over LN colors reproduces :func:`greedy_coloring_numpy`
+    bit for bit without an adjacency matrix.
+    """
+    n = ln.shape[0]
+    colors = np.full(n, -1, dtype=np.int32)
+    for v in np.asarray(order):
+        used = np.zeros(n + 1, dtype=bool)
+        used[colors[ln[v]]] = True
+        colors[v] = np.int32(np.argmin(used))
+    return colors
+
+
+def certificates_from_ln_numpy(
+    ln: np.ndarray, p: np.ndarray, order: np.ndarray, n_nodes: int
+):
+    """(members, valid, parent, treewidth, colors, n_colors) from
+    kernel-emitted raw material: LN membership rows and parent pointers.
+
+    Bit-identical to running the PR 4 producers on the adjacency — the
+    kernel's per-visit LN row *is* ``adj[v] & (pos < pos[v])`` and its
+    parent *is* the rightmost-left-neighbor argmax.
+    """
+    ln = np.asarray(ln, dtype=bool)
+    p = np.asarray(p, dtype=np.int64)
+    n = ln.shape[0]
+    has_ln = ln.any(axis=1)
+    members, valid = cliques_from_ln_numpy(ln, p, has_ln, n_nodes)
+    parent = clique_tree_numpy(members, valid)
+    treewidth = treewidth_from_cliques_numpy(members, valid)
+    colors = coloring_from_ln_numpy(ln, order)
+    n_colors = int(np.max(
+        np.where(np.arange(n) < n_nodes, colors, -1), initial=-1)) + 1
+    return members, valid, parent, treewidth, colors, n_colors
+
+
+# ---------------------------------------------------------------------------
 # Device path (jax) — mirrors the host twins op for op.
 # ---------------------------------------------------------------------------
 def _cliques_device(adj, ln, p, has_ln, n_nodes):

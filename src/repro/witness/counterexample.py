@@ -112,6 +112,22 @@ def cycle_from_violation_numpy(
     return np.array([v] + path, dtype=np.int32)   # v, w, …, u
 
 
+def cycle_from_kernel_triple_numpy(
+    adj: np.ndarray, triple: np.ndarray
+) -> Optional[np.ndarray]:
+    """Entry point consuming the fused kernel's emitted (v, u, w) triple.
+
+    The kernel overwrites its triple output at every violating visit, so
+    the surviving value is the latest-in-order violation — the same
+    deterministic choice :func:`triple_from_bad_numpy` makes. A sentinel
+    triple (v < 0) means the kernel saw no violation.
+    """
+    v, u, w = (int(x) for x in np.asarray(triple)[:3])
+    if v < 0:
+        return None
+    return cycle_from_violation_numpy(adj, v, u, w)
+
+
 def chordless_cycle_numpy(
     adj: np.ndarray, order: np.ndarray
 ) -> Optional[np.ndarray]:
@@ -178,7 +194,16 @@ def counterexample_device(adj, p, bad, pos):
             adj & allowed[None, :], dist[None, :], inf).min(axis=1) + 1
         return jnp.where(allowed, jnp.minimum(dist, cand), inf), None
 
-    dist, _ = jax.lax.scan(relax, dist0, None, length=n)
+    # Relax to the fixpoint: the monotone operator converges after at most
+    # ecc(u) + 1 sweeps (its host twin breaks out at the same fixpoint), so
+    # a while_loop costs O(depth · n²) instead of the scan's fixed O(n³).
+    def relax_step(state):
+        dist, _ = state
+        nxt, _ = relax(dist, None)
+        return nxt, jnp.any(nxt != dist)
+
+    dist, _ = jax.lax.while_loop(
+        lambda s: s[1], relax_step, (dist0, jnp.asarray(True)))
     reached = dist[w] <= n
 
     def back(cur, _):

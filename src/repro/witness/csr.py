@@ -1,0 +1,178 @@
+"""CSR witness extraction over neighbor windows — no densification.
+
+The csr backend used to materialize a dense ``(n, n)`` adjacency per slot
+just to reuse the dense witness producers. Everything the certificate
+needs is reachable from the packed edge stream directly:
+
+* LN membership, parent pointers, and PEO violations are per-directed-edge
+  predicates (``pos[col] < pos[row]`` plus one membership probe), and the
+  packing contract keeps flat edge keys ``row·(n+1)+col`` globally sorted,
+  so adjacency probes are a single vectorized ``searchsorted``;
+* the counterexample BFS relaxes over the edge stream with segment mins
+  (the ``allowed`` set is one O(n) bool row derived from v's neighbor
+  window — never an ``(n, n)`` matrix);
+* greedy coloring walks each visit's neighbor window — on chordal slots
+  only (non-chordal slots carry the zeroed coloring convention, §12).
+
+Outputs are bit-identical to :func:`repro.witness.witness_batch_numpy`
+on the same orders (asserted in tests/test_fused_witness.py). The only
+square arrays ever built are the **certificate outputs themselves**
+(``WitnessBatch.members`` rows and the clique-tree weights on *chordal*
+slots — that is the witness payload, not the adjacency); on non-chordal
+slots the extraction allocates nothing quadratic, which the regression
+test enforces by trapping square allocations.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.witness import WitnessBatch
+from repro.witness.certificates import (
+    clique_tree_numpy,
+    treewidth_from_cliques_numpy,
+)
+
+
+def _witness_one_csr(
+    row_ptr: np.ndarray, col_idx: np.ndarray, order: np.ndarray,
+    n_nodes: int,
+):
+    """One slot's witness tuple from its CSR rows (matches the dense
+    ``witness_from_order_numpy`` output convention bit for bit)."""
+    n = row_ptr.shape[0] - 1
+    nnz = int(row_ptr[-1])
+    ci = col_idx[:nnz].astype(np.int64)
+    deg = np.diff(row_ptr).astype(np.int64)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    order_arr = np.asarray(order, dtype=np.int64)
+    pos = np.empty(n, dtype=np.int64)
+    pos[order_arr] = np.arange(n)
+
+    # Per-edge LN predicate and rightmost-left-neighbor via segment max.
+    ln_e = pos[ci] < pos[src]
+    best = np.full(n, -1, dtype=np.int64)
+    np.maximum.at(best, src[ln_e], pos[ci[ln_e]])
+    has_ln = best >= 0
+    p = np.where(has_ln, order_arr[np.maximum(best, 0)], 0)
+
+    # Violations: z in LN(v), z != p(v), z not adjacent to p(v). The
+    # adjacency probe rides the globally sorted flat edge keys.
+    if nnz:
+        flat = src * (n + 1) + ci
+        q = p[src] * (n + 1) + ci
+        j = np.searchsorted(flat, q)
+        hit = (j < nnz) & (flat[np.minimum(j, nnz - 1)] == q)
+        bad_e = ln_e & (ci != p[src]) & ~hit
+    else:
+        bad_e = np.zeros(0, dtype=bool)
+    chordal = not bad_e.any()
+
+    cycle = np.full(n, n, dtype=np.int32)
+    cycle_len = 0
+    if chordal:
+        # Greedy visit-order coloring over neighbor windows — chordal
+        # slots only (the zeroed convention: the coloring certifies
+        # nothing on a non-chordal graph, so producers skip it).
+        colors = np.full(n, -1, dtype=np.int32)
+        for v in order_arr:
+            used = np.zeros(n + 1, dtype=bool)
+            cc = colors[ci[row_ptr[v]: row_ptr[v + 1]]]
+            used[cc[cc >= 0]] = True
+            colors[v] = np.int32(np.argmin(used))
+        n_colors = int(np.max(
+            np.where(np.arange(n) < n_nodes, colors, -1), initial=-1)) + 1
+        size = np.bincount(src[ln_e], minlength=n)
+        kill = has_ln & (size == size[p] + 1)
+        nonmax = np.zeros(n, dtype=bool)
+        nonmax[p[kill]] = True
+        members = np.zeros((n, n), dtype=bool)      # certificate output
+        members[src[ln_e], ci[ln_e]] = True
+        members[np.arange(n), np.arange(n)] = True
+        valid = (np.arange(n) < n_nodes) & ~nonmax
+        parent = clique_tree_numpy(members, valid)
+        treewidth = treewidth_from_cliques_numpy(members, valid)
+        return (True, members, valid, parent, treewidth,
+                colors, n_colors, cycle, cycle_len)
+
+    # Deterministic violating triple: latest-in-order row, then partner.
+    b_src = src[bad_e]
+    v = int(b_src[np.argmax(pos[b_src])])
+    u = int(p[v])
+    row_bad = ci[bad_e & (src == v)]
+    w = int(row_bad[np.argmax(pos[row_bad])])
+
+    # BFS from u inside allowed = V − (N[v] \ {u, w}) by synchronous
+    # relaxation over the edge stream (segment min per sweep).
+    allowed = np.ones(n, dtype=bool)
+    allowed[ci[row_ptr[v]: row_ptr[v + 1]]] = False
+    allowed[[u, w]] = True
+    allowed[v] = False
+    inf = n + 1
+    dist = np.full(n, inf, dtype=np.int64)
+    dist[u] = 0
+    e_ok = allowed[ci]
+    e_src, e_dst = src[e_ok], ci[e_ok]
+    for _ in range(n):
+        tmp = np.full(n, inf, dtype=np.int64)
+        np.minimum.at(tmp, e_src, dist[e_dst])
+        nxt = np.where(allowed, np.minimum(dist, tmp + 1), inf)
+        if (nxt == dist).all():
+            break
+        dist = nxt
+    if dist[w] <= n:
+        path = [w]
+        cur = w
+        while cur != u:
+            nb = ci[row_ptr[cur]: row_ptr[cur + 1]]
+            step = nb[allowed[nb] & (dist[nb] == dist[cur] - 1)]
+            cur = int(step[0])          # sorted window: smallest index
+            path.append(cur)
+        cycle_len = len(path) + 1
+        cycle[0] = v
+        cycle[1: cycle_len] = path
+    # members=None: the batch wrapper's zeroed output rows already carry
+    # the non-chordal convention — allocating an (n, n) here would defeat
+    # the no-densification contract the regression test traps.
+    return (False, None, np.zeros(n, dtype=bool),
+            np.full(n, -1, dtype=np.int32), 0,
+            np.zeros(n, dtype=np.int32), 0, cycle, cycle_len)
+
+
+def witness_batch_csr_numpy(
+    row_ptr: np.ndarray, col_idx: np.ndarray,
+    orders: np.ndarray, n_nodes: np.ndarray,
+) -> WitnessBatch:
+    """Witness batch straight from a packed CSR unit — the csr backend's
+    ``compile_witness_batch`` body. Same contract as
+    :func:`repro.witness.witness_batch_numpy`, minus the densification."""
+    row_ptr = np.asarray(row_ptr)
+    b, np1 = row_ptr.shape
+    n = np1 - 1
+    out = dict(
+        chordal=np.zeros(b, dtype=bool),
+        orders=np.asarray(orders, dtype=np.int32).copy(),
+        members=np.zeros((b, n, n), dtype=bool),
+        valid=np.zeros((b, n), dtype=bool),
+        parent=np.full((b, n), -1, dtype=np.int32),
+        treewidth=np.zeros(b, dtype=np.int32),
+        colors=np.zeros((b, n), dtype=np.int32),
+        n_colors=np.zeros(b, dtype=np.int32),
+        cycle=np.full((b, n), n, dtype=np.int32),
+        cycle_len=np.zeros(b, dtype=np.int32),
+    )
+    for i in range(b):
+        (ch, members, valid, parent, tw, colors, ncol, cyc, clen) = \
+            _witness_one_csr(
+                row_ptr[i], np.asarray(col_idx[i]), out["orders"][i],
+                int(n_nodes[i]))
+        out["chordal"][i] = ch
+        if members is not None:
+            out["members"][i] = members
+        out["valid"][i] = valid
+        out["parent"][i] = parent
+        out["treewidth"][i] = tw
+        out["colors"][i] = colors
+        out["n_colors"][i] = ncol
+        out["cycle"][i] = cyc
+        out["cycle_len"][i] = clen
+    return WitnessBatch(**out)

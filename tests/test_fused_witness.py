@@ -1,0 +1,375 @@
+"""Differential suite for the PR 6 certified hot path (DESIGN.md §12).
+
+Three bit-identity anchors:
+
+* the **packed** tiny-bucket fused kernel (G graphs block-diagonal per
+  grid program) against the unpacked fused kernel — same verdicts,
+  same orders, same violation counts, any batch size / occupancy;
+* the **fused witness** kernel's raw material (LN rows, parent
+  pointers, latest violating triple), finished by
+  ``witness_batch_from_fused_raw``, against the PR 4 host producer
+  ``witness_batch_numpy`` on the same orders;
+* the **CSR witness** extraction over neighbor windows against the
+  dense producer — plus a regression trap proving non-chordal slots
+  never materialize a square ``(n, n)`` adjacency.
+
+Plus the serving-layer wiring: one measured dispatch per certified
+unit, witness-mode compile-cache kinds, witness-mode routing, and the
+service's ``witness_upgraded`` counter.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generators as G
+from repro.core.lexbfs import lexbfs_numpy_dense
+from repro.engine import ChordalityEngine
+from repro.engine.backends import CSRBackend, JaxFastBackend, PallasPeoBackend
+from repro.kernels import dispatch_counter
+from repro.kernels.lexbfs_fused import (
+    lexbfs_peo_fused,
+    lexbfs_peo_fused_packed,
+    lexbfs_peo_fused_witness,
+)
+from repro.sparse import lexbfs_csr_numpy_batch
+from repro.sparse.packing import pack_dense_batch
+from repro.witness import (
+    make_fused_witness_kernel,
+    witness_batch_from_fused_raw,
+    witness_batch_numpy,
+)
+from repro.witness.csr import witness_batch_csr_numpy
+from repro.witness.verify import verify_witness
+
+
+def _pad_batch(adjs, n_pad):
+    """Pad a list of (n_i, n_i) adjacencies into a (len, n_pad, n_pad)
+    unit plus its per-slot true-size vector."""
+    out = np.zeros((len(adjs), n_pad, n_pad), dtype=bool)
+    nn = np.zeros(len(adjs), dtype=np.int32)
+    for i, a in enumerate(adjs):
+        n = a.shape[0]
+        out[i, :n, :n] = a
+        nn[i] = n
+    return out, nn
+
+
+def _graph(kind: int, n: int, seed: int) -> np.ndarray:
+    """Mixed zoo: ER, k-tree (chordal), long cycle (non-chordal)."""
+    if kind == 0:
+        return G.gnp(n, 0.3, seed=seed).adj
+    if kind == 1:
+        return G.random_chordal(n, k=min(3, n - 1), seed=seed).adj
+    return G.cycle(n).adj
+
+
+WITNESS_FIELDS = ("chordal", "orders", "members", "valid", "parent",
+                  "treewidth", "colors", "n_colors", "cycle", "cycle_len")
+
+
+def _assert_batches_equal(got, want, ctx=""):
+    for f in WITNESS_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, f)), np.asarray(getattr(want, f)),
+            err_msg=f"{f} {ctx}")
+
+
+# ---------------------------------------------------------------------------
+# Packed tiny-bucket dispatch ≡ unpacked fused kernel.
+# ---------------------------------------------------------------------------
+def _kinds(n_slots: int, kind_seed: int):
+    # Base-3 digits of ``kind_seed`` — a list-strategy stand-in that the
+    # conftest hypothesis fallback (integers/sampled_from only) can draw.
+    return [(kind_seed // 3 ** i) % 3 for i in range(n_slots)]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=28),
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_slots=st.integers(min_value=1, max_value=6),
+    kind_seed=st.integers(min_value=0, max_value=3 ** 6 - 1),
+)
+def test_property_packed_matches_unpacked(n, seed, n_slots, kind_seed):
+    n_pad = 32
+    adjs = [_graph(k, n, seed + i)
+            for i, k in enumerate(_kinds(n_slots, kind_seed))]
+    unit, _ = _pad_batch(adjs, n_pad)
+    v0, o0, x0 = lexbfs_peo_fused(jnp.asarray(unit), interpret=True)
+    v1, o1, x1 = lexbfs_peo_fused_packed(
+        jnp.asarray(unit), pack=4, interpret=True)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))
+    np.testing.assert_array_equal(np.asarray(x0), np.asarray(x1))
+
+
+@pytest.mark.parametrize("batch,pack", [
+    (1, 4),    # crop: unit smaller than one pack group
+    (3, 4),    # partial last group
+    (8, 4),    # exact multiple
+    (2, 8),
+])
+def test_packed_occupancy_and_crop(batch, pack):
+    adjs = [_graph(i % 3, 9 + (i % 7), seed=i) for i in range(batch)]
+    unit, _ = _pad_batch(adjs, 16)
+    v0, o0, x0 = lexbfs_peo_fused(jnp.asarray(unit), interpret=True)
+    v1, o1, x1 = lexbfs_peo_fused_packed(
+        jnp.asarray(unit), pack=pack, interpret=True)
+    assert np.asarray(v1).shape == (batch,)          # cropped back
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(o0), np.asarray(o1))
+    np.testing.assert_array_equal(np.asarray(x0), np.asarray(x1))
+
+
+def test_packed_degenerate_units():
+    # all-padding unit and single-vertex slots
+    empty = np.zeros((3, 16, 16), dtype=bool)
+    v, o, x = lexbfs_peo_fused_packed(jnp.asarray(empty), interpret=True)
+    assert np.asarray(v).all() and np.asarray(x).sum() == 0
+    one = np.zeros((1, 1), dtype=bool)
+    unit, _ = _pad_batch([one], 8)
+    v1, _, _ = lexbfs_peo_fused_packed(jnp.asarray(unit), interpret=True)
+    assert bool(np.asarray(v1)[0])
+
+
+# ---------------------------------------------------------------------------
+# Fused witness raw material ≡ PR 4 host producers.
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=24),
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_slots=st.integers(min_value=1, max_value=4),
+    kind_seed=st.integers(min_value=0, max_value=3 ** 4 - 1),
+)
+def test_property_fused_witness_raw_matches_host(n, seed, n_slots, kind_seed):
+    n_pad = 32
+    adjs = [_graph(k, n, seed + i)
+            for i, k in enumerate(_kinds(n_slots, kind_seed))]
+    unit, nn = _pad_batch(adjs, n_pad)
+    _, orders, viols, ln, parent, triple = lexbfs_peo_fused_witness(
+        jnp.asarray(unit), interpret=True)
+    got = witness_batch_from_fused_raw(
+        unit, np.asarray(orders), np.asarray(viols), np.asarray(ln),
+        np.asarray(parent), np.asarray(triple), nn)
+    want = witness_batch_numpy(
+        unit, np.stack([lexbfs_numpy_dense(a) for a in unit]), nn)
+    _assert_batches_equal(got, want, f"n={n}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=24),
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_slots=st.integers(min_value=1, max_value=4),
+    kind_seed=st.integers(min_value=0, max_value=3 ** 4 - 1),
+)
+def test_property_fused_witness_executable_matches_host(
+        n, seed, n_slots, kind_seed):
+    """The batch-major jnp witness executable (jax_fast's witness kind)."""
+    n_pad = 32
+    adjs = [_graph(k, n, seed + i)
+            for i, k in enumerate(_kinds(n_slots, kind_seed))]
+    unit, nn = _pad_batch(adjs, n_pad)
+    got = make_fused_witness_kernel()(jnp.asarray(unit), nn)
+    want = witness_batch_numpy(
+        unit, np.stack([lexbfs_numpy_dense(a) for a in unit]), nn)
+    _assert_batches_equal(got, want, f"n={n}")
+
+
+def test_fused_witness_degenerate_units():
+    fn = make_fused_witness_kernel()
+    # all-padding unit: every slot chordal, zeroed certificates
+    unit = np.zeros((2, 8, 8), dtype=bool)
+    wb = fn(jnp.asarray(unit), np.zeros(2, dtype=np.int32))
+    assert wb.chordal.all()
+    assert wb.cycle_len.sum() == 0
+    # batch of one, single real vertex
+    unit, nn = _pad_batch([np.zeros((1, 1), bool)], 4)
+    wb = fn(jnp.asarray(unit), nn)
+    assert bool(wb.chordal[0]) and int(wb.n_colors[0]) == 1
+    want = witness_batch_numpy(
+        unit, np.stack([lexbfs_numpy_dense(a) for a in unit]), nn)
+    _assert_batches_equal(fn(jnp.asarray(unit), nn), want)
+
+
+# ---------------------------------------------------------------------------
+# CSR witness path: bit-identical, and never densifies a slot.
+# ---------------------------------------------------------------------------
+def _csr_batch(unit):
+    packed = pack_dense_batch(unit)
+    orders = lexbfs_csr_numpy_batch(
+        packed.row_ptr, packed.col_idx, packed.deg_pad)
+    return packed, np.stack([np.asarray(o) for o in orders])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=4, max_value=24),
+    seed=st.integers(min_value=0, max_value=10_000),
+    n_slots=st.integers(min_value=1, max_value=4),
+    kind_seed=st.integers(min_value=0, max_value=3 ** 4 - 1),
+)
+def test_property_csr_witness_matches_dense(n, seed, n_slots, kind_seed):
+    n_pad = 32
+    adjs = [_graph(k, n, seed + i)
+            for i, k in enumerate(_kinds(n_slots, kind_seed))]
+    unit, nn = _pad_batch(adjs, n_pad)
+    packed, orders = _csr_batch(unit)
+    got = witness_batch_csr_numpy(packed.row_ptr, packed.col_idx, orders, nn)
+    want = witness_batch_numpy(unit, orders, nn)
+    _assert_batches_equal(got, want, f"n={n}")
+
+
+class _SquareTrap:
+    """numpy proxy that raises on any square 2-D allocation ≥ trap_n."""
+
+    def __init__(self, trap_n):
+        self._trap_n = trap_n
+
+    def __getattr__(self, name):
+        real = getattr(np, name)
+        if name in ("zeros", "ones", "empty", "full"):
+            trap_n = self._trap_n
+
+            def alloc(shape, *args, **kwargs):
+                if (isinstance(shape, tuple) and len(shape) == 2
+                        and shape[0] == shape[1] and shape[0] >= trap_n):
+                    raise AssertionError(
+                        f"np.{name}{shape}: dense square allocation on "
+                        "the CSR witness path")
+                return real(shape, *args, **kwargs)
+
+            return alloc
+        return real
+
+
+def test_csr_witness_never_densifies_nonchordal(monkeypatch):
+    """Regression: non-chordal slots must extract over CSR windows only.
+
+    The batch wrapper may allocate the (b, n, n) *output* payload, but no
+    per-slot (n, n) square — the trap fires on any 2-D square ``zeros`` /
+    ``full`` / ``empty`` / ``ones`` of the slot size."""
+    import repro.witness.csr as csr_mod
+
+    n = 48
+    adjs = [G.cycle(n).adj, G.cycle(n - 7).adj,
+            G.gnp(n, 0.15, seed=3).adj]           # non-chordal ER at n=48
+    unit, nn = _pad_batch(adjs, n)
+    packed, orders = _csr_batch(unit)
+    want = witness_batch_numpy(unit, orders, nn)
+    assert not want.chordal.any()                 # workload is all-negative
+    monkeypatch.setattr(csr_mod, "np", _SquareTrap(n))
+    got = witness_batch_csr_numpy(packed.row_ptr, packed.col_idx, orders, nn)
+    _assert_batches_equal(got, want)
+
+
+def test_csr_witness_chordal_emits_members():
+    """Chordal slots still get their clique certificate (the one square
+    array the contract allows — it *is* the witness payload)."""
+    adjs = [G.random_chordal(20, k=3, seed=1).adj, G.clique(6).adj]
+    unit, nn = _pad_batch(adjs, 24)
+    packed, orders = _csr_batch(unit)
+    got = witness_batch_csr_numpy(packed.row_ptr, packed.col_idx, orders, nn)
+    assert got.chordal.all()
+    assert got.members.any(axis=(1, 2)).all()
+
+
+# ---------------------------------------------------------------------------
+# Serving-layer wiring: dispatch counts, cache kinds, routing, service.
+# ---------------------------------------------------------------------------
+def _zoo():
+    return [
+        G.random_chordal(21, k=3, subset_p=0.8, seed=0),
+        G.cycle(7),
+        G.sparse_random(33, avg_degree=5, seed=1),
+        G.random_tree(18, seed=2),
+        G.cycle(30),
+        G.cycle(4),
+    ]
+
+
+def test_one_dispatch_per_certified_unit():
+    """The tentpole claim, measured: certificate raw material rides the
+    verdict kernel's single device dispatch (both witness executables)."""
+    unit, nn = _pad_batch(
+        [G.gnp(24, 0.3, seed=s).adj for s in range(4)], 32)
+    pallas = PallasPeoBackend(interpret=True)
+    jfast = JaxFastBackend()
+    for fn in (pallas.compile_fused_witness_batch(32, 4),
+               jfast.compile_witness_batch(32, 4)):
+        fn(unit, nn)                         # compile outside the count
+        c0 = dispatch_counter.count
+        fn(unit, nn)
+        assert dispatch_counter.delta(c0) == 1
+
+
+def test_witness_kind_respects_vmem_budget():
+    from repro.configs.shapes import FUSED_WITNESS_MAX_NPAD
+
+    b = PallasPeoBackend(interpret=True)
+    assert b.witness_kind(64) == "fused_witness"
+    assert b.witness_kind(FUSED_WITNESS_MAX_NPAD) == "fused_witness"
+    assert b.witness_kind(2 * FUSED_WITNESS_MAX_NPAD) == "witness"
+    assert JaxFastBackend().witness_kind(64) == "witness"
+
+
+def test_engine_witness_runs_use_fused_witness_cache_kind():
+    eng = ChordalityEngine(
+        backend="pallas_peo", max_batch=4, pipeline="fused", interpret=True)
+    res = eng.run(_zoo(), witness=True)
+    kinds = {key[1] for key in eng.cache._fns}
+    assert "fused_witness" in kinds
+    ref = ChordalityEngine(backend="numpy_ref", max_batch=4).run(_zoo())
+    np.testing.assert_array_equal(res.verdicts, ref.verdicts)
+    for g, w in zip(_zoo(), res.witnesses):
+        assert verify_witness(g.with_dense().adj, w) is None
+
+
+@pytest.mark.parametrize("backend", ["jax_fast", "csr", "numpy_ref"])
+def test_engine_witnesses_verify_on_every_backend(backend):
+    eng = ChordalityEngine(backend=backend, max_batch=4)
+    res = eng.run(_zoo(), witness=True)
+    for g, w in zip(_zoo(), res.witnesses):
+        assert verify_witness(g.with_dense().adj, w) is None
+
+
+def test_router_witness_mode_pricing():
+    from repro.engine.router import DEFAULT_WITNESS_COST_MODEL, Router
+
+    r = Router()
+    # witness-mode estimates price the certified pass above verdict-only
+    for name in ("jax_fast", "csr", "numpy_ref"):
+        v = r.estimate_us_per_graph(name, n=128, density=0.1, batch=8)
+        w = r.estimate_us_per_graph(
+            name, n=128, density=0.1, batch=8, mode="witness")
+        assert w > v, name
+    with pytest.raises(ValueError):
+        r.estimate_us_per_graph("jax_fast", n=64, density=0.1, batch=8,
+                                mode="nonsense")
+    # witness mode implies the witness capability requirement
+    choice = r.choose(n=128, density=0.1, batch=8, mode="witness")
+    assert choice in DEFAULT_WITNESS_COST_MODEL
+
+
+def test_service_counts_witness_upgrades():
+    from repro.configs.service import ServiceConfig
+    from repro.engine.service import AsyncChordalityEngine
+
+    graphs = _zoo()
+    with AsyncChordalityEngine(
+        config=ServiceConfig(max_batch=4, max_wait_ms=1.0),
+        backend="jax_fast",
+    ) as svc:
+        plain = [svc.submit(g) for g in graphs]
+        for f in plain:
+            f.result(timeout=30)
+        assert svc.stats.witness_upgraded == 0
+        futs = [svc.submit(g, want_witness=True) for g in graphs]
+        for g, f in zip(graphs, futs):
+            resp = f.result(timeout=30)
+            assert resp.witness is not None
+            adj = np.asarray(g.with_dense().adj, dtype=bool)
+            assert verify_witness(adj, resp.witness) is None
+        assert svc.stats.witness_upgraded > 0

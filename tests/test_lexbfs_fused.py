@@ -167,11 +167,13 @@ def test_engine_fused_pipeline_matches_numpy_ref():
 
 
 def test_fused_cache_entries_are_kind_fused():
+    # Every _zoo bucket is <= FUSED_PACK_MAX_NPAD, so PR 6's packed
+    # tiny-bucket dispatch serves all of them.
     eng = ChordalityEngine(
         backend="pallas_peo", max_batch=4, pipeline="fused", interpret=True)
     eng.run(_zoo())
     kinds = {key[1] for key in eng.cache._fns}
-    assert kinds == {"fused"}
+    assert kinds == {"fused_packed"}
 
 
 def test_split_and_fused_pipelines_agree():
@@ -193,7 +195,11 @@ def test_interpret_default_follows_platform():
 
 
 def test_verdict_kind_respects_vmem_budget():
-    from repro.configs.shapes import FUSED_MAX_NPAD, fused_vmem_bytes
+    from repro.configs.shapes import (
+        FUSED_MAX_NPAD,
+        FUSED_PACK_MAX_NPAD,
+        fused_vmem_bytes,
+    )
 
     b = PallasPeoBackend(interpret=True, pipeline="fused")
     assert b.verdict_kind(FUSED_MAX_NPAD) == "fused"
@@ -202,7 +208,8 @@ def test_verdict_kind_respects_vmem_budget():
     auto_i = PallasPeoBackend(interpret=True, pipeline="auto")
     assert auto_i.verdict_kind(64) == "verdict"
     auto_d = PallasPeoBackend(interpret=False, pipeline="auto")
-    assert auto_d.verdict_kind(64) == "fused"
+    assert auto_d.verdict_kind(64) == "fused_packed"
+    assert auto_d.verdict_kind(2 * FUSED_PACK_MAX_NPAD) == "fused"
     assert auto_d.verdict_kind(2 * FUSED_MAX_NPAD) == "verdict"
     # the budget helper is monotone and the cap actually fits
     from repro.configs.shapes import TPU_VMEM_BYTES

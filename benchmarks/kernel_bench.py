@@ -366,6 +366,138 @@ def bench_witness(
     return rows, artifact
 
 
+def bench_recognition(
+    ns=(64, 256), batches=(1, 8), requests=16, repeats=5,
+    backend="jax_fast", density=0.1, sweep_n=64, sweep_batch=8,
+):
+    """Multi-property recognition vs the verdict-only engine path.
+
+    Returns ``(rows, artifact)``; ``--tables recognition`` serializes the
+    artifact to ``BENCH_recognition.json`` (the PR 7 acceptance record).
+
+    Two measured quantities per property set:
+
+    * **latency overhead** — same warm engine, interleaved best-of pairs
+      (the bench_witness discipline): ``run(graphs)`` vs
+      ``run(graphs, properties=...)`` across n × batch. The overhead
+      factor is the price of answering extra graph-class questions on
+      the verdict hot path.
+    * **sweeps per work unit** — ``repro.recognition.sweep_counter``
+      read around a real engine call, divided by the unit count. Exact
+      integers by construction; the artifact pins them next to the
+      standalone sum (``standalone_sweep_count``) so the perf gate can
+      hold the σ1-sharing claim: ``chordal + proper_interval`` costs 3
+      sweeps, not 4; all five properties cost 5, not 7.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.core import generators as G
+    from repro.engine import ChordalityEngine
+    from repro.recognition import (
+        normalize_properties,
+        plan_sweeps,
+        property_names,
+        standalone_sweep_count,
+        sweep_counter,
+    )
+
+    def label(props):
+        if len(props) == 1:
+            return props[0]
+        if props == normalize_properties(property_names()):
+            return "all"
+        return "+".join(props)
+
+    prop_sets = [normalize_properties([p]) for p in property_names()]
+    prop_sets.append(normalize_properties(["chordal", "proper_interval"]))
+    prop_sets.append(normalize_properties(property_names()))
+    # normalize folds chordal into every set, so ("proper_interval",)
+    # arrives as ("chordal", "proper_interval") — dedupe on the tuple.
+    prop_sets = list(dict.fromkeys(prop_sets))
+
+    rows: List[Dict] = []
+    artifact: Dict = {
+        "schema": "bench_recognition/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "backend": backend,
+        "requests": requests,
+        "overhead_x": {},
+        "recognition_ms": {},
+        "verdict_ms": {},
+    }
+    for n in ns:
+        graphs = [G.gnp(n, density, seed=s) for s in range(requests)]
+        for b in batches:
+            eng = ChordalityEngine(backend=backend, max_batch=b)
+            eng.run(graphs)                          # compile: verdict
+            for props in prop_sets:
+                eng.run(graphs, properties=props)    # compile: recognition
+                # Interleaved best-of pairs — the overhead ratio is the
+                # acceptance quantity, so both sides must see the same
+                # machine state (see bench_witness).
+                t_v = t_r = float("inf")
+                for _ in range(max(1, repeats)):
+                    t0 = _time.perf_counter()
+                    eng.run(graphs)
+                    t_v = min(t_v, (_time.perf_counter() - t0) * 1e3)
+                    t0 = _time.perf_counter()
+                    res = eng.run(graphs, properties=props)
+                    t_r = min(t_r, (_time.perf_counter() - t0) * 1e3)
+                cell = f"{label(props)}_n{n}_B{b}"
+                factor = t_r / t_v if t_v > 0 else float("inf")
+                artifact["overhead_x"][cell] = round(factor, 2)
+                artifact["verdict_ms"][cell] = round(t_v, 3)
+                artifact["recognition_ms"][cell] = round(t_r, 3)
+                n_true = int(res.properties[props[-1]].sum())
+                rows.append({
+                    "name": f"recognition_{backend}_{cell}",
+                    "us_per_call": t_r * 1e3,
+                    "derived": (
+                        f"verdict_only_us={t_v * 1e3:.1f};"
+                        f"overhead_x={factor:.2f};"
+                        f"{props[-1]}={n_true}/{requests}"),
+                })
+
+    # -- measured sweeps per work unit ------------------------------------
+    # One warm engine call per property set with the sweep counter read
+    # around it; the per-unit delta is exact and must equal the shared
+    # plan length — strictly below the standalone sum whenever a set
+    # shares σ1 (the tentpole acceptance criterion).
+    graphs = [G.gnp(sweep_n, density, seed=s) for s in range(requests)]
+    eng = ChordalityEngine(backend=backend, max_batch=sweep_batch)
+    sweeps = {}
+    for props in prop_sets:
+        res = eng.run(graphs, properties=props)      # compile outside count
+        c0 = sweep_counter.count
+        t0 = _time.perf_counter()
+        res = eng.run(graphs, properties=props)
+        t_run_us = (_time.perf_counter() - t0) * 1e6
+        delta = sweep_counter.delta(c0)
+        n_units = res.stats.n_units
+        assert delta % n_units == 0, (props, delta, n_units)
+        per_unit = delta // n_units
+        standalone = standalone_sweep_count(props)
+        key = label(props)
+        sweeps[key] = per_unit
+        sweeps[f"{key}_standalone"] = standalone
+        assert per_unit == len(plan_sweeps(props)), (props, per_unit)
+        rows.append({
+            "name": f"recognition_sweeps_{key}_n{sweep_n}_B{sweep_batch}",
+            "us_per_call": t_run_us,
+            "derived": (
+                f"sweeps_per_unit={per_unit};"
+                f"standalone={standalone};"
+                f"shared={'yes' if per_unit < standalone else 'no'}"),
+        })
+    artifact["sweeps_per_unit"] = {
+        "n_pad": sweep_n, "batch": sweep_batch, **sweeps}
+    artifact["rows"] = [r["name"] for r in rows]
+    return rows, artifact
+
+
 def bench_service(
     n=256, requests=96, max_batch=32, c=6.0,
     waits_ms=(0.0, 2.0, 8.0), offered_gps=(0, 200),

@@ -1,14 +1,18 @@
 """Perf-regression gate over the committed benchmark artifacts.
 
 CI's smoke job regenerates ``BENCH_kernels.json`` (and, for certified
-traffic, ``BENCH_witness.json``) on every run; this module compares the
-fresh artifact against the committed baseline and **fails the build** if
-a structural perf property regressed:
+traffic, ``BENCH_witness.json`` / ``BENCH_recognition.json``) on every
+run; this module compares the fresh artifact against the committed
+baseline and **fails the build** if a structural perf property regressed:
 
-* ``dispatch_per_unit`` / ``dispatch_per_certified_unit`` — measured
-  device launches per work unit. These are exact integers (the fused
-  pipelines' whole claim is "one dispatch"), so any increase over the
-  baseline is a hard failure, no tolerance.
+* ``dispatch_per_unit`` / ``dispatch_per_certified_unit`` /
+  ``sweeps_per_unit`` — measured device launches (or vertex-ordering
+  sweeps) per work unit. These are exact integers (the fused pipelines'
+  claim is "one dispatch"; the recognition subsystem's is "σ1 shared"),
+  so any increase over the baseline is a hard failure, no tolerance.
+  ``sweeps_per_unit`` additionally carries an intra-artifact invariant:
+  a property set's measured sweeps may never exceed its standalone sum
+  (sharing lost entirely), baseline or not.
 * ``lexbfs_batched_speedup_vs_scan`` — wall-time speedup factors. Noisy
   on shared CI boxes, so the gate is loose: a fresh factor below
   ``tolerance`` × baseline (default 0.5) fails; anything above passes.
@@ -22,7 +26,8 @@ Usage::
 
     PYTHONPATH=src python -m benchmarks.perf_gate \
         [--fresh BENCH_kernels.json] [--baseline <path-or-git>] \
-        [--witness-fresh BENCH_witness.json] [--tolerance 0.5]
+        [--witness-fresh BENCH_witness.json] \
+        [--recognition-fresh BENCH_recognition.json] [--tolerance 0.5]
 
 ``--baseline`` defaults to ``git show HEAD:<fresh-name>`` — the artifact
 as committed, which is what "no worse than the repo claims" means.
@@ -104,11 +109,33 @@ def gate_overheads(
     return errs
 
 
+def gate_sweep_sharing(fresh: Dict, key: str, label: str) -> List[str]:
+    """Intra-artifact hard gate: a property set's measured sweeps per unit
+    may never exceed its standalone sum — that would mean the shared sweep
+    plan stopped sharing σ1 at all. Needs no baseline: both numbers live
+    in the fresh artifact (``<set>`` next to ``<set>_standalone``)."""
+    errs = []
+    f = fresh.get(key, {})
+    for name in sorted(f):
+        if name.endswith("_standalone") or name in ("n_pad", "batch"):
+            continue
+        standalone = f.get(f"{name}_standalone")
+        if standalone is None:
+            continue
+        if f[name] > standalone:
+            errs.append(
+                f"{label}.{key}[{name}]: {f[name]} sweeps/unit > "
+                f"standalone sum {standalone} — σ1 sharing regressed")
+    return errs
+
+
 def run_gate(
     fresh_path: str = "BENCH_kernels.json",
     baseline: Optional[str] = None,
     witness_fresh: Optional[str] = "BENCH_witness.json",
     witness_baseline: Optional[str] = None,
+    recognition_fresh: Optional[str] = "BENCH_recognition.json",
+    recognition_baseline: Optional[str] = None,
     tolerance: float = 0.5,
 ) -> List[str]:
     """All gate failures across both artifacts (empty = pass)."""
@@ -146,6 +173,28 @@ def run_gate(
         elif wfresh is not None:
             print(f"# perf_gate: no committed baseline for "
                   f"{witness_fresh}; skipping", file=sys.stderr)
+
+    if recognition_fresh is not None:
+        try:
+            with open(recognition_fresh) as f:
+                rfresh = json.load(f)
+        except OSError:
+            rfresh = None
+        if rfresh is not None:
+            # the sharing invariant is self-contained — gate it even on a
+            # branch that never committed a recognition baseline
+            errs += gate_sweep_sharing(
+                rfresh, "sweeps_per_unit", recognition_fresh)
+            rbase = _load_baseline(recognition_fresh, recognition_baseline)
+            if rbase is not None:
+                errs += gate_dispatch_counts(
+                    rfresh, rbase, "sweeps_per_unit", recognition_fresh)
+                errs += gate_overheads(
+                    rfresh, rbase, "overhead_x", recognition_fresh,
+                    tolerance)
+            else:
+                print(f"# perf_gate: no committed baseline for "
+                      f"{recognition_fresh}; skipping", file=sys.stderr)
     return errs
 
 
@@ -156,6 +205,8 @@ def main(argv=None) -> int:
                     help="baseline path (default: git show HEAD:<fresh>)")
     ap.add_argument("--witness-fresh", default="BENCH_witness.json")
     ap.add_argument("--witness-baseline", default=None)
+    ap.add_argument("--recognition-fresh", default="BENCH_recognition.json")
+    ap.add_argument("--recognition-baseline", default=None)
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="speedup floor / overhead ceiling factor")
     args = ap.parse_args(argv)
@@ -163,6 +214,8 @@ def main(argv=None) -> int:
         fresh_path=args.fresh, baseline=args.baseline,
         witness_fresh=args.witness_fresh,
         witness_baseline=args.witness_baseline,
+        recognition_fresh=args.recognition_fresh,
+        recognition_baseline=args.recognition_baseline,
         tolerance=args.tolerance)
     if errs:
         for e in errs:

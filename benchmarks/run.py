@@ -24,7 +24,8 @@ def main(argv=None) -> int:
                     help="minimal sizes for CI smoke (implies --quick)")
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
-                         "kernels,lexbfs,engine,router,service,witness")
+                         "kernels,lexbfs,engine,router,service,witness,"
+                         "recognition")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -33,7 +34,7 @@ def main(argv=None) -> int:
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs", "engine", "router", "service", "witness"]
+         "lexbfs", "engine", "router", "service", "witness", "recognition"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -169,6 +170,27 @@ def main(argv=None) -> int:
         with open("BENCH_witness.json", "w") as f:
             json.dump(artifact, f, indent=2, sort_keys=True)
         print("# wrote BENCH_witness.json", file=sys.stderr)
+    if "recognition" in which:
+        print("# recognition bench - multi-property vs verdict-only "
+              "(-> BENCH_recognition.json)", file=sys.stderr)
+        if args.smoke:
+            # n=64, B=1 cells share keys with the committed full-run
+            # artifact — overlap is what the perf gate's overhead ceiling
+            # and sweeps-per-unit equality actually compare.
+            rows, artifact = kernel_bench.bench_recognition(
+                ns=(64,), batches=(1,), requests=8, repeats=1,
+                sweep_n=64, sweep_batch=4)
+        elif args.quick:
+            rows, artifact = kernel_bench.bench_recognition(
+                ns=(64, 128), batches=(1, 8), requests=12, repeats=3)
+        else:
+            rows, artifact = kernel_bench.bench_recognition()
+        emit(rows)
+        import json
+
+        with open("BENCH_recognition.json", "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_recognition.json", file=sys.stderr)
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

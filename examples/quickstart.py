@@ -73,6 +73,31 @@ def main():
             print(f"  non-chordal n={n}: induced chordless cycle "
                   f"{w.cycle.tolist()}  [{status}]")
 
+    # --- multi-property recognition (repro.recognition, DESIGN.md §13) -----
+    print("\n=== recognition: engine.run(..., properties=[...]) ===")
+    from repro.witness import verify_proper_interval
+
+    claw = np.zeros((4, 4), dtype=bool)          # K_{1,3}: interval, not PI
+    for leaf in (1, 2, 3):
+        claw[0, leaf] = claw[leaf, 0] = True
+    rec_graphs = [G.path(8), Graph(n_nodes=4, adj=claw), G.cycle(4)]
+    eng = ChordalityEngine(backend="jax_fast", max_batch=8)
+    result = eng.run(
+        rec_graphs, properties=["proper_interval", "interval"])
+    for name, rec in zip(["P8", "claw", "C4"], result.recognitions):
+        print(f"  {name:6s} {rec.properties}  "
+              f"({rec.n_sweeps} shared sweeps, not "
+              f"{1 + 3 + 1} standalone)")
+    # every proper-interval answer carries a checkable witness
+    w = result.recognitions[1].witness            # claw: reject direction
+    err = verify_proper_interval(claw, w)
+    print(f"  claw witness: gap at vertex {w.gap_vertex} in sigma3 "
+          f"{w.order.tolist()}  "
+          f"[{'verified' if err is None else 'BAD'}]")
+
+    rec = eng.recognize(G.path(5))                # one graph, full registry
+    print(f"  recognize(P5): {rec.properties}")
+
     # --- backend selection (registry + cost-model router) -------------------
     print("\n=== registered backends (repro.engine.list_backends) ===")
     for spec in list_backends():

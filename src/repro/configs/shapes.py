@@ -257,6 +257,32 @@ def fused_packed_vmem_bytes(
     return adj + comparator + state + 4 * pack
 
 
+# ---------------------------------------------------------------------------
+# Recognition subsystem (DESIGN.md §13): host-side AT-scan memory plan.
+#
+# The interval property's asteroidal-triple scan is a host finalizer
+# (repro.recognition.sweeps.at_free_numpy). Its triple pass would build
+# N³-bool temporaries if done naively, so it chunks the z axis: each block
+# materializes a few (chunk, N, N) bool planes and nothing larger.
+# ---------------------------------------------------------------------------
+INTERVAL_TRIPLE_CHUNK: int = 64
+# 64 rows/block keeps the peak at ~3·64·N² bools — 200 MB at N = 1024,
+# i.e. host-RAM-bound like the witness finalizers, never N³.
+
+
+def interval_triple_scan_bytes(
+    n_pad: int, chunk: int = INTERVAL_TRIPLE_CHUNK
+) -> int:
+    """Peak temporary bytes of one AT triple-scan block at ``n_pad``.
+
+    Three (chunk, n_pad, n_pad) bool membership planes (the per-complement
+    pair masks) plus the (n_pad, n_pad) int64 component-label table.
+    """
+    planes = 3 * min(chunk, n_pad) * n_pad * n_pad
+    labels = n_pad * n_pad * 8
+    return planes + labels
+
+
 def engine_deg_bucket(deg: int, n_pad: int) -> int:
     """Power-of-two bucket for the padded max row degree, capped at n_pad.
 

@@ -30,11 +30,15 @@ from repro.core.chordality import (
     chordality_certificate,
     make_sharded_chordality,
 )
-from repro.core.mcs import mcs, is_chordal_mcs, mcs_numpy
+from repro.core.mcs import mcs, is_chordal_mcs, mcs_batched, mcs_numpy
 from repro.core.bfs import bfs
 from repro.core.interval import (
     is_proper_interval,
     lexbfs_plus,
+    lexbfs_plus_batched,
+    lexbfs_plus_numpy,
+    straight_enumeration_batched,
+    straight_enumeration_numpy,
     straight_enumeration_violations,
 )
 from repro.core import generators
@@ -47,7 +51,10 @@ __all__ = [
     "peo_check", "peo_violations", "peo_check_numpy",
     "is_chordal", "is_chordal_batch", "is_chordal_host",
     "chordality_certificate", "make_sharded_chordality",
-    "mcs", "is_chordal_mcs", "mcs_numpy", "bfs",
+    "mcs", "is_chordal_mcs", "mcs_batched", "mcs_numpy", "bfs",
+    "is_proper_interval", "lexbfs_plus", "lexbfs_plus_batched",
+    "lexbfs_plus_numpy", "straight_enumeration_batched",
+    "straight_enumeration_numpy", "straight_enumeration_violations",
     "generators", "properties", "lexbfs_ref",
     "ChordalityEngine", "backend_names", "make_backend",
 ]

@@ -30,7 +30,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lexbfs import lexbfs
+from repro.core.lexbfs import (
+    COMPARATOR_MAX_N,
+    _comparator_rank,
+    _sorted_rank,
+    lexbfs,
+    lexbfs_inner_block,
+)
 
 
 def _lexbfs_plus_step(adj, n, state, _):
@@ -65,6 +71,99 @@ def lexbfs_plus(adj: jnp.ndarray, prior_order: jnp.ndarray) -> jnp.ndarray:
     return order.astype(jnp.int32)
 
 
+# ---------------------------------------------------------------------------
+# Batch-major LexBFS+ (PR 7): the recognition subsystem's hot path. Same
+# lazy-compaction machinery as ``lexbfs_batched`` — only the selection rule
+# differs, and it is done in two stages so the tie-break never leaves int32:
+# ``rank·(n+1) + prior_pos`` (the scan form above) overflows once ranks go
+# lazy, so we first take the max rank per slot, then argmax ``prior_pos``
+# over the lanes holding it. ``prior_pos`` is a permutation, so the selected
+# vertex is *unique* — the order is deterministic and bit-identical to the
+# per-step-compaction scan (lazy ranks are order-isomorphic to compacted
+# ranks, and the lexicographic (rank, prior_pos) max is preserved under
+# order-isomorphic remaps).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("return_pos",))
+def lexbfs_plus_batched(
+    adj_batch: jnp.ndarray,
+    prior_pos: jnp.ndarray,
+    return_pos: bool = False,
+):
+    """Batch-major LexBFS+ over a (B, N, N) bool batch.
+
+    Args:
+      adj_batch: (B, N, N) bool, symmetric, zero diagonal per slot.
+      prior_pos: (B, N) int32 — *positions* of the prior sweep
+        (``prior_pos[b, v]`` = index of v in the prior order), i.e. the
+        ``pos`` output of ``lexbfs_batched(..., return_pos=True)`` or of a
+        previous ``lexbfs_plus_batched`` call — sweeps chain without any
+        host round-trip.
+      return_pos: also return the (B, N) inverse permutations.
+
+    Returns:
+      orders: (B, N) int32 — or ``(orders, pos)`` with ``return_pos``.
+    """
+    b, n = adj_batch.shape[0], adj_batch.shape[1]
+    adj_batch = adj_batch.astype(bool)
+    k_inner = lexbfs_inner_block(n)
+    compact = _comparator_rank if n <= COMPARATOR_MAX_N else _sorted_rank
+    rows = jnp.arange(b, dtype=jnp.int32)
+
+    def step(i, state):
+        rank, order = state
+        # Stage 1: the lexicographically largest class. Active lanes are
+        # >= 0, visited lanes are negative, so a plain max finds it.
+        max_rank = jnp.max(rank, axis=1)  # (B,)
+        # Stage 2: among that class, the vertex LATEST in the prior order.
+        tie = jnp.where(rank == max_rank[:, None], prior_pos, jnp.int32(-1))
+        current = jnp.argmax(tie, axis=1).astype(jnp.int32)  # (B,)
+        order = order.at[:, i].set(current)
+        adjrow = jnp.take_along_axis(
+            adj_batch, current[:, None, None], axis=1
+        )[:, 0, :]
+        rank = rank.at[rows, current].set(jnp.int32(-1))
+        rank = 2 * rank + adjrow.astype(jnp.int32)
+        rank = jax.lax.cond(
+            (i % k_inner) == (k_inner - 1), compact, lambda r: r, rank
+        )
+        return rank, order
+
+    rank0 = jnp.zeros((b, n), dtype=jnp.int32)
+    order0 = jnp.zeros((b, n), dtype=jnp.int32)
+    _, order = jax.lax.fori_loop(0, n, step, (rank0, order0))
+    if return_pos:
+        pos = (
+            jnp.zeros((b, n), dtype=jnp.int32)
+            .at[rows[:, None], order]
+            .set(jnp.arange(n, dtype=jnp.int32)[None, :])
+        )
+        return order, pos
+    return order
+
+
+def lexbfs_plus_numpy(adj: np.ndarray, prior_pos: np.ndarray) -> np.ndarray:
+    """Numpy host twin of one LexBFS+ sweep (single graph, per-step
+    compaction — the step-by-step oracle for the batched device path;
+    identical lexicographic (rank, prior_pos) selection ⇒ identical
+    orders)."""
+    adj = np.asarray(adj, dtype=bool)
+    prior_pos = np.asarray(prior_pos, dtype=np.int64)
+    n = adj.shape[0]
+    rank = np.zeros(n, dtype=np.int64)
+    active = np.ones(n, dtype=bool)
+    order = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        score = np.where(active, rank * (n + 1) + prior_pos, -1)
+        current = int(np.argmax(score))
+        order[i] = current
+        active[current] = False
+        key = 2 * rank + (adj[current] & active)
+        cnt = np.bincount(key[active], minlength=2 * n)
+        class_idx = np.cumsum(cnt > 0) - 1
+        rank = np.where(active, class_idx[key], rank)
+    return order
+
+
 @jax.jit
 def straight_enumeration_violations(
     adj: jnp.ndarray, order: jnp.ndarray
@@ -85,6 +184,60 @@ def straight_enumeration_violations(
     count = jnp.sum(nb, axis=1)
     bad = (maxp - minp + 1) != count
     return jnp.sum(bad.astype(jnp.int32))
+
+
+@jax.jit
+def straight_enumeration_batched(
+    adj_batch: jnp.ndarray, order_batch: jnp.ndarray
+):
+    """Batched straight-enumeration check over (B, N, N) × (B, N).
+
+    Returns ``(violations, gap_vertex)``: per-slot violation counts (B,)
+    int32 and the first vertex (lowest index) whose closed neighborhood is
+    not consecutive in the order, or −1 when the slot has none — the raw
+    material of the proper-interval reject witness. Padding vertices are
+    isolated (closed neighborhood = themselves, trivially consecutive) and
+    LexBFS-family orders visit connected components contiguously, so
+    padding never splits a real neighborhood: the counts are exactly the
+    unpadded graphs'.
+    """
+    adj_batch = adj_batch.astype(bool)
+    b, n = adj_batch.shape[0], adj_batch.shape[1]
+    rows = jnp.arange(b, dtype=jnp.int32)
+    pos = (
+        jnp.zeros((b, n), dtype=jnp.int32)
+        .at[rows[:, None], order_batch]
+        .set(jnp.arange(n, dtype=jnp.int32)[None, :])
+    )
+    nb = adj_batch | jnp.eye(n, dtype=bool)[None]
+    posm = jnp.where(nb, pos[:, None, :], n + 1)
+    minp = jnp.min(posm, axis=2)
+    posM = jnp.where(nb, pos[:, None, :], -1)
+    maxp = jnp.max(posM, axis=2)
+    count = jnp.sum(nb, axis=2)
+    bad = (maxp - minp + 1) != count  # (B, N)
+    violations = jnp.sum(bad.astype(jnp.int32), axis=1)
+    first_bad = jnp.argmax(bad, axis=1).astype(jnp.int32)
+    gap_vertex = jnp.where(violations > 0, first_bad, jnp.int32(-1))
+    return violations, gap_vertex
+
+
+def straight_enumeration_numpy(adj: np.ndarray, order: np.ndarray):
+    """Numpy host twin of the straight-enumeration check (single graph).
+    Returns ``(violations, gap_vertex)`` matching the batched device path
+    bit for bit."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    pos = np.empty(n, dtype=np.int64)
+    pos[np.asarray(order, dtype=np.int64)] = np.arange(n)
+    nb = adj | np.eye(n, dtype=bool)
+    bad = np.zeros(n, dtype=bool)
+    for v in range(n):
+        ps = pos[nb[v]]
+        bad[v] = ps.max() - ps.min() + 1 != len(ps)
+    violations = int(bad.sum())
+    gap_vertex = int(np.argmax(bad)) if violations else -1
+    return violations, gap_vertex
 
 
 @jax.jit

@@ -13,7 +13,12 @@ deadlines and an ``asubmit`` asyncio adapter. Witness runs
 independently checkable certificates from ``repro.witness`` (clique
 tree / treewidth / optimal coloring, or an induced chordless cycle —
 DESIGN.md §10), compiled and cached per bucket exactly like verdict
-programs. Direct use of the ``repro.core`` multi-entry functions
+programs. Recognition runs (``run(..., properties=[...])``,
+``submit(properties=[...])``) answer multiple graph-class properties —
+chordal, proper interval, interval, MCS/LexDFS order checks — from shared
+LexBFS-family sweeps through the ``repro.recognition`` registry
+(DESIGN.md §13), again compiled and cached per bucket
+(``kind="recognition:<props>"``). Direct use of the ``repro.core`` multi-entry functions
 is deprecated for serving/benchmark callers — go through
 :class:`ChordalityEngine`.
 
@@ -44,6 +49,7 @@ from repro.engine.router import (
     BackendCost,
     DEFAULT_COST_MODEL,
     DEFAULT_FIT_N_RANGE,
+    DEFAULT_RECOGNITION_COST_MODEL,
     Router,
     fit_cost_model,
 )
@@ -81,6 +87,7 @@ __all__ = [
     "BackendCost",
     "DEFAULT_COST_MODEL",
     "DEFAULT_FIT_N_RANGE",
+    "DEFAULT_RECOGNITION_COST_MODEL",
     "Router",
     "fit_cost_model",
     "AsyncChordalityEngine",

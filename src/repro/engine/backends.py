@@ -19,18 +19,23 @@ the same fixed-shape contract, but the executable returns a
 ``repro.witness.WitnessBatch`` (verdict + clique tree/treewidth/coloring
 or chordless-cycle counterexample in one pass, see DESIGN.md §10).
 
+Property-capable backends (``caps.properties``) additionally expose
+``compile_recognition_batch`` — multi-property recognition executables
+(``repro.recognition``) returning a ``RecognitionBatch`` from one shared
+sweep plan; cached under ``kind="recognition:<props>"``.
+
 Registered backends:
 
-========== ======== ======= ============ ====== ======= ====================
-name       batched  device  certificate  sparse witness implementation
-========== ======== ======= ============ ====== ======= ====================
-numpy_ref  no       no      yes          no     yes     lexbfs_numpy_dense
-jax_faithful yes    yes     yes          no     yes     lexbfs (§6.1)
-jax_fast   yes      yes     yes          no     yes     lexbfs_fast (lazy)
-pallas_peo no       yes     yes          no     yes     lexbfs + Pallas PEO
-sharded    yes      yes     no           no     no      pjit over a mesh
-csr        yes      yes     yes          yes    yes     repro.sparse CSR
-========== ======== ======= ============ ====== ======= ====================
+========== ======== ======= ============ ====== ======= ===== ====================
+name       batched  device  certificate  sparse witness props implementation
+========== ======== ======= ============ ====== ======= ===== ====================
+numpy_ref  no       no      yes          no     yes     yes   lexbfs_numpy_dense
+jax_faithful yes    yes     yes          no     yes     no    lexbfs (§6.1)
+jax_fast   yes      yes     yes          no     yes     yes   lexbfs_fast (lazy)
+pallas_peo no       yes     yes          no     yes     no    lexbfs + Pallas PEO
+sharded    yes      yes     no           no     no      no    pjit over a mesh
+csr        yes      yes     yes          yes    yes     no    repro.sparse CSR
+========== ======== ======= ============ ====== ======= ===== ====================
 
 ``sparse`` backends consume :class:`repro.sparse.packing.PackedCSRBatch`
 payloads (the planner realizes those without densifying); every backend's
@@ -55,6 +60,8 @@ class BackendCaps:
     sparse: bool = False  # consumes PackedCSRBatch work units (O(N+M) path)
     witness: bool = False  # compiles WitnessBatch executables (repro.witness)
     fused: bool = False  # compiles one-dispatch-per-unit fused executables
+    properties: bool = False  # compiles RecognitionBatch executables
+    #                           (multi-property, repro.recognition)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +159,23 @@ class ChordalityBackend:
         raise NotImplementedError(
             f"backend {self.name!r} has no packed fused pipeline")
 
+    def compile_recognition_batch(
+        self, n_pad: int, batch: int, properties: Tuple[str, ...]
+    ):
+        """Executable for a multi-property recognition pass at one shape.
+
+        Contract: ``fn(payload, n_nodes) ->
+        repro.recognition.RecognitionBatch`` — the dense host-array
+        payload, plus the (batch,) logical sizes (0 for padding slots,
+        which come back trivially true). ``properties`` is the
+        *normalized* tuple (``repro.recognition.normalize_properties``) so
+        the compile-cache kind ``"recognition:<p1,p2,...>"`` is stable
+        regardless of request phrasing. Backends carrying the
+        ``properties`` capability must implement this.
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} does not answer property requests")
+
 
 # ---------------------------------------------------------------------------
 # Implementations (thin adapters over repro.core / repro.kernels).
@@ -163,7 +187,7 @@ class NumpyRefBackend(ChordalityBackend):
 
     name = "numpy_ref"
     caps = BackendCaps(batched=False, device=False, certificate=True,
-                       witness=True)
+                       witness=True, properties=True)
 
     def compile_batch(self, n_pad, batch):
         from repro.core.lexbfs import lexbfs_numpy_dense
@@ -196,6 +220,11 @@ class NumpyRefBackend(ChordalityBackend):
             return witness_batch_numpy(adjs, orders, n_nodes)
 
         return run
+
+    def compile_recognition_batch(self, n_pad, batch, properties):
+        from repro.recognition import make_recognition_host
+
+        return make_recognition_host(properties)
 
 
 class _JaxBackendBase(ChordalityBackend):
@@ -259,7 +288,7 @@ class JaxFastBackend(_JaxBackendBase):
 
     name = "jax_fast"
     caps = BackendCaps(batched=True, device=True, certificate=True,
-                       witness=True)
+                       witness=True, properties=True)
 
     def _order_fn(self):
         from repro.core.lexbfs import lexbfs_fast
@@ -275,6 +304,14 @@ class JaxFastBackend(_JaxBackendBase):
         from repro.witness import make_fused_witness_kernel
 
         return make_fused_witness_kernel()
+
+    def compile_recognition_batch(self, n_pad, batch, properties):
+        # The shared-sweep device program: one jit dispatch answers every
+        # requested property (repro.recognition.sweeps). numpy_ref holds
+        # the bit-identical host twin, preserving the differential pair.
+        from repro.recognition import make_recognition_kernel
+
+        return make_recognition_kernel(properties)
 
 
 class PallasPeoBackend(ChordalityBackend):

@@ -167,7 +167,10 @@ class CompileCache:
     ``repro.witness``) from ``backend.compile_witness_batch``, and
     ``"fused_witness"`` programs (the Pallas kernel emitting certificate
     raw material alongside the verdict in the same dispatch) from
-    ``backend.compile_fused_witness_batch``. All ride
+    ``backend.compile_fused_witness_batch``, and ``"recognition:<p1,p2>"``
+    programs (the shared-sweep multi-property executables of
+    ``repro.recognition``, one cache entry per *normalized* property
+    tuple) from ``backend.compile_recognition_batch``. All ride
     the same bucket grid, so enabling a family adds at most one extra
     compile per bucket shape; the session picks the verdict family per
     bucket via ``backend.verdict_kind(n_pad)`` and the witness family
@@ -201,6 +204,9 @@ class CompileCache:
                 fn = backend.compile_witness_batch(n_pad, batch)
             elif kind == "fused_witness":
                 fn = backend.compile_fused_witness_batch(n_pad, batch)
+            elif kind.startswith("recognition:"):
+                props = tuple(kind[len("recognition:"):].split(","))
+                fn = backend.compile_recognition_batch(n_pad, batch, props)
             else:
                 raise ValueError(f"unknown executable kind {kind!r}")
             self._fns[key] = fn

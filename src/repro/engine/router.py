@@ -125,6 +125,28 @@ DEFAULT_WITNESS_COST_MODEL: Dict[str, BackendCost] = {
         n_us=2.447, n2_us=0.01301, m_us=0.0),
 }
 
+# Recognition-mode coefficients: what a multi-property request costs per
+# graph through the shared-sweep executables (repro.recognition). Same
+# linear form, separate fit: the plan runs up to 5 sweeps where the
+# verdict runs 1, the LexBFS+ selection does two reductions per step, and
+# numpy_ref pays python-loop sweeps per graph while jax_fast amortizes one
+# bigger jit program per unit — so recognition crossovers sit elsewhere
+# than verdict ones. Fitted (PR 7) on the CI reference host via
+# fit_cost_model over the bench_router_samples grid (n 8–512, B 1–16)
+# measured with properties=<full 5-property registry> — the conservative
+# plan: pricing lighter property sets with it only overestimates both
+# candidates the same way, preserving ordering. Only the
+# properties-capable backends appear; choose(mode="recognition") requires
+# that capability, so others never price here.
+DEFAULT_RECOGNITION_COST_MODEL: Dict[str, BackendCost] = {
+    "numpy_ref": BackendCost(
+        dispatch_us=0.0, per_graph_us=458.5, sweep_us=0.0,
+        n_us=42.05, n2_us=0.1818, m_us=0.0),
+    "jax_fast": BackendCost(
+        dispatch_us=155.6, per_graph_us=62.32, sweep_us=0.0,
+        n_us=0.0, n2_us=0.05513, m_us=0.0),
+}
+
 #: Backends "auto" chooses among. All three carry the certificate cap;
 #: specialist backends (pallas_peo, sharded) stay opt-in by name.
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("numpy_ref", "jax_fast", "csr")
@@ -148,6 +170,7 @@ class Router:
         fit_n_range: Tuple[int, int] = DEFAULT_FIT_N_RANGE,
         *,
         witness_cost_model: Optional[CostModel] = None,
+        recognition_cost_model: Optional[CostModel] = None,
     ):
         self.cost_model: Dict[str, BackendCost] = dict(
             DEFAULT_COST_MODEL if cost_model is None else cost_model)
@@ -156,6 +179,10 @@ class Router:
         self.witness_cost_model: Dict[str, BackendCost] = dict(
             DEFAULT_WITNESS_COST_MODEL if witness_cost_model is None
             else witness_cost_model)
+        # Recognition-mode coefficients, same fallback discipline.
+        self.recognition_cost_model: Dict[str, BackendCost] = dict(
+            DEFAULT_RECOGNITION_COST_MODEL if recognition_cost_model is None
+            else recognition_cost_model)
         self.candidates = tuple(candidates)
         unknown = [c for c in self.candidates if c not in self.cost_model]
         if unknown:
@@ -192,6 +219,10 @@ class Router:
             cost = self.witness_cost_model.get(name)
             if cost is not None:
                 return cost.us_per_graph(n, density, batch)
+        elif mode == "recognition":
+            cost = self.recognition_cost_model.get(name)
+            if cost is not None:
+                return cost.us_per_graph(n, density, batch)
         elif mode != "verdict":
             raise ValueError(f"unknown routing mode {mode!r}")
         return self.cost_model[name].us_per_graph(n, density, batch)
@@ -213,14 +244,18 @@ class Router:
         ``mode="witness"`` prices candidates with the witness-mode
         coefficients (and implies the witness capability requirement) —
         certified traffic has different crossovers than verdict-only.
-        Features are clamped to the fitted support first
-        (:meth:`clamp_features`), so degenerate inputs route like the
-        nearest measured regime instead of extrapolating.
+        ``mode="recognition"`` does the same with the recognition-mode
+        coefficients and the ``properties`` capability. Features are
+        clamped to the fitted support first (:meth:`clamp_features`), so
+        degenerate inputs route like the nearest measured regime instead
+        of extrapolating.
         """
         n, density, batch = self.clamp_features(n, density, batch)
         req = tuple(require)
         if mode == "witness" and "witness" not in req:
             req = req + ("witness",)
+        if mode == "recognition" and "properties" not in req:
+            req = req + ("properties",)
         best_name, best_cost = None, math.inf
         for name in self.candidates:
             caps = backend_spec(name).caps
@@ -235,16 +270,21 @@ class Router:
                 f"no candidate in {self.candidates} satisfies {req}")
         return best_name
 
-    def annotate(self, plan: Plan, graphs, *, witness: bool = False) -> Plan:
+    def annotate(
+        self, plan: Plan, graphs, *, witness: bool = False,
+        mode: Optional[str] = None,
+    ) -> Plan:
         """Return a plan whose units carry per-unit backend choices.
 
         The density feature is the unit mean of ``n_edges / n_pad²`` —
         what the padded work unit will actually look like on device.
         ``witness=True`` routes with the witness-mode coefficients (the
         plan's units will run certified executables, whose cost curves
-        cross over elsewhere).
+        cross over elsewhere); ``mode`` overrides outright (the session's
+        recognition path passes ``mode="recognition"``).
         """
-        mode = "witness" if witness else "verdict"
+        if mode is None:
+            mode = "witness" if witness else "verdict"
         units: List[WorkUnit] = []
         for u in plan.units:
             m_mean = (

@@ -43,6 +43,13 @@ Three client-surface extras on top of the triad:
 * **asyncio** — :meth:`AsyncChordalityEngine.asubmit` wraps the
   thread-based future for ``await``-style clients (coroutine servers,
   ``asyncio.gather`` fan-in); see examples/serve_chordality.py.
+* **recognition** — ``submit(properties=["proper_interval", ...])``
+  resolves the future with per-property verdicts plus the request's
+  ``repro.recognition.RecognitionResult``. Like the witness upgrade, one
+  recognizing request upgrades its whole unit: the unit runs a single
+  shared-sweep recognition executable compiled for the *union* of the
+  live requests' property sets (``kind="recognition:<props>"``), and each
+  response is filtered back down to what its request asked for.
 """
 from __future__ import annotations
 
@@ -51,7 +58,7 @@ import queue
 import threading
 import time
 from concurrent.futures import Future
-from typing import Deque, Dict, List, Optional, Sequence, Union
+from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
 import collections
 
@@ -78,6 +85,12 @@ class ServiceResponse:
     verdict: bool
     certificate: Optional[Certificate]   # populated iff want_certificate
     witness: Optional[object] = None     # WitnessResult iff want_witness
+    #: {property: verdict} over the request's normalized property set
+    #: (always includes "chordal") iff it submitted ``properties=[...]``.
+    properties: Optional[Dict[str, bool]] = None
+    #: the request's RecognitionResult (per-property answers + the
+    #: proper-interval witness when requested) iff ``properties=[...]``.
+    recognition: Optional[object] = None
     queue_ms: float = 0.0  # submit -> unit execution start
     exec_ms: float = 0.0   # the unit executable call (shared across batch)
     backend: str = ""      # backend the request's unit ran on
@@ -93,6 +106,7 @@ class _Request:
     t_submit: float
     want_certificate: bool
     want_witness: bool = False
+    properties: Tuple[str, ...] = ()     # normalized; empty = verdict-only
     deadline: Optional[float] = None     # absolute perf_counter seconds
 
 
@@ -119,6 +133,10 @@ class ServiceStats:
     #: live request in them asked ``want_witness`` — the batching economics
     #: of certified serving (one heavier dispatch amortized over the unit).
     witness_upgraded: int = 0
+    #: units upgraded to a shared-sweep recognition executable because at
+    #: least one live request in them submitted ``properties=[...]`` — the
+    #: unit answers the union of the live property sets in one dispatch.
+    recognition_upgraded: int = 0
     queue_delays_ms: List[float] = dataclasses.field(default_factory=list)
     exec_latencies_ms: List[float] = dataclasses.field(default_factory=list)
     #: {filled slots: units executed with that occupancy}
@@ -255,6 +273,7 @@ class AsyncChordalityEngine:
         graph: Union[Graph, np.ndarray],
         want_certificate: bool = False,
         want_witness: bool = False,
+        properties: Optional[Sequence[str]] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> "Future[ServiceResponse]":
@@ -269,10 +288,26 @@ class AsyncChordalityEngine:
         ``want_witness`` resolves the future with a checkable
         ``repro.witness.WitnessResult``; its unit then runs the fused
         witness executable (batched — no per-request extra pass).
+        ``properties=[...]`` resolves the future with multi-property
+        recognition answers (``ServiceResponse.properties`` /
+        ``.recognition``); its unit then runs one shared-sweep recognition
+        executable for the union of the unit's live property sets.
+        Mutually exclusive with ``want_witness`` — recognition carries its
+        own proper-interval witness.
         ``deadline_ms`` (default: the config's) drops the request if it is
         still queued this long after submission — the future is cancelled
         and ``ServiceStats.n_expired`` counts it.
         """
+        props: Tuple[str, ...] = ()
+        if properties is not None:
+            if want_witness:
+                raise ValueError(
+                    "want_witness=True and properties=[...] are mutually "
+                    "exclusive; recognition responses carry their own "
+                    "proper-interval witnesses")
+            from repro.recognition import normalize_properties
+
+            props = normalize_properties(properties)  # validates names
         if not isinstance(graph, Graph):
             adj = np.asarray(graph, dtype=bool)
             graph = Graph(n_nodes=adj.shape[0], adj=adj)
@@ -287,6 +322,7 @@ class AsyncChordalityEngine:
             graph=graph, future=fut, t_submit=t_submit,
             want_certificate=want_certificate,
             want_witness=want_witness,
+            properties=props,
             deadline=None if deadline_ms is None
             else t_submit + deadline_ms / 1e3)
         deadline = None if timeout is None else \
@@ -322,13 +358,14 @@ class AsyncChordalityEngine:
         graphs: Sequence[Union[Graph, np.ndarray]],
         want_certificate: bool = False,
         want_witness: bool = False,
+        properties: Optional[Sequence[str]] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> List["Future[ServiceResponse]"]:
         """``submit`` each graph in order; returns the futures in order."""
         return [
             self.submit(g, want_certificate=want_certificate,
-                        want_witness=want_witness,
+                        want_witness=want_witness, properties=properties,
                         deadline_ms=deadline_ms, timeout=timeout)
             for g in graphs
         ]
@@ -338,6 +375,7 @@ class AsyncChordalityEngine:
         graph: Union[Graph, np.ndarray],
         want_certificate: bool = False,
         want_witness: bool = False,
+        properties: Optional[Sequence[str]] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ):
@@ -360,8 +398,8 @@ class AsyncChordalityEngine:
 
         fut = self.submit(
             graph, want_certificate=want_certificate,
-            want_witness=want_witness, deadline_ms=deadline_ms,
-            timeout=timeout)
+            want_witness=want_witness, properties=properties,
+            deadline_ms=deadline_ms, timeout=timeout)
         return asyncio.wrap_future(fut)
 
     def flush(self, timeout: Optional[float] = None) -> None:
@@ -599,13 +637,33 @@ class AsyncChordalityEngine:
         # One witness-wanting live request upgrades the whole unit to the
         # fused witness executable: the certificates are batched, so they
         # ride the unit's single device call instead of per-request passes.
+        # Recognition upgrades work the same way, over the *union* of the
+        # live requests' property sets (one shared-sweep dispatch answers
+        # every property any of them asked for). A unit can carry both
+        # upgrades when different requests want different extras.
         unit_wits: Optional[List] = None
+        unit_recs: Optional[tuple] = None   # (props, batch, results)
         try:
+            prop_union = set()
+            for r, ok in zip(au.requests, live):
+                if ok:
+                    prop_union.update(r.properties)
+            if prop_union:
+                from repro.recognition import normalize_properties
+
+                props = normalize_properties(sorted(prop_union))
+                rb, recs, backend_name, exec_ms = \
+                    self.engine.execute_unit_recognition(
+                        au.unit, graphs, props)
+                unit_recs = (props, rb, recs)
+                out = np.asarray(
+                    rb.verdicts["chordal"][: len(au.requests)], dtype=bool)
             if any(r.want_witness and ok
                    for r, ok in zip(au.requests, live)):
-                out, unit_wits, backend_name, exec_ms = \
+                out, unit_wits, backend_name, wit_ms = \
                     self.engine.execute_unit_witness(au.unit, graphs)
-            else:
+                exec_ms = wit_ms if unit_recs is None else exec_ms + wit_ms
+            elif unit_recs is None:
                 out, backend_name, exec_ms = self.engine.execute_unit(
                     au.unit, graphs)
         except Exception as e:
@@ -636,6 +694,8 @@ class AsyncChordalityEngine:
             self.stats.n_units += 1
             if unit_wits is not None:
                 self.stats.witness_upgraded += 1
+            if unit_recs is not None:
+                self.stats.recognition_upgraded += 1
             self.stats.exec_latencies_ms.append(exec_ms)
             occ = sum(live)       # cancelled-after-drain slots don't count
             self.stats.occupancy_histogram[occ] = \
@@ -652,12 +712,27 @@ class AsyncChordalityEngine:
                     self.stats.backend_histogram[backend_name] = \
                         self.stats.backend_histogram.get(
                             backend_name, 0) + 1
+                    props_resp = recog_resp = None
+                    if unit_recs is not None and r.properties:
+                        # Filter the unit's union answers back down to
+                        # this request's own normalized property set.
+                        _, rb, recs = unit_recs
+                        props_resp = {
+                            p: bool(rb.verdicts[p][slot])
+                            for p in r.properties}
+                        recog_resp = dataclasses.replace(
+                            recs[slot], properties=props_resp,
+                            witness=recs[slot].witness
+                            if "proper_interval" in r.properties
+                            else None)
                     r.future.set_result(ServiceResponse(
                         verdict=bool(out[slot]),
                         certificate=certs[slot],
                         witness=unit_wits[slot]
                         if unit_wits is not None and r.want_witness
                         else None,
+                        properties=props_resp,
+                        recognition=recog_resp,
                         queue_ms=queue_ms,
                         exec_ms=exec_ms,
                         backend=backend_name,

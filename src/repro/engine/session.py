@@ -15,6 +15,11 @@
                                       # chordless cycle (repro.witness)
     eng.witness(graphs[i])            # single-graph witness
 
+    result = eng.run(graphs, properties=["chordal", "proper_interval"])
+    result.properties["proper_interval"]   # (len(graphs),) bool planes
+    result.recognitions[i].witness    # proper-interval certificate
+    eng.recognize(graphs[i])          # single-graph multi-property answer
+
 The engine owns one backend instance (or, under ``backend="auto"``, a
 router plus lazily-built instances of its candidates) and one compile cache
 for its lifetime, so repeated ``run`` calls amortize compilation the way a
@@ -87,12 +92,20 @@ class EngineResult:
     ``witnesses`` is populated by witness runs (``run(..., witness=True)``)
     — one ``repro.witness.WitnessResult`` per request, same order as
     ``verdicts``; None on verdict-only runs.
+
+    ``properties`` / ``recognitions`` are populated by recognition runs
+    (``run(..., properties=[...])``): one ``(n_requests,)`` bool plane per
+    normalized property (``verdicts`` stays the chordal plane), and one
+    ``repro.recognition.RecognitionResult`` per request carrying the
+    per-graph answers plus the proper-interval witness when requested.
     """
 
     verdicts: np.ndarray          # (n_requests,) bool
     plan: Plan
     stats: EngineStats
     witnesses: Optional[List] = None   # List[repro.witness.WitnessResult]
+    properties: Optional[Dict[str, np.ndarray]] = None
+    recognitions: Optional[List] = None  # List[RecognitionResult]
 
     def __len__(self) -> int:
         return len(self.verdicts)
@@ -197,6 +210,19 @@ class ChordalityEngine:
                 make_backend("jax_faithful")
         return inst
 
+    def _resolve_properties(self, name: Optional[str]) -> ChordalityBackend:
+        """Like :meth:`_resolve` but guarantees the ``properties``
+        capability: units landing on a backend without recognition
+        executables fall back to ``jax_fast`` (the device twin; numpy_ref
+        holds the host twin and is reachable by name or routing)."""
+        backend = self._resolve(name)
+        if backend.caps.properties:
+            return backend
+        inst = self._instances.get("jax_fast")
+        if inst is None or not inst.caps.properties:
+            inst = self._instances["jax_fast"] = make_backend("jax_fast")
+        return inst
+
     @staticmethod
     def _realize(backend: ChordalityBackend, unit, graphs):
         if backend.caps.sparse:
@@ -213,18 +239,24 @@ class ChordalityEngine:
 
     # -- planning ----------------------------------------------------------
     def plan(self, graphs: Sequence[Graph],
-             witness: Optional[bool] = None) -> Plan:
+             witness: Optional[bool] = None,
+             properties: Optional[Sequence[str]] = None) -> Plan:
         """Shape-bucketed plan; auto engines route each unit.
 
         ``witness`` (default: the engine's witness setting) prices the
         routing with the witness-mode cost model — certified units run
         heavier executables, so their backend crossovers differ.
+        ``properties`` prices with the recognition-mode model instead
+        (``DEFAULT_RECOGNITION_COST_MODEL``) and requires the
+        ``properties`` capability.
         """
         witness = self.witness_default if witness is None else witness
         plan = plan_requests(
             graphs, max_batch=self.max_batch, buckets=self.buckets)
         if self.router is not None:
-            plan = self.router.annotate(plan, graphs, witness=bool(witness))
+            mode = "recognition" if properties is not None else None
+            plan = self.router.annotate(
+                plan, graphs, witness=bool(witness), mode=mode)
         return plan
 
     def route_unit(self, unit, graphs: Sequence[Graph]):
@@ -384,8 +416,41 @@ class ChordalityEngine:
         verdicts = np.asarray(wb.chordal[: len(unit.indices)], dtype=bool)
         return verdicts, witnesses, backend.name, exec_ms
 
+    def execute_unit_recognition(
+        self, unit, graphs: Sequence[Graph], properties: Sequence[str]
+    ):
+        """Run one work unit's multi-property recognition pass:
+        ``(recognition_batch, results, backend_name, exec_ms)``.
+
+        The recognition twin of :meth:`execute_unit`: one shared-sweep
+        executable (cached under ``"recognition:<props>"`` on the same
+        bucket key) answers every requested property; ``results`` are the
+        per-request ``repro.recognition.RecognitionResult``\\ s in
+        ``unit.indices`` order. A unit landing on a backend without the
+        ``properties`` capability falls back to ``jax_fast``
+        (:meth:`_resolve_properties`).
+        """
+        from repro.recognition import normalize_properties
+
+        props = normalize_properties(properties)
+        backend = self._resolve_properties(unit.backend)
+        payload = realize_unit(unit, graphs)   # dense contract only
+        n_vec = self._unit_n_nodes(unit, graphs)
+        fn = self.cache.get(
+            backend, unit.n_pad, unit.batch,
+            kind="recognition:" + ",".join(props))
+        t1 = time.perf_counter()
+        rb = fn(payload, n_vec)
+        exec_ms = (time.perf_counter() - t1) * 1e3
+        results = [
+            rb.result(slot, graphs[idx].n_nodes)
+            for slot, idx in enumerate(unit.indices)
+        ]
+        return rb, results, backend.name, exec_ms
+
     def run(
-        self, graphs: Sequence[Graph], witness: Optional[bool] = None
+        self, graphs: Sequence[Graph], witness: Optional[bool] = None,
+        properties: Optional[Sequence[str]] = None,
     ) -> EngineResult:
         """Test a stream of graphs; verdicts come back in request order.
 
@@ -394,8 +459,24 @@ class ChordalityEngine:
         ``repro.witness.WitnessResult`` per request — same plan, same
         buckets, one fused witness executable per unit instead of the
         verdict-only one.
+
+        ``properties=[...]`` switches the run to multi-property
+        recognition (``repro.recognition``): every unit executes one
+        shared-sweep executable answering all requested properties, the
+        result carries a bool plane per normalized property
+        (``result.properties``) plus per-request ``RecognitionResult``\\ s
+        (``result.recognitions``); ``verdicts`` stays the chordal plane.
+        Mutually exclusive with ``witness=True`` — recognition carries its
+        own (proper-interval) witness structures.
         """
         witness = self.witness_default if witness is None else witness
+        if properties is not None:
+            if witness:
+                raise ValueError(
+                    "witness=True and properties=[...] are mutually "
+                    "exclusive; recognition runs carry their own "
+                    "proper-interval witnesses")
+            return self._run_recognition(graphs, properties)
         plan = self.plan(graphs, witness=witness)
         verdicts = np.zeros(plan.n_requests, dtype=bool)
         witnesses: Optional[List] = [None] * plan.n_requests \
@@ -425,6 +506,41 @@ class ChordalityEngine:
         stats.bucket_histogram = plan.bucket_histogram
         return EngineResult(
             verdicts=verdicts, plan=plan, stats=stats, witnesses=witnesses)
+
+    def _run_recognition(
+        self, graphs: Sequence[Graph], properties: Sequence[str]
+    ) -> EngineResult:
+        """The recognition body of :meth:`run` (``properties=[...]``)."""
+        from repro.recognition import normalize_properties
+
+        props = normalize_properties(properties)
+        plan = self.plan(graphs, witness=False, properties=props)
+        planes = {
+            p: np.zeros(plan.n_requests, dtype=bool) for p in props}
+        recognitions: List = [None] * plan.n_requests
+        stats = EngineStats(
+            n_requests=plan.n_requests, n_units=len(plan.units))
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        t0 = time.perf_counter()
+        for unit in plan.units:
+            rb, results, backend_name, exec_ms = \
+                self.execute_unit_recognition(unit, graphs, props)
+            stats.unit_latencies_ms.append(exec_ms)
+            for slot, (idx, res) in enumerate(
+                    zip(unit.indices, results)):
+                recognitions[idx] = res
+                for p in props:
+                    planes[p][idx] = bool(rb.verdicts[p][slot])
+            stats.backend_histogram[backend_name] = (
+                stats.backend_histogram.get(backend_name, 0)
+                + len(unit.indices))
+        stats.wall_s = time.perf_counter() - t0
+        stats.compile_hits = self.cache.hits - hits0
+        stats.compile_misses = self.cache.misses - misses0
+        stats.bucket_histogram = plan.bucket_histogram
+        return EngineResult(
+            verdicts=planes["chordal"].copy(), plan=plan, stats=stats,
+            properties=planes, recognitions=recognitions)
 
     def refit_router(self, min_samples: int = 4):
         """Online re-fit of the router's cost model from this session's own
@@ -534,3 +650,28 @@ class ChordalityEngine:
         adj_fallback = padded if (
             not wb.chordal[0] and wb.cycle_len[0] < 4) else None
         return wb.result(0, n, adj=adj_fallback)
+
+    def recognize(self, graph_or_adj, properties: Optional[Sequence[str]]
+                  = None):
+        """Single-graph multi-property answer
+        (``repro.recognition.RecognitionResult``).
+
+        Defaults to the full property registry. Rides the same bucket
+        grid and compile cache as batch runs — the request pads to its
+        bucket and executes a ``batch=1`` recognition program whose
+        sweeps are shared across all requested properties. Auto engines
+        route with the ``properties`` capability required; fixed engines
+        fall back to ``jax_fast`` if their backend lacks it.
+        """
+        from repro.recognition import normalize_properties, property_names
+
+        props = normalize_properties(
+            properties if properties is not None else property_names())
+        padded, n, n_pad = self._pad_single(graph_or_adj)
+        backend = self._resolve_properties(
+            self._route_single(padded, n_pad, ("properties",),
+                               mode="recognition"))
+        fn = self.cache.get(
+            backend, n_pad, 1, kind="recognition:" + ",".join(props))
+        rb = fn(padded[None], np.array([n], dtype=np.int32))
+        return rb.result(0, n)

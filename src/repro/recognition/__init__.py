@@ -1,0 +1,55 @@
+"""repro.recognition — multi-property graph-class recognition (DESIGN.md §13).
+
+A property registry (chordal / proper_interval / interval / mcs_peo /
+lexdfs_order) whose sweep plans compile to per-(n_pad, batch) bucket
+executables through the engine's CompileCache (kinds ``"recognition:*"``),
+with shared sweeps across properties (σ1 LexBFS is computed once and feeds
+every chain) and bit-identical numpy host twins. Served through
+``ChordalityEngine.run(properties=[...])`` / ``recognize(g)`` and
+``AsyncChordalityEngine.submit(properties=...)``.
+"""
+from repro.recognition.lexdfs import (
+    lexdfs,
+    lexdfs_batched,
+    lexdfs_numpy,
+)
+from repro.recognition.registry import (
+    PROPERTY_REGISTRY,
+    PropertySpec,
+    normalize_properties,
+    plan_sweeps,
+    property_names,
+    property_spec,
+    standalone_sweep_count,
+)
+from repro.recognition.result import (
+    ProperIntervalWitness,
+    RecognitionBatch,
+    RecognitionResult,
+)
+from repro.recognition.sweeps import (
+    at_free_numpy,
+    make_recognition_host,
+    make_recognition_kernel,
+    sweep_counter,
+)
+
+__all__ = [
+    "PROPERTY_REGISTRY",
+    "PropertySpec",
+    "ProperIntervalWitness",
+    "RecognitionBatch",
+    "RecognitionResult",
+    "at_free_numpy",
+    "lexdfs",
+    "lexdfs_batched",
+    "lexdfs_numpy",
+    "make_recognition_host",
+    "make_recognition_kernel",
+    "normalize_properties",
+    "plan_sweeps",
+    "property_names",
+    "property_spec",
+    "standalone_sweep_count",
+    "sweep_counter",
+]

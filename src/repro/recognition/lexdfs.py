@@ -1,0 +1,105 @@
+"""Parallel Lexicographic Depth-First Search on the §6.1 rank machinery.
+
+LexDFS (Corneil–Krueger; see Beisegel et al., "Linear Time LexDFS on
+Chordal Graphs", PAPERS.md) labels each unvisited vertex with the visit
+times of its visited neighbors, *most recent first*, and picks the
+lexicographically largest label. In partition-refinement form the only
+difference from LexBFS is where split classes go: LexBFS appends the
+neighbor subclass right after its old class, LexDFS moves it to the
+**front** of the class order. On the dense rank representation that is
+
+    rank' = rank + bound · Adj[current]        (bound > max active rank)
+
+— every neighbor jumps above every non-neighbor while both groups keep
+their internal order, exactly the front-insertion split. Like the lazy
+LexBFS path, ``bound`` starts at N after a compaction and doubles each
+cheap step, so the same :func:`~repro.core.lexbfs.lexbfs_inner_block`
+cadence keeps ranks inside int32, and the same comparator / sort dense
+rank re-compacts (order-isomorphic remap ⇒ identical selections).
+
+Why the engine cares: LexDFS is a Maximal Neighborhood Search — a picked
+vertex's visited neighborhood is inclusion-maximal (for decreasing-sorted
+label sequences, a strict superset is lexicographically strictly larger).
+By the Corneil–Krueger generalization of Theorem 5.2, *every* MNS order of
+a chordal graph passes the paper's PEO test, so LexDFS + PEO is a third
+independent chordality pipeline (``lexdfs_order`` in the registry) next to
+LexBFS (§6.1) and MCS (§5.1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lexbfs import (
+    COMPARATOR_MAX_N,
+    _comparator_rank,
+    _sorted_rank,
+    lexbfs_inner_block,
+)
+
+
+@jax.jit
+def lexdfs_batched(adj_batch: jnp.ndarray) -> jnp.ndarray:
+    """Batch-major parallel LexDFS over a (B, N, N) bool batch.
+
+    Same shape discipline as ``lexbfs_batched``: one ``fori_loop`` over
+    (B, N) state, first-index argmax selection, lazy compaction. Visited
+    lanes park at exactly −1 and the split bit is masked by activity
+    (unlike LexBFS's ``2r + bit``, ``r + bound·bit`` would resurrect a
+    visited lane), so they never re-enter selection.
+    """
+    b, n = adj_batch.shape[0], adj_batch.shape[1]
+    adj_batch = adj_batch.astype(bool)
+    k_inner = lexbfs_inner_block(n)
+    compact = _comparator_rank if n <= COMPARATOR_MAX_N else _sorted_rank
+    rows = jnp.arange(b, dtype=jnp.int32)
+
+    def step(i, state):
+        rank, order = state
+        current = jnp.argmax(rank, axis=1).astype(jnp.int32)  # (B,)
+        order = order.at[:, i].set(current)
+        adjrow = jnp.take_along_axis(
+            adj_batch, current[:, None, None], axis=1
+        )[:, 0, :]
+        rank = rank.at[rows, current].set(jnp.int32(-1))
+        # bound = n · 2^(steps since last compaction) > max active rank.
+        bound = jnp.int32(n) * (jnp.int32(1) << (i % k_inner))
+        active = rank >= 0
+        rank = rank + bound * (adjrow & active).astype(jnp.int32)
+        rank = jax.lax.cond(
+            (i % k_inner) == (k_inner - 1), compact, lambda r: r, rank
+        )
+        return rank, order
+
+    rank0 = jnp.zeros((b, n), dtype=jnp.int32)
+    order0 = jnp.zeros((b, n), dtype=jnp.int32)
+    _, order = jax.lax.fori_loop(0, n, step, (rank0, order0))
+    return order
+
+
+@jax.jit
+def lexdfs(adj: jnp.ndarray) -> jnp.ndarray:
+    """Single-graph view of :func:`lexdfs_batched` (B = 1). (N,) int32."""
+    return lexdfs_batched(adj[None])[0]
+
+
+def lexdfs_numpy(adj: np.ndarray) -> np.ndarray:
+    """Numpy host twin: per-step compaction, identical selections (the
+    lazy device ranks are order-isomorphic to these compacted ranks, and
+    both use first-index argmax)."""
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    rank = np.zeros(n, dtype=np.int64)
+    active = np.ones(n, dtype=bool)
+    order = np.empty(n, dtype=np.int32)
+    for i in range(n):
+        current = int(np.argmax(np.where(active, rank, -1)))
+        order[i] = current
+        active[current] = False
+        # front-insertion split: neighbors above everyone, then compact.
+        key = rank + n * (adj[current] & active)
+        cnt = np.bincount(key[active], minlength=2 * n)
+        class_idx = np.cumsum(cnt > 0) - 1
+        rank = np.where(active, class_idx[key], -1)
+    return order

@@ -1,0 +1,133 @@
+"""Property registry: which sweeps each graph-class property needs.
+
+The recognition subsystem (DESIGN.md §13) answers several graph-class
+questions from the *same* family of vertex-ordering sweeps the chordality
+verdict already runs. Each :class:`PropertySpec` declares its sweep chain
+and final check; :func:`plan_sweeps` merges the chains of a property set
+into one shared schedule so a multi-property request never repeats a sweep:
+
+======================  ============================================  =====
+property                sweeps (chain)                                check
+======================  ============================================  =====
+``chordal``             lexbfs                                        order is a PEO (paper §6.2)
+``proper_interval``     lexbfs, lexbfs_plus, lexbfs_plus              σ3 is a straight enumeration (Corneil 3-sweep)
+``interval``            lexbfs                                        PEO + host AT-free scan (Lekkerkerker–Boland)
+``mcs_peo``             mcs                                           order is a PEO (Theorem 5.2)
+``lexdfs_order``        lexdfs                                        order is a PEO (MNS family, Corneil–Krueger)
+======================  ============================================  =====
+
+The ``lexbfs`` σ1 is shared: ``chordal + proper_interval`` runs 3 sweeps,
+not 1 + 3; all five properties together run 5, not 7. ``chordal`` is always
+included in a normalized set — every other property's verdict either
+consumes σ1 outright or (``interval``) is gated on it, so it is free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Tuple
+
+
+@dataclass(frozen=True)
+class PropertySpec:
+    """One recognizable graph-class property.
+
+    Attributes:
+      name: registry key.
+      sweeps: the sweep chain this property needs standalone. A chain
+        starting with ``"lexbfs"`` continues with ``"lexbfs_plus"`` links,
+        each seeded by the previous sweep's positions; ``"mcs"`` and
+        ``"lexdfs"`` are independent single sweeps.
+      check: final check applied after the chain — ``"peo"``,
+        ``"straight_enumeration"``, or ``"peo+at_free"`` (the last adds a
+        host-side asteroidal-triple-free scan on chordal slots).
+      doc: one-line description for tooling.
+    """
+
+    name: str
+    sweeps: Tuple[str, ...]
+    check: str
+    doc: str
+
+
+#: Canonical property order = insertion order of this dict. Keep the
+#: lexbfs-chain properties first so plan_sweeps reads naturally.
+PROPERTY_REGISTRY: Dict[str, PropertySpec] = {
+    "chordal": PropertySpec(
+        "chordal", ("lexbfs",), "peo",
+        "chordality: LexBFS order is a perfect elimination order"),
+    "proper_interval": PropertySpec(
+        "proper_interval", ("lexbfs", "lexbfs_plus", "lexbfs_plus"),
+        "straight_enumeration",
+        "unit/proper interval: Corneil 3-sweep, σ3 straight enumeration"),
+    "interval": PropertySpec(
+        "interval", ("lexbfs",), "peo+at_free",
+        "interval: chordal AND asteroidal-triple-free "
+        "(Lekkerkerker–Boland)"),
+    "mcs_peo": PropertySpec(
+        "mcs_peo", ("mcs",), "peo",
+        "chordality via MCS + PEO (Theorem 5.2 cross-check)"),
+    "lexdfs_order": PropertySpec(
+        "lexdfs_order", ("lexdfs",), "peo",
+        "chordality via LexDFS + PEO (MNS family)"),
+}
+
+
+def property_names() -> Tuple[str, ...]:
+    """All registered property names, canonical order."""
+    return tuple(PROPERTY_REGISTRY)
+
+
+def property_spec(name: str) -> PropertySpec:
+    """Spec for one property; raises ValueError on unknown names."""
+    try:
+        return PROPERTY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown property {name!r}; registered: "
+            f"{', '.join(PROPERTY_REGISTRY)}"
+        ) from None
+
+
+def normalize_properties(properties: Iterable[str]) -> Tuple[str, ...]:
+    """Validate, dedupe, and canonicalize a property request.
+
+    ``chordal`` is always included: σ1 is computed for every property set
+    anyway (it seeds the 3-sweep and gates the interval check), so its
+    verdict is free and keeping it makes ``EngineResult.verdicts`` valid
+    for every recognition run.
+    """
+    requested = set()
+    for p in properties:
+        property_spec(p)  # validates
+        requested.add(p)
+    requested.add("chordal")
+    return tuple(p for p in PROPERTY_REGISTRY if p in requested)
+
+
+def plan_sweeps(properties: Iterable[str]) -> Tuple[str, ...]:
+    """The shared sweep schedule for a (normalized) property set.
+
+    The lexbfs chains of all requested properties share their common
+    prefix — σ1 once, then as many ``lexbfs_plus`` links as the longest
+    chain needs — followed by the independent ``mcs`` / ``lexdfs`` sweeps.
+    """
+    props = normalize_properties(properties)
+    chain = 0
+    tail = []
+    for p in props:
+        sweeps = PROPERTY_REGISTRY[p].sweeps
+        if sweeps[0] == "lexbfs":
+            chain = max(chain, len(sweeps))
+        else:
+            tail.extend(s for s in sweeps if s not in tail)
+    plan = ("lexbfs",) + ("lexbfs_plus",) * (chain - 1) if chain else ()
+    return tuple(plan) + tuple(tail)
+
+
+def standalone_sweep_count(properties: Iterable[str]) -> int:
+    """Total sweeps if each property ran its chain alone — the baseline the
+    acceptance criterion compares the shared plan against."""
+    return sum(
+        len(PROPERTY_REGISTRY[p].sweeps)
+        for p in normalize_properties(properties)
+    )

@@ -1,0 +1,85 @@
+"""Result containers for the recognition subsystem.
+
+A bucket executable (``CompileCache`` kind ``"recognition:*"``) returns a
+:class:`RecognitionBatch` — batch-level verdict planes plus the raw
+material of the proper-interval witness. ``.result(slot, n)`` projects one
+slot down to a :class:`RecognitionResult` for a real graph on ``n``
+vertices, restricting the σ3 order to real vertices: padding vertices are
+isolated singleton components and LexBFS-family sweeps visit components
+contiguously, so dropping their (whole-block) positions preserves both the
+relative order of real vertices and the consecutiveness of every real
+closed neighborhood — the restricted order carries exactly the unpadded
+graph's witness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ProperIntervalWitness:
+    """Checkable certificate for a proper-interval verdict.
+
+    Accept (``proper_interval=True``): ``order`` is a straight enumeration
+    — every closed neighborhood occupies consecutive positions
+    (``gap_vertex = -1``). Reject: ``gap_vertex`` is a vertex whose closed
+    neighborhood is *not* consecutive in ``order``; by Corneil's 3-sweep
+    theorem a σ3 failing the straight-enumeration test certifies the graph
+    is not proper interval (soundness rests on ``order`` being a genuine
+    σ3 — the independent checker in ``repro.witness.verify`` verifies the
+    gap itself, and tests cross-check tiny graphs against the brute-force
+    oracle).
+    """
+
+    proper_interval: bool
+    order: np.ndarray  # (n,) int32 — σ3 restricted to real vertices
+    gap_vertex: int    # -1 on accept
+
+
+@dataclass(frozen=True)
+class RecognitionResult:
+    """Per-graph answer to a multi-property recognition request."""
+
+    properties: Dict[str, bool]
+    n_sweeps: int  # sweeps the shared plan ran (not the standalone sum)
+    witness: Optional[ProperIntervalWitness] = None
+
+
+@dataclass(frozen=True)
+class RecognitionBatch:
+    """Batch-level recognition output, one plane per property.
+
+    Attributes:
+      properties: normalized property tuple this batch answers.
+      verdicts: property name -> (B,) bool.
+      n_sweeps: length of the shared sweep plan executed for this batch.
+      pi_order: (B, N) int32 σ3 orders (padded index space) when
+        ``proper_interval`` was requested, else None.
+      pi_violations: (B,) int32 straight-enumeration violation counts.
+      pi_gap_vertex: (B,) int32 first gap vertex per slot, −1 if none.
+    """
+
+    properties: Tuple[str, ...]
+    verdicts: Dict[str, np.ndarray]
+    n_sweeps: int
+    pi_order: Optional[np.ndarray] = None
+    pi_violations: Optional[np.ndarray] = None
+    pi_gap_vertex: Optional[np.ndarray] = None
+
+    def result(self, slot: int, n: int) -> RecognitionResult:
+        props = {p: bool(self.verdicts[p][slot]) for p in self.properties}
+        witness = None
+        if self.pi_order is not None:
+            full = np.asarray(self.pi_order[slot])
+            order = full[full < n].astype(np.int32)
+            witness = ProperIntervalWitness(
+                proper_interval=props["proper_interval"],
+                order=order,
+                gap_vertex=int(self.pi_gap_vertex[slot]),
+            )
+        return RecognitionResult(
+            properties=props, n_sweeps=self.n_sweeps, witness=witness
+        )

@@ -1,0 +1,262 @@
+"""Bucket executables for multi-property recognition (DESIGN.md §13).
+
+Two builders with one contract — ``fn(payload, n_nodes) -> RecognitionBatch``
+over a dense ``(B, N, N)`` bool payload — compiled per ``(n_pad, batch)``
+bucket through the engine's ``CompileCache`` (kind ``"recognition:<props>"``):
+
+* :func:`make_recognition_kernel` — the device twin: ONE jitted program
+  runs the whole shared sweep plan batch-major (σ1 LexBFS feeding the PEO
+  verdict *and* seeding the LexBFS+ chain, MCS / LexDFS alongside), so a
+  multi-property request costs one dispatch regardless of how many
+  properties it answers.
+* :func:`make_recognition_host` — the numpy host twin: the per-step
+  compaction references, bit-identical orders and verdicts slot for slot.
+
+The ``interval`` property's asteroidal-triple scan runs host-side in both
+(:func:`at_free_numpy`) — it is a finalizer on chordal slots, exactly like
+the witness subsystem's host finalizers, and adds zero sweeps beyond σ1.
+
+Every executable ticks :data:`sweep_counter` by the shared plan length —
+the measured quantity behind the "σ1 reused" acceptance criterion (3 sweeps
+for ``chordal + proper_interval``, not 4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import INTERVAL_TRIPLE_CHUNK
+from repro.core.interval import (
+    lexbfs_plus_batched,
+    lexbfs_plus_numpy,
+    straight_enumeration_batched,
+    straight_enumeration_numpy,
+)
+from repro.core.lexbfs import lexbfs_batched, lexbfs_numpy_dense
+from repro.core.mcs import mcs_batched, mcs_numpy
+from repro.core.peo import peo_check, peo_check_numpy
+from repro.recognition.lexdfs import lexdfs_batched, lexdfs_numpy
+from repro.recognition.registry import normalize_properties, plan_sweeps
+from repro.recognition.result import RecognitionBatch
+
+
+class SweepCounter:
+    """Counts vertex-ordering sweeps executed by recognition executables
+    (mirror of ``repro.kernels.dispatch_counter``). Tests snapshot
+    ``count``, run an engine call, and assert the delta matches the
+    *shared* plan — the proof that σ1 is reused across properties."""
+
+    def __init__(self) -> None:
+        self.count = 0
+
+    def tick(self, k: int = 1) -> None:
+        self.count += k
+
+    def delta(self, since: int) -> int:
+        return self.count - since
+
+
+#: Process-wide sweep counter (tests may reset ``count`` directly).
+sweep_counter = SweepCounter()
+
+
+# ---------------------------------------------------------------------------
+# Host-side asteroidal-triple-free scan (Lekkerkerker–Boland finalizer).
+# ---------------------------------------------------------------------------
+def at_free_numpy(adj: np.ndarray) -> bool:
+    """True iff ``adj`` has no asteroidal triple.
+
+    An AT is a pairwise-nonadjacent triple {x, y, z} where each pair lies
+    in one connected component of G − N[the third]. Two passes:
+
+    1. component labels: for each z, min-vertex-id label propagation over
+       G − N[z] until fixpoint — ``comp[z, v]`` (−1 inside N[z]);
+    2. triple scan: with ``M[z, x, y] = nonadj(x, y) ∧ comp[z,x] =
+       comp[z,y] ≥ 0``, an AT exists iff ``M[z,x,y] ∧ M[x,y,z] ∧
+       M[y,x,z]`` somewhere. The scan is chunked over z in blocks of
+       :data:`~repro.configs.shapes.INTERVAL_TRIPLE_CHUNK` rows so peak
+       temporaries stay at chunk·N² bools instead of N³.
+
+    Isolated vertices (padding) are singleton components in every G − N[z]
+    and so never participate in a triple — the scan is padding-safe.
+    """
+    adj = np.asarray(adj, dtype=bool)
+    n = adj.shape[0]
+    if n < 6:  # the smallest AT graph is C6
+        return True
+    nb = adj | np.eye(n, dtype=bool)
+    comp = np.full((n, n), -1, dtype=np.int64)
+    ids = np.arange(n)
+    for z in range(n):
+        mask = ~nb[z]
+        label = np.where(mask, ids, n)
+        sub = adj & mask[:, None] & mask[None, :]
+        while True:
+            new = np.minimum(
+                label, np.where(sub, label[None, :], n).min(axis=1)
+            )
+            if np.array_equal(new, label):
+                break
+            label = new
+        comp[z] = np.where(mask, label, -1)
+    nonadj = ~nb
+    compz_all = comp.T  # compz_all[z', x] view as comp[:, z'] columns
+    for z0 in range(0, n, INTERVAL_TRIPLE_CHUNK):
+        zs = ids[z0:z0 + INTERVAL_TRIPLE_CHUNK]
+        cz = comp[zs]  # (c, n): comp[z, ·] for z in chunk
+        col = compz_all[zs]  # (c, n): comp[·, z] for z in chunk
+        a = nonadj[None] & (cz[:, :, None] == cz[:, None, :]) \
+            & (cz[:, :, None] >= 0)
+        b = nonadj[zs][:, None, :] & (comp[None] == col[:, :, None]) \
+            & (comp[None] >= 0)
+        c = nonadj[zs][:, :, None] & (comp.T[None] == col[:, None, :]) \
+            & (comp.T[None] >= 0)
+        if (a & b & c).any():
+            return False
+    return True
+
+
+def _interval_verdicts(
+    payload: np.ndarray, n_nodes: np.ndarray, chordal: np.ndarray
+) -> np.ndarray:
+    """interval = chordal ∧ AT-free, per slot (host finalizer)."""
+    out = np.zeros(len(chordal), dtype=bool)
+    for i, ok in enumerate(chordal):
+        if ok:
+            n = int(n_nodes[i])
+            out[i] = at_free_numpy(payload[i, :n, :n])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device twin: one jitted program for the whole shared sweep plan.
+# ---------------------------------------------------------------------------
+def make_recognition_kernel(properties):
+    """Build the device bucket executable for a property set.
+
+    Returns ``fn(payload, n_nodes) -> RecognitionBatch``; everything on
+    device runs inside one jit (σ1 + the property checks + any extra
+    sweeps), the interval AT scan finalizes on host.
+    """
+    props = normalize_properties(properties)
+    plan = plan_sweeps(props)
+    n_plus = plan.count("lexbfs_plus")
+    want_pi = "proper_interval" in props
+    want_interval = "interval" in props
+    want_mcs = "mcs_peo" in props
+    want_lexdfs = "lexdfs_order" in props
+
+    @jax.jit
+    def device(adj_batch):
+        adj_batch = adj_batch.astype(bool)
+        out = {}
+        order1, pos = lexbfs_batched(adj_batch, return_pos=True)
+        out["chordal"] = jax.vmap(peo_check)(adj_batch, order1)
+        if want_pi:
+            for _ in range(n_plus - 1):
+                _, pos = lexbfs_plus_batched(
+                    adj_batch, pos, return_pos=True)
+            s_last = lexbfs_plus_batched(adj_batch, pos)
+            viol, gap = straight_enumeration_batched(adj_batch, s_last)
+            out["pi_order"] = s_last
+            out["pi_violations"] = viol
+            out["pi_gap"] = gap
+        if want_mcs:
+            out["mcs_peo"] = jax.vmap(peo_check)(
+                adj_batch, mcs_batched(adj_batch))
+        if want_lexdfs:
+            out["lexdfs_order"] = jax.vmap(peo_check)(
+                adj_batch, lexdfs_batched(adj_batch))
+        return out
+
+    def fn(payload, n_nodes):
+        payload = np.ascontiguousarray(np.asarray(payload, dtype=bool))
+        out = {k: np.asarray(v) for k, v in device(payload).items()}
+        sweep_counter.tick(len(plan))
+        verdicts = {"chordal": out["chordal"]}
+        if want_pi:
+            verdicts["proper_interval"] = out["pi_violations"] == 0
+        if want_interval:
+            verdicts["interval"] = _interval_verdicts(
+                payload, n_nodes, out["chordal"])
+        if want_mcs:
+            verdicts["mcs_peo"] = out["mcs_peo"]
+        if want_lexdfs:
+            verdicts["lexdfs_order"] = out["lexdfs_order"]
+        return RecognitionBatch(
+            properties=props,
+            verdicts=verdicts,
+            n_sweeps=len(plan),
+            pi_order=out.get("pi_order"),
+            pi_violations=out.get("pi_violations"),
+            pi_gap_vertex=out.get("pi_gap"),
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Host twin: per-step-compaction numpy references, bit-identical.
+# ---------------------------------------------------------------------------
+def make_recognition_host(properties):
+    """Numpy host twin of :func:`make_recognition_kernel` — identical
+    contract, identical orders/verdicts slot for slot (sweeps run on the
+    full padded slot so padding tie-breaks match the device)."""
+    props = normalize_properties(properties)
+    plan = plan_sweeps(props)
+    n_plus = plan.count("lexbfs_plus")
+    want_pi = "proper_interval" in props
+    want_interval = "interval" in props
+    want_mcs = "mcs_peo" in props
+    want_lexdfs = "lexdfs_order" in props
+
+    def fn(payload, n_nodes):
+        payload = np.asarray(payload, dtype=bool)
+        b, n = payload.shape[0], payload.shape[1]
+        sweep_counter.tick(len(plan))
+        chordal = np.zeros(b, dtype=bool)
+        pi_order = np.zeros((b, n), dtype=np.int32) if want_pi else None
+        pi_viol = np.zeros(b, dtype=np.int32) if want_pi else None
+        pi_gap = np.full(b, -1, dtype=np.int32) if want_pi else None
+        mcs_ok = np.zeros(b, dtype=bool) if want_mcs else None
+        dfs_ok = np.zeros(b, dtype=bool) if want_lexdfs else None
+        for i in range(b):
+            adj = payload[i]
+            order = lexbfs_numpy_dense(adj)
+            chordal[i] = peo_check_numpy(adj, order)
+            if want_pi:
+                pos = np.empty(n, dtype=np.int64)
+                pos[order] = np.arange(n)
+                s = order
+                for _ in range(n_plus):
+                    s = lexbfs_plus_numpy(adj, pos)
+                    pos[s] = np.arange(n)
+                v, g = straight_enumeration_numpy(adj, s)
+                pi_order[i] = s
+                pi_viol[i] = v
+                pi_gap[i] = g
+            if want_mcs:
+                mcs_ok[i] = peo_check_numpy(adj, mcs_numpy(adj))
+            if want_lexdfs:
+                dfs_ok[i] = peo_check_numpy(adj, lexdfs_numpy(adj))
+        verdicts = {"chordal": chordal}
+        if want_pi:
+            verdicts["proper_interval"] = pi_viol == 0
+        if want_interval:
+            verdicts["interval"] = _interval_verdicts(
+                payload, n_nodes, chordal)
+        if want_mcs:
+            verdicts["mcs_peo"] = mcs_ok
+        if want_lexdfs:
+            verdicts["lexdfs_order"] = dfs_ok
+        return RecognitionBatch(
+            properties=props,
+            verdicts=verdicts,
+            n_sweeps=len(plan),
+            pi_order=pi_order,
+            pi_violations=pi_viol,
+            pi_gap_vertex=pi_gap,
+        )
+
+    return fn

@@ -55,7 +55,10 @@ from repro.witness.verify import (
     check_chordless_cycle,
     check_clique_tree,
     check_coloring,
+    check_neighborhood_gap,
     check_peo,
+    check_straight_enumeration,
+    verify_proper_interval,
     verify_witness,
 )
 
@@ -680,7 +683,10 @@ __all__ = [
     "check_chordless_cycle",
     "check_clique_tree",
     "check_coloring",
+    "check_neighborhood_gap",
     "check_peo",
+    "check_straight_enumeration",
+    "verify_proper_interval",
     "chordless_cycle_numpy",
     "clique_tree_numpy",
     "counterexample_device",

@@ -23,6 +23,14 @@ Contracts checked:
 * :func:`check_coloring` — proper, and uses exactly ``n_colors`` colors.
 * :func:`check_chordless_cycle` — an induced cycle of length >= 4:
   consecutive vertices adjacent, all others non-adjacent, no repeats.
+* :func:`check_straight_enumeration` / :func:`check_neighborhood_gap` /
+  :func:`verify_proper_interval` — the recognition subsystem's
+  proper-interval certificates (``repro.recognition``): an accepted graph
+  ships an order whose every closed neighborhood is consecutive (a
+  straight enumeration — existence is equivalent to proper-interval
+  membership, so the accept direction is unconditionally sound); a
+  rejected graph ships the 3-sweep order plus one vertex whose closed
+  neighborhood provably gaps in it.
 """
 from __future__ import annotations
 
@@ -183,6 +191,79 @@ def check_chordless_cycle(
             if adj[a, b]:
                 return f"chord {a}-{b} inside the cycle"
     return None
+
+
+def check_straight_enumeration(
+    adj: np.ndarray, order: np.ndarray
+) -> Optional[str]:
+    """None iff ``order`` is a straight enumeration of ``adj``.
+
+    A straight enumeration places every closed neighborhood N[v]
+    consecutively: with pos the inverse permutation, for every v the
+    positions of N[v] span exactly ``|N[v]|`` slots. Graphs admitting one
+    are exactly the proper interval graphs (Roberts), so a passing order
+    certifies membership regardless of how it was produced.
+    """
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    order = np.asarray(order)
+    if sorted(order.tolist()) != list(range(n)):
+        return f"order is not a permutation of 0..{n - 1}"
+    pos = [0] * n
+    for p, v in enumerate(order):
+        pos[int(v)] = p
+    for v in range(n):
+        ps = [pos[v]] + [pos[u] for u in range(n) if adj[v, u]]
+        if max(ps) - min(ps) + 1 != len(ps):
+            return (f"closed neighborhood of {v} gaps: {len(ps)} vertices "
+                    f"span positions {min(ps)}..{max(ps)}")
+    return None
+
+
+def check_neighborhood_gap(
+    adj: np.ndarray, order: np.ndarray, vertex: int
+) -> Optional[str]:
+    """None iff ``vertex``'s closed neighborhood gaps in ``order``.
+
+    The reject half of the proper-interval certificate: ``order`` is the
+    recognition pipeline's third LexBFS+ sweep and ``vertex`` the claimed
+    violation. The check confirms N[vertex] really is non-consecutive in
+    this order — i.e. the order is demonstrably not a straight
+    enumeration. (Non-membership of the *graph* then follows from the
+    3-sweep theorem: Corneil's sigma-3 is straight iff G is proper
+    interval. The gap is the checkable part; the theorem carries the rest,
+    exactly like LexBFS-order PEO rejections before cycle witnesses.)
+    """
+    adj = _as_adj(adj)
+    n = adj.shape[0]
+    order = np.asarray(order)
+    if sorted(order.tolist()) != list(range(n)):
+        return f"order is not a permutation of 0..{n - 1}"
+    if not (0 <= vertex < n):
+        return f"gap vertex {vertex} out of range 0..{n - 1}"
+    pos = [0] * n
+    for p, v in enumerate(order):
+        pos[int(v)] = p
+    ps = [pos[vertex]] + [pos[u] for u in range(n) if adj[vertex, u]]
+    if max(ps) - min(ps) + 1 == len(ps):
+        return (f"closed neighborhood of {vertex} is consecutive "
+                f"(positions {min(ps)}..{max(ps)}) — no gap to certify")
+    return None
+
+
+def verify_proper_interval(adj: np.ndarray, witness) -> Optional[str]:
+    """Check one ``repro.recognition.ProperIntervalWitness`` both ways.
+
+    Accept (``witness.proper_interval``): the shipped order must be a
+    straight enumeration. Reject: the shipped gap vertex must really gap
+    in the shipped order.
+    """
+    adj = _as_adj(adj)
+    if witness.proper_interval:
+        err = check_straight_enumeration(adj, witness.order)
+        return f"straight_enumeration: {err}" if err else None
+    err = check_neighborhood_gap(adj, witness.order, int(witness.gap_vertex))
+    return f"neighborhood_gap: {err}" if err else None
 
 
 def verify_witness(adj: np.ndarray, witness) -> Optional[str]:

@@ -24,7 +24,11 @@ from repro.engine import (
     gather,
 )
 from repro.graphs.structure import Graph
-from repro.witness import check_chordless_cycle, verify_witness
+from repro.witness import (
+    check_chordless_cycle,
+    verify_proper_interval,
+    verify_witness,
+)
 
 CORPUS_DIR = pathlib.Path(__file__).parent / "corpus"
 CASES = sorted(CORPUS_DIR.glob("*.json"))
@@ -147,3 +151,64 @@ def test_corpus_witnesses_through_async_service(corpus, specs):
         assert r.witness is not None
         assert r.verdict == spec["chordal"]
         assert_witness_matches_fixture(g, spec, r.witness)
+
+
+# ---------------------------------------------------------------------------
+# Recognition surface: expected proper_interval / interval labels per
+# properties-capable backend, every proper-interval answer verified in both
+# directions by the independent checker (repro.witness.verify).
+# ---------------------------------------------------------------------------
+RECOGNITION_BACKENDS = ["numpy_ref", "jax_fast"]
+
+
+@pytest.mark.parametrize("backend", RECOGNITION_BACKENDS)
+def test_corpus_recognition_per_backend(backend, corpus, specs, engines):
+    graphs = [g for g, _, _ in corpus]
+    result = engines(backend).run(
+        graphs, properties=["chordal", "proper_interval", "interval"])
+    for (g, _, _), spec, rec in zip(corpus, specs, result.recognitions):
+        name = spec["name"]
+        assert rec.properties["chordal"] == spec["chordal"], name
+        assert rec.properties["proper_interval"] == \
+            spec["proper_interval"], name
+        assert rec.properties["interval"] == spec["interval"], name
+        # both accept and reject directions must certify
+        assert rec.witness is not None, name
+        assert rec.witness.proper_interval == spec["proper_interval"], name
+        n = g.n_nodes
+        err = verify_proper_interval(g.adj[:n, :n], rec.witness)
+        assert err is None, f"{backend}/{name}: {err}"
+    for key in ("chordal", "proper_interval", "interval"):
+        np.testing.assert_array_equal(
+            result.properties[key],
+            np.array([s[key] for s in specs]), err_msg=key)
+    # the chordal plane is the plain verdict plane
+    np.testing.assert_array_equal(
+        result.verdicts, engines(backend).run(graphs).verdicts)
+
+
+def test_corpus_recognition_through_async_service(corpus, specs):
+    graphs = [g for g, _, _ in corpus]
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=1.0)
+    with AsyncChordalityEngine(config=cfg) as svc:      # auto routing
+        resps = gather(svc.submit_many(
+            graphs, properties=["proper_interval", "interval"]),
+            timeout=300)
+    for (g, _, _), spec, r in zip(corpus, specs, resps):
+        name = spec["name"]
+        assert r.properties == {
+            "chordal": spec["chordal"],
+            "proper_interval": spec["proper_interval"],
+            "interval": spec["interval"]}, name
+        n = g.n_nodes
+        err = verify_proper_interval(
+            g.adj[:n, :n], r.recognition.witness)
+        assert err is None, f"{name}: {err}"
+
+
+def test_corpus_single_graph_recognize(corpus, specs, engines):
+    eng = engines("jax_fast")
+    for (g, _, _), spec in zip(corpus, specs):
+        rec = eng.recognize(g)
+        for key in ("chordal", "proper_interval", "interval"):
+            assert rec.properties[key] == spec[key], spec["name"]

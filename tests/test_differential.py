@@ -16,6 +16,8 @@ Heavier sweeps (hypothesis over the two slow specialist backends) carry
 the ``slow`` marker; the fixed-zoo pass over all six backends stays tier-1.
 """
 import dataclasses
+import json
+import pathlib
 import threading
 
 import numpy as np
@@ -24,6 +26,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core import generators as G
+from repro.core import is_chordal_mcs, mcs_numpy, peo_check_numpy
 from repro.configs.service import ServiceConfig
 from repro.engine import (
     AsyncChordalityEngine,
@@ -239,6 +242,70 @@ def test_witness_verdicts_equal_plain_verdicts_on_zoo(zoo_oracle):
             n = g.n_nodes
             assert verify_witness(
                 g.with_dense().adj[:n, :n], w) is None
+
+
+# ---------------------------------------------------------------------------
+# Second independent oracle: MCS + PEO test (Theorem 5.2 — G chordal ⇔ any
+# MCS order is a PEO). MCS shares no partition bookkeeping with LexBFS, so
+# the two pipelines agreeing on every draw cross-checks both. The device
+# path (``is_chordal_mcs``) and the pure-host twin (``mcs_numpy`` +
+# ``peo_check_numpy``) must both match the LexBFS-based numpy_ref oracle.
+# ---------------------------------------------------------------------------
+def _mcs_verdicts(g: Graph):
+    """(device, host) chordality verdicts via the MCS pipeline."""
+    n = g.n_nodes
+    if n == 0:          # 0-lane argmax is undefined; empty graph: chordal
+        return True, True
+    adj = g.with_dense().adj[:n, :n]
+    device = bool(is_chordal_mcs(adj))
+    host = bool(peo_check_numpy(adj, mcs_numpy(adj)))
+    return device, host
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, MAX_N), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_mcs_oracle_agrees_on_er_sweep(n, p_milli, seed):
+    g = er_graph(n, p_milli, seed)
+    want_v, _ = _oracle(g)
+    device, host = _mcs_verdicts(g)
+    assert device == want_v, f"MCS device vs LexBFS oracle (n={n})"
+    assert host == want_v, f"MCS host vs LexBFS oracle (n={n})"
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, MAX_N), k=st.integers(1, 5),
+       seed=st.integers(0, 10_000))
+def test_mcs_oracle_accepts_ktrees(n, k, seed):
+    device, host = _mcs_verdicts(ktree_graph(n, k, seed))
+    assert device and host
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(4, MAX_N), n_chords=st.integers(0, 4),
+       seed=st.integers(0, 10_000))
+def test_mcs_oracle_agrees_on_chorded_cycles(n, n_chords, seed):
+    g = cycle_with_chords(n, n_chords, seed)
+    want_v, _ = _oracle(g)
+    device, host = _mcs_verdicts(g)
+    assert device == want_v and host == want_v
+
+
+def test_mcs_oracle_agrees_on_family_zoo_and_corpus(zoo_oracle):
+    zoo, want = zoo_oracle
+    for g, want_v in zip(zoo, want):
+        device, host = _mcs_verdicts(g)
+        assert device == bool(want_v) and host == bool(want_v)
+    corpus_dir = pathlib.Path(__file__).parent / "corpus"
+    for path in sorted(corpus_dir.glob("*.json")):
+        spec = json.loads(path.read_text())
+        n = spec["n"]
+        adj = np.zeros((n, n), dtype=bool)
+        for u, v in spec["edges"]:
+            adj[u, v] = adj[v, u] = True
+        device, host = _mcs_verdicts(Graph(n_nodes=n, adj=adj))
+        assert device == spec["chordal"], f"MCS device on {spec['name']}"
+        assert host == spec["chordal"], f"MCS host on {spec['name']}"
 
 
 # ---------------------------------------------------------------------------

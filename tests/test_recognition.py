@@ -1,0 +1,386 @@
+"""repro.recognition — registry, shared sweeps, engine/service surface.
+
+What this file pins (DESIGN.md §13):
+
+* registry invariants — canonical ordering, validation, chordal always
+  included, shared sweep plans strictly shorter than standalone sums;
+* **measured** sweep sharing — the acceptance criterion is counted, not
+  inferred: ``sweep_counter`` ticks once per sweep actually executed, and
+  a chordal+proper_interval request must run 3, not 4;
+* verdict correctness against independent oracles (brute-force straight
+  enumeration search for proper interval, the LexBFS engine for chordal)
+  on hypothesis draws, both device and host twins;
+* proper-interval witnesses verify in both directions through
+  ``repro.witness.verify_proper_interval``;
+* the engine/service/router plumbing: ``run(properties=...)``,
+  ``recognize``, ``submit(properties=...)``, recognition-mode routing,
+  compile-cache kinds, and capability fallbacks.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.service import ServiceConfig
+from repro.core import generators as G
+from repro.core.interval import is_proper_interval_bruteforce
+from repro.engine import (
+    AsyncChordalityEngine,
+    ChordalityEngine,
+    DEFAULT_RECOGNITION_COST_MODEL,
+    Router,
+    gather,
+)
+from repro.graphs.structure import Graph
+from repro.recognition import (
+    PROPERTY_REGISTRY,
+    normalize_properties,
+    plan_sweeps,
+    property_names,
+    property_spec,
+    standalone_sweep_count,
+    sweep_counter,
+)
+from repro.witness import verify_proper_interval
+
+_ENGINES = {}
+
+
+def _engine(backend: str) -> ChordalityEngine:
+    if backend not in _ENGINES:
+        _ENGINES[backend] = ChordalityEngine(backend=backend, max_batch=8)
+    return _ENGINES[backend]
+
+
+def _claw() -> Graph:
+    """K_{1,3}: chordal and interval, but not proper interval."""
+    adj = np.zeros((4, 4), dtype=bool)
+    for leaf in (1, 2, 3):
+        adj[0, leaf] = adj[leaf, 0] = True
+    return Graph(n_nodes=4, adj=adj)
+
+
+# ---------------------------------------------------------------------------
+# Registry invariants.
+# ---------------------------------------------------------------------------
+def test_registry_contains_the_five_properties():
+    assert property_names() == (
+        "chordal", "proper_interval", "interval", "mcs_peo", "lexdfs_order")
+    for name in property_names():
+        spec = property_spec(name)
+        assert spec.name == name
+        assert spec.sweeps, name
+
+
+def test_unknown_property_raises():
+    with pytest.raises(ValueError, match="unknown property"):
+        property_spec("bogus")
+    with pytest.raises(ValueError, match="unknown property"):
+        normalize_properties(["chordal", "bogus"])
+
+
+def test_normalize_dedupes_orders_and_adds_chordal():
+    assert normalize_properties(["proper_interval"]) == \
+        ("chordal", "proper_interval")
+    assert normalize_properties(
+        ["lexdfs_order", "proper_interval", "lexdfs_order"]) == \
+        ("chordal", "proper_interval", "lexdfs_order")
+    assert normalize_properties([]) == ("chordal",)
+
+
+def test_plan_shares_the_lexbfs_chain_prefix():
+    # chordal alone: 1 sweep; +proper_interval: 3 (sigma-1 shared), not 4.
+    assert plan_sweeps(("chordal",)) == ("lexbfs",)
+    assert plan_sweeps(("chordal", "proper_interval")) == \
+        ("lexbfs", "lexbfs_plus", "lexbfs_plus")
+    assert standalone_sweep_count(("chordal", "proper_interval")) == 4
+    # interval rides the chordal sweep + a host AT pass: nothing extra.
+    assert plan_sweeps(("chordal", "interval")) == ("lexbfs",)
+    allp = normalize_properties(property_names())
+    assert len(plan_sweeps(allp)) == 5
+    assert standalone_sweep_count(allp) == 7
+
+
+def test_every_registry_subset_plan_is_minimal():
+    import itertools
+
+    for r in range(1, len(property_names()) + 1):
+        for subset in itertools.combinations(property_names(), r):
+            props = normalize_properties(subset)
+            plan = plan_sweeps(props)
+            assert len(plan) <= standalone_sweep_count(props)
+            # the plan must cover the longest requested lexbfs chain
+            want_chain = max(
+                (len(property_spec(p).sweeps)
+                 for p in props if property_spec(p).sweeps[0] == "lexbfs"),
+                default=0)
+            chain = 0
+            for s in plan:
+                if s in ("lexbfs", "lexbfs_plus"):
+                    chain += 1
+                else:
+                    break
+            assert chain == want_chain, (props, plan)
+
+
+# ---------------------------------------------------------------------------
+# Measured sweep sharing — the PR's acceptance quantity.
+# ---------------------------------------------------------------------------
+def test_sweep_counter_measures_sharing():
+    graphs = [G.gnp(10, 0.3, seed=s) for s in range(5)]
+    eng = ChordalityEngine(backend="jax_fast", max_batch=8)
+    c0 = sweep_counter.count
+    eng.run(graphs, properties=["chordal", "proper_interval"])
+    shared = sweep_counter.count - c0
+    assert shared == 3, f"chordal+PI must run 3 sweeps, ran {shared}"
+    c0 = sweep_counter.count
+    eng.run(graphs, properties=property_names())
+    assert sweep_counter.count - c0 == 5   # vs 7 standalone
+    assert standalone_sweep_count(
+        normalize_properties(property_names())) == 7
+
+
+# ---------------------------------------------------------------------------
+# Verdicts vs independent oracles (hypothesis, device + host twins).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["jax_fast", "numpy_ref"])
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_proper_interval_matches_bruteforce(backend, n, p_milli, seed):
+    g = G.gnp(n, p_milli / 1000.0, seed=seed)
+    adj = g.with_dense().adj[:n, :n]
+    want = is_proper_interval_bruteforce(adj)
+    res = _engine(backend).run([g], properties=["proper_interval"])
+    assert bool(res.properties["proper_interval"][0]) == want
+    err = verify_proper_interval(adj, res.recognitions[0].witness)
+    assert err is None, f"{backend} (n={n}): {err}"
+
+
+@pytest.mark.parametrize("backend", ["jax_fast", "numpy_ref"])
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 40), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_all_properties_consistent_with_chordal_oracle(
+        backend, n, p_milli, seed):
+    g = G.gnp(n, p_milli / 1000.0, seed=seed)
+    want_chordal = bool(_engine("numpy_ref").run([g]).verdicts[0])
+    res = _engine(backend).run([g], properties=property_names())
+    props = res.recognitions[0].properties
+    assert props["chordal"] == want_chordal
+    # Theorem 5.2 / Corneil–Krueger: on chordal inputs the MCS and LexDFS
+    # orders are PEOs; on non-chordal inputs no order is.
+    assert props["mcs_peo"] == want_chordal
+    assert props["lexdfs_order"] == want_chordal
+    # class inclusions: proper interval ⊆ interval ⊆ chordal
+    if props["proper_interval"]:
+        assert props["interval"]
+    if props["interval"]:
+        assert props["chordal"]
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 30), p_milli=st.integers(0, 900),
+       seed=st.integers(0, 10_000))
+def test_device_and_host_twins_agree(n, p_milli, seed):
+    g = G.gnp(n, p_milli / 1000.0, seed=seed)
+    dev = _engine("jax_fast").run([g], properties=property_names())
+    host = _engine("numpy_ref").run([g], properties=property_names())
+    assert dev.recognitions[0].properties == host.recognitions[0].properties
+    np.testing.assert_array_equal(
+        dev.recognitions[0].witness.order,
+        host.recognitions[0].witness.order)
+    assert dev.recognitions[0].witness.gap_vertex == \
+        host.recognitions[0].witness.gap_vertex
+
+
+def test_interval_proper_interval_separating_cases():
+    # claw: interval but not proper interval; C4: neither; path: both;
+    # C6: chordal=False so everything false.
+    res = _engine("jax_fast").run(
+        [_claw(), G.cycle(4), G.path(6), G.cycle(6)],
+        properties=["proper_interval", "interval"])
+    np.testing.assert_array_equal(
+        res.properties["proper_interval"], [False, False, True, False])
+    np.testing.assert_array_equal(
+        res.properties["interval"], [True, False, True, False])
+
+
+# ---------------------------------------------------------------------------
+# Engine surface.
+# ---------------------------------------------------------------------------
+def test_run_properties_and_witness_are_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        _engine("jax_fast").run(
+            [G.path(4)], witness=True, properties=["chordal"])
+
+
+def test_recognition_cache_kinds_are_per_property_set():
+    eng = ChordalityEngine(backend="jax_fast", max_batch=8)
+    eng.run([G.path(4)], properties=["chordal"])
+    eng.run([G.path(4)], properties=["proper_interval"])
+    eng.run([G.path(4)], properties=["proper_interval", "chordal"])  # hit
+    kinds = {k[1] for k in eng.cache._fns}
+    assert "recognition:chordal" in kinds
+    assert "recognition:chordal,proper_interval" in kinds
+    assert len([k for k in kinds if k.startswith("recognition:")]) == 2
+
+
+def test_recognize_defaults_to_full_registry():
+    rec = _engine("jax_fast").recognize(G.path(5))
+    assert set(rec.properties) == set(property_names())
+    assert rec.n_sweeps == 5
+    assert rec.properties["proper_interval"]
+    assert verify_proper_interval(
+        G.path(5).with_dense().adj, rec.witness) is None
+
+
+def test_recognize_accepts_raw_adjacency_and_subset():
+    adj = G.cycle(5).with_dense().adj
+    rec = _engine("auto").recognize(adj, properties=["proper_interval"])
+    assert rec.properties == {"chordal": False, "proper_interval": False}
+    assert rec.n_sweeps == 3
+    assert verify_proper_interval(adj, rec.witness) is None
+
+
+def test_properties_fallback_on_non_capable_backend():
+    # sharded has no recognition executables; the unit must fall back.
+    eng = ChordalityEngine(backend="sharded", max_batch=4)
+    res = eng.run([G.path(4), G.cycle(4)], properties=["proper_interval"])
+    np.testing.assert_array_equal(
+        res.properties["proper_interval"], [True, False])
+
+
+def test_recognition_result_n_sweeps_reports_the_shared_plan():
+    res = _engine("jax_fast").run(
+        [G.path(4)], properties=["chordal", "proper_interval"])
+    assert res.recognitions[0].n_sweeps == 3
+
+
+# ---------------------------------------------------------------------------
+# Witness content, both directions.
+# ---------------------------------------------------------------------------
+def test_accept_witness_is_a_straight_enumeration():
+    rec = _engine("jax_fast").recognize(
+        G.path(7), properties=["proper_interval"])
+    assert rec.witness.proper_interval
+    assert rec.witness.gap_vertex == -1      # accept convention
+    assert sorted(rec.witness.order.tolist()) == list(range(7))
+
+
+def test_reject_witness_names_a_gapped_vertex():
+    adj = _claw().adj                         # claw: chordal, not PI
+    rec = _engine("jax_fast").recognize(adj, properties=["proper_interval"])
+    assert not rec.witness.proper_interval
+    v = rec.witness.gap_vertex
+    assert 0 <= v < 4
+    # the claimed gap is real: tampering the vertex must break the check
+    assert verify_proper_interval(adj, rec.witness) is None
+
+
+def test_checker_rejects_tampered_witnesses():
+    from repro.recognition import ProperIntervalWitness
+
+    adj = G.path(5).with_dense().adj
+    good = _engine("jax_fast").recognize(
+        adj, properties=["proper_interval"]).witness
+    # claim a reject with a vertex that does not gap
+    bad = ProperIntervalWitness(
+        proper_interval=False, order=good.order, gap_vertex=2)
+    assert verify_proper_interval(adj, bad) is not None
+    # claim an accept with a non-straight order (C4 has none)
+    c4 = G.cycle(4).with_dense().adj
+    lie = ProperIntervalWitness(
+        proper_interval=True,
+        order=np.arange(4, dtype=np.int32), gap_vertex=-1)
+    assert verify_proper_interval(c4, lie) is not None
+
+
+# ---------------------------------------------------------------------------
+# Router: recognition mode.
+# ---------------------------------------------------------------------------
+def test_recognition_mode_requires_properties_capability():
+    r = Router()
+    for n_pad in (16, 64, 256):
+        name = r.choose(n_pad, 0.2, batch=8, mode="recognition")
+        assert name in ("jax_fast", "numpy_ref"), name
+
+
+def test_recognition_cost_model_is_separate_and_overridable():
+    assert set(DEFAULT_RECOGNITION_COST_MODEL) >= {"jax_fast", "numpy_ref"}
+    r = Router()
+    est_rec = r.estimate_us_per_graph(
+        "jax_fast", 64, 0.2, 8, mode="recognition")
+    est_verdict = r.estimate_us_per_graph("jax_fast", 64, 0.2, 8)
+    assert est_rec > est_verdict    # multi-sweep work costs more
+
+
+def test_auto_plan_prices_recognition_mode():
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    graphs = [G.gnp(20, 0.3, seed=s) for s in range(4)]
+    plan = eng.plan(graphs, properties=["proper_interval"])
+    for unit in plan.units:
+        assert unit.backend in ("jax_fast", "numpy_ref")
+    res = eng.run(graphs, properties=["proper_interval"])
+    assert set(res.stats.backend_histogram) <= {"jax_fast", "numpy_ref"}
+
+
+# ---------------------------------------------------------------------------
+# Async service.
+# ---------------------------------------------------------------------------
+def test_service_recognition_responses_and_upgrade_counter():
+    graphs = [G.path(5), G.cycle(5), _claw(), G.clique(6)]
+    cfg = ServiceConfig(max_batch=4, max_wait_ms=1.0)
+    with AsyncChordalityEngine(config=cfg, backend="jax_fast") as svc:
+        futs = svc.submit_many(graphs, properties=["proper_interval"])
+        plain = svc.submit(G.path(3))
+        resps = gather(futs, timeout=300)
+        assert plain.result(timeout=300).properties is None
+        assert svc.stats.recognition_upgraded >= 1
+    want_pi = [True, False, False, True]
+    for g, r, pi in zip(graphs, resps, want_pi):
+        assert set(r.properties) == {"chordal", "proper_interval"}
+        assert r.properties["proper_interval"] == pi
+        n = g.n_nodes
+        assert verify_proper_interval(
+            g.with_dense().adj[:n, :n], r.recognition.witness) is None
+
+
+def test_service_unit_answers_union_but_filters_responses():
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=20.0)
+    with AsyncChordalityEngine(config=cfg, backend="jax_fast") as svc:
+        f_a = svc.submit(G.path(5), properties=["interval"])
+        f_b = svc.submit(G.path(5), properties=["mcs_peo"])
+        svc.flush()
+        ra, rb = f_a.result(), f_b.result()
+    assert set(ra.properties) == {"chordal", "interval"}
+    assert set(rb.properties) == {"chordal", "mcs_peo"}
+    assert ra.recognition.witness is None     # PI not requested
+
+
+def test_service_rejects_witness_plus_properties():
+    with AsyncChordalityEngine(backend="jax_fast") as svc:
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            svc.submit(G.path(4), want_witness=True, properties=["chordal"])
+
+
+def test_service_mixed_witness_and_recognition_unit():
+    # one request wants a witness, another wants recognition — both ride
+    # the same drained unit and both resolve correctly.
+    cfg = ServiceConfig(max_batch=8, max_wait_ms=20.0)
+    with AsyncChordalityEngine(config=cfg, backend="jax_fast") as svc:
+        f_w = svc.submit(G.cycle(5), want_witness=True)
+        f_p = svc.submit(G.cycle(5), properties=["proper_interval"])
+        svc.flush()
+        rw, rp = f_w.result(), f_p.result()
+    assert rw.witness is not None and not rw.witness.chordal
+    assert rp.properties["proper_interval"] is False
+    assert rp.witness is None
+
+
+# ---------------------------------------------------------------------------
+# Registry docs stay in sync with the registry.
+# ---------------------------------------------------------------------------
+def test_registry_specs_have_docs():
+    for spec in PROPERTY_REGISTRY.values():
+        assert spec.doc

@@ -1,0 +1,147 @@
+"""Differential suite for the PR 7 batch-major recognition sweeps.
+
+The same anchor property test_lexbfs_fused.py pins for LexBFS, extended to
+every sweep family the recognition registry dispatches: the batch-major
+device kernels (``lexbfs_plus_batched``, ``mcs_batched``,
+``lexdfs_batched``, ``straight_enumeration_batched``), the single-graph
+scan forms, and the numpy host twins all produce **bit-identical** orders
+(and identical violation counts / gap vertices) — across (n_pad, batch)
+buckets, padded slots, and degenerate graphs (n < 16, zero edges,
+batch=1). Sweep *chaining* is covered too: Corneil's sigma-1/2/3 chain run
+device-side via ``return_pos`` must match the host chain step for step.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import generators as G
+from repro.core.lexbfs import lexbfs_batched, lexbfs_numpy_dense
+from repro.core.interval import (
+    lexbfs_plus,
+    lexbfs_plus_batched,
+    lexbfs_plus_numpy,
+    straight_enumeration_batched,
+    straight_enumeration_numpy,
+)
+from repro.core.mcs import mcs, mcs_batched, mcs_numpy
+from repro.core.peo import peo_check_numpy
+from repro.recognition import lexdfs, lexdfs_batched, lexdfs_numpy
+
+
+def _pad_batch(adjs, n_pad, batch):
+    """Pad a list of (n_i, n_i) adjacencies into a (batch, n_pad, n_pad)
+    work unit; trailing slots stay empty (all-padding)."""
+    out = np.zeros((batch, n_pad, n_pad), dtype=bool)
+    for i, a in enumerate(adjs):
+        n = a.shape[0]
+        out[i, :n, :n] = a
+    return out
+
+
+def _host_pos(order):
+    pos = np.empty_like(order)
+    pos[order] = np.arange(order.size, dtype=order.dtype)
+    return pos
+
+
+def _assert_sweeps_agree(unit):
+    """The PR 7 acceptance property on one (B, n_pad, n_pad) work unit."""
+    ju = jnp.asarray(unit)
+    b = unit.shape[0]
+
+    # sigma-1 positions seed the LexBFS+ chain on both paths.
+    o1_dev, pos1_dev = lexbfs_batched(ju, return_pos=True)
+    o2_dev, pos2_dev = lexbfs_plus_batched(
+        ju, jnp.asarray(pos1_dev), return_pos=True)
+    o3_dev = lexbfs_plus_batched(ju, jnp.asarray(pos2_dev))
+    viol_dev, gap_dev = straight_enumeration_batched(ju, o3_dev)
+    mcs_dev = mcs_batched(ju)
+    dfs_dev = lexdfs_batched(ju)
+
+    for i in range(b):
+        adj = unit[i]
+        o1 = lexbfs_numpy_dense(adj)
+        np.testing.assert_array_equal(np.asarray(o1_dev)[i], o1)
+        o2 = lexbfs_plus_numpy(adj, _host_pos(o1))
+        np.testing.assert_array_equal(np.asarray(o2_dev)[i], o2)
+        # batched form vs the per-graph per-step-compaction scan
+        np.testing.assert_array_equal(
+            np.asarray(lexbfs_plus(jnp.asarray(adj), jnp.asarray(o1))), o2)
+        o3 = lexbfs_plus_numpy(adj, _host_pos(o2))
+        np.testing.assert_array_equal(np.asarray(o3_dev)[i], o3)
+        viol, gap = straight_enumeration_numpy(adj, o3)
+        assert int(np.asarray(viol_dev)[i]) == viol
+        assert int(np.asarray(gap_dev)[i]) == gap
+        om = mcs_numpy(adj)
+        np.testing.assert_array_equal(np.asarray(mcs_dev)[i], om)
+        np.testing.assert_array_equal(np.asarray(mcs(jnp.asarray(adj))), om)
+        od = lexdfs_numpy(adj)
+        np.testing.assert_array_equal(np.asarray(dfs_dev)[i], od)
+        np.testing.assert_array_equal(
+            np.asarray(lexdfs(jnp.asarray(adj))), od)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(2, 48),
+    p=st.floats(0.0, 0.95),
+    seed=st.integers(0, 10_000),
+    batch=st.integers(1, 6),
+)
+def test_property_device_host_bit_identical(n, p, seed, batch):
+    adjs = [G.gnp(n, p, seed=seed + j).with_dense().adj
+            for j in range(batch)]
+    n_pad = max(16, 1 << (n - 1).bit_length())
+    _assert_sweeps_agree(_pad_batch(adjs, n_pad, batch))
+
+
+@pytest.mark.parametrize("n_pad,batch", [
+    (16, 1), (16, 8), (32, 4), (64, 2),
+])
+def test_bucket_shape_sweep(n_pad, batch):
+    rng = np.random.default_rng(n_pad * 131 + batch)
+    adjs = []
+    for j in range(max(batch - 1, 1)):      # leave one all-padding slot
+        n = int(rng.integers(2, n_pad + 1))
+        adjs.append(G.gnp(n, float(rng.random()),
+                          seed=j + n_pad).with_dense().adj)
+    _assert_sweeps_agree(_pad_batch(adjs, n_pad, batch))
+
+
+def test_degenerate_shapes():
+    # n < 16 padded into the 16-bucket, zero-edge graphs, batch=1, and a
+    # batch whose every slot is empty padding.
+    tiny = [G.path(3).with_dense().adj, np.zeros((1, 1), dtype=bool),
+            np.zeros((7, 7), dtype=bool)]
+    _assert_sweeps_agree(_pad_batch(tiny, 16, 4))
+    _assert_sweeps_agree(_pad_batch([G.clique(5).with_dense().adj], 16, 1))
+    _assert_sweeps_agree(np.zeros((3, 16, 16), dtype=bool))
+
+
+def test_chained_pos_matches_recomputed_pos():
+    # return_pos chaining (no host round-trip) must equal positions
+    # recomputed from the returned orders.
+    unit = _pad_batch(
+        [G.gnp(12, 0.4, seed=s).with_dense().adj for s in range(3)], 16, 4)
+    ju = jnp.asarray(unit)
+    _, pos1 = lexbfs_batched(ju, return_pos=True)
+    o2, pos2 = lexbfs_plus_batched(ju, jnp.asarray(pos1), return_pos=True)
+    for i in range(4):
+        np.testing.assert_array_equal(
+            np.asarray(pos2)[i], _host_pos(np.asarray(o2)[i]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(2, 40), k=st.integers(1, 4), seed=st.integers(0, 9999))
+def test_lexdfs_orders_of_chordal_graphs_are_peos(n, k, seed):
+    # LexDFS is an MNS, so on a chordal graph every LexDFS order is a PEO
+    # (Corneil–Krueger) — the registry's third independent chordality
+    # oracle rests on exactly this.
+    adj = G.k_tree(n, k=min(k, n - 1), seed=seed).with_dense().adj
+    assert peo_check_numpy(adj, lexdfs_numpy(adj))
+
+
+def test_lexdfs_rejects_c4():
+    adj = G.cycle(4).with_dense().adj
+    assert not peo_check_numpy(adj, lexdfs_numpy(adj))

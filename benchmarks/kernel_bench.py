@@ -681,3 +681,198 @@ def bench_lexbfs(n=2048, repeats=3) -> List[Dict]:
             "derived": f"{t2 * 1e3 / n:.2f}us/iter",
         })
     return rows
+
+
+def bench_saturation(
+    n_small=24, n_large=96, requests=768, max_batch=16,
+    waits_ms=(0.0, 2.0, 8.0), offered_gps=(1000, 4000, 0), repeats=3,
+    burst_repeats=49,
+):
+    """Saturation sweep under bimodal-n traffic: static waits vs autotuned.
+
+    The ISSUE 8 acceptance table: a bimodal open-loop stream (3 of every
+    4 requests are small sparse graphs, the rest large — two n_pad
+    buckets with very different fill rates) is offered at ascending
+    rates, ending back-to-back (the saturation pass). For each serving
+    config we record the achieved-throughput curve; the **knee** is the
+    best achieved graphs/s across the sweep, and ``p95_at_knee_ms`` the
+    queue-delay p95 of that pass.
+
+    Configs: one static service per wait in ``waits_ms``, plus
+    ``autotuned``, whose per-bucket AIMD controller is left warm across
+    the sweep — the closed control loops are exactly what is being
+    measured. The controller has to *find* the best static behavior at
+    every rate without being told which: climb the window while units
+    run underfilled (at the knee, full units are what wins — the short
+    statics drain partial units into the submit stagger and pay the
+    dispatch overhead), hold once occupancy is bought, and collapse
+    only when queue delay actually threatens the configured SLO
+    (``delay_budget_ms``). A static wait is one point on that curve;
+    w0's paced capacity collapses ~3x from partial-unit dispatch
+    overhead while long windows are wrong for latency at light load.
+
+    Measurement is interleaved: all services are built and warmed up
+    front, then each (rate, repeat) pass visits every config, cycling
+    through all permutations of the visit order across repeats.
+    Sequential per-config sweeps bias whichever config runs last with
+    accumulated process age (GC pressure, allocator state, thermal
+    drift) — on this workload's tens-of-ms walls that bias is larger
+    than the effect under test — and mere *rotation* is not enough:
+    rotating a cycle preserves adjacency, so each config would inherit
+    its fixed predecessor's leftover state every single round. A
+    ``gc.collect()`` fence before each timed pass drops the
+    predecessor's garbage (and makes mid-pass gen2 pauses — the heavy
+    right tail — rarer and uniform). Each (config, rate) then reports
+    its **median** pass (``repeats`` paced passes, ``burst_repeats``
+    for the cheap saturation burst): on a shared box, best-of rewards
+    whichever config drew the luckiest scheduler tail — and taking
+    "best static" as a max over several configs would hand the statics
+    that lottery multiple times over.
+
+    Returns ``(rows, artifact)``; the artifact (``BENCH_saturation.json``)
+    carries the per-config curves, knees, and the
+    ``autotuned_vs_static_best`` ratios the perf gate checks
+    (knee_ratio >= 1 with a lower p95 is the tentpole's claim).
+    """
+    import gc as _gc
+    import itertools as _itertools
+    import time as _time
+
+    from repro.configs.service import AutotuneConfig, ServiceConfig
+    from repro.engine import AsyncChordalityEngine, ServiceStats, gather
+
+    small = _sparse_stream(n_small, 4.0, requests, seed0=0)
+    large = _sparse_stream(n_large, 6.0, requests, seed0=10_000)
+    graphs = [large[i] if i % 4 == 3 else small[i]
+              for i in range(requests)]
+
+    configs = {}
+    for wait in waits_ms:
+        configs[f"static_w{wait:g}"] = ServiceConfig(
+            max_batch=max_batch, max_wait_ms=wait,
+            max_queue=max(1024, 4 * requests))
+    # Refit triggers off: live samples here are single-backend (the
+    # router sends this homogeneous traffic one way), so an online refit
+    # would re-fit that backend alone against stale priors for the rest —
+    # a covariate-shift artifact of the synthetic stream, not the
+    # admission-wait loop this sweep measures. The refit loop has its own
+    # degenerate-sample guards and tests (tests/test_router.py,
+    # tests/test_autotune.py). The delay budget is this traffic's SLO:
+    # the saturation burst's queue-delay p95 (~50 ms — backlog depth ×
+    # execution rate) is execution-bound, irreducible by any admission
+    # wait, so a budget below it would read the backlog as congestion
+    # and collapse the window for nothing, shedding occupancy exactly
+    # when full units matter most. 150 ms sits above the knee's
+    # intrinsic delay; the collapse path itself is pinned by the
+    # controller unit tests (step-change convergence). The wait ceiling
+    # deliberately exceeds the static menu: the controller climbs until
+    # units actually fill, and covering the submit stagger of a deep
+    # burst takes a longer window than any static in the sweep chose.
+    configs["autotuned"] = ServiceConfig(
+        max_batch=max_batch, max_queue=max(1024, 4 * requests),
+        autotune=AutotuneConfig(wait_min_ms=0.0, wait_max_ms=12.0,
+                                delay_budget_ms=150.0, interval_units=2,
+                                refit_min_samples=10 ** 6,
+                                refit_max_staleness_s=None))
+
+    services = {}
+    results = {}
+    try:
+        for name, cfg in configs.items():
+            svc = AsyncChordalityEngine(config=cfg)
+            services[name] = svc
+            svc.warmup(graphs)
+            gather(svc.submit_many(graphs), timeout=600)   # warm pass
+
+        def measure_pass(svc, cfg, gap):
+            svc.stats = ServiceStats(
+                window=cfg.stats_window)   # idle here: per-pass stats
+            _gc.collect()   # drop the previous pass's garbage, not ours
+            # Deadline-free submits: a timeout here would make every
+            # queued request deadlined, charging the autotuned config an
+            # O(backlog) shed scan per admission wake that the statics
+            # never pay — an artifact, not the wait discipline.
+            t0 = _time.perf_counter()
+            futs = []
+            for i, g in enumerate(graphs):
+                if gap:
+                    _time.sleep(max(0.0, t0 + i * gap
+                                    - _time.perf_counter()))
+                futs.append(svc.submit(g))
+            gather(futs, timeout=600)
+            wall = _time.perf_counter() - t0
+            return {
+                "achieved_gps": requests / wall,
+                "p95_queue_ms": svc.stats.p95_queue_ms,
+                "mean_occupancy": svc.stats.mean_occupancy,
+            }
+
+        curves = {name: [] for name in configs}
+        # All visit orders: balances both position in the round and who
+        # ran immediately before (rotation alone keeps adjacency fixed).
+        orders = list(_itertools.permutations(services))
+        for rate in offered_gps:
+            gap = 0.0 if rate <= 0 else 1.0 / rate
+            reps = repeats if rate > 0 else max(repeats, burst_repeats)
+            passes = {name: [] for name in configs}
+            for rep in range(reps):
+                for name in orders[rep % len(orders)]:
+                    passes[name].append(
+                        measure_pass(services[name], configs[name], gap))
+            for name, got in passes.items():
+                got.sort(key=lambda p: p["achieved_gps"])
+                med = got[len(got) // 2]
+                curves[name].append({
+                    "offered_gps": rate if rate > 0 else None,
+                    "achieved_gps": round(med["achieved_gps"], 1),
+                    "p95_queue_ms": round(med["p95_queue_ms"], 3),
+                    "mean_occupancy": round(med["mean_occupancy"], 2),
+                })
+
+        for name, svc in services.items():
+            curve = curves[name]
+            entry = max(curve, key=lambda c: c["achieved_gps"])
+            out = {
+                "knee_gps": entry["achieved_gps"],
+                "p95_at_knee_ms": entry["p95_queue_ms"],
+                "curve": curve,
+            }
+            if svc.autotune_snapshot() is not None:
+                out["final_waits_ms"] = {
+                    str(k): round(v, 4)
+                    for k, v in svc.autotune_snapshot().items()}
+                out["wait_adjustments"] = svc.stats.wait_adjustments
+            results[name] = out
+    finally:
+        for svc in services.values():
+            svc.shutdown()
+
+    static = {k: v for k, v in results.items() if k != "autotuned"}
+    best_name = max(static, key=lambda k: static[k]["knee_gps"])
+    auto = results["autotuned"]
+    artifact = {
+        "meta": {
+            "n_small": n_small, "n_large": n_large, "requests": requests,
+            "max_batch": max_batch, "waits_ms": list(waits_ms),
+            "offered_gps": list(offered_gps), "small_frac": 0.75,
+        },
+        "configs": results,
+        "autotuned_vs_static_best": {
+            "static_best": best_name,
+            "knee_ratio": round(
+                auto["knee_gps"] / static[best_name]["knee_gps"], 4),
+            "p95_ratio": round(
+                auto["p95_at_knee_ms"]
+                / max(static[best_name]["p95_at_knee_ms"], 1e-9), 4),
+        },
+    }
+    rows = []
+    for name, r in results.items():
+        rows.append({
+            "name": f"saturation_{name}_n{n_small}_{n_large}",
+            "us_per_call": 1e6 / max(r["knee_gps"], 1e-9),
+            "derived": (
+                f"{r['knee_gps']:.0f}_graphs_per_s_at_knee;"
+                f"p95={r['p95_at_knee_ms']:.2f}ms"),
+        })
+    return rows, artifact

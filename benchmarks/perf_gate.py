@@ -16,6 +16,13 @@ baseline and **fails the build** if a structural perf property regressed:
 * ``lexbfs_batched_speedup_vs_scan`` — wall-time speedup factors. Noisy
   on shared CI boxes, so the gate is loose: a fresh factor below
   ``tolerance`` × baseline (default 0.5) fails; anything above passes.
+* ``BENCH_saturation.json`` — per-config knee throughput may not
+  collapse below ``tolerance`` × the committed knee, and the fresh
+  ``autotuned_vs_static_best.knee_ratio`` (an intra-artifact ratio, so
+  immune to box-speed drift) may not fall below ``--knee-ratio-floor``
+  (default 0.8): the committed artifact claims parity-or-better for the
+  autotuned control loops; a fresh run far below parity means the
+  controller regressed, not the box.
 
 Only keys present in *both* artifacts are compared — a baseline measured
 at different sizes (e.g. ``--smoke`` vs full) gates only the overlap,
@@ -27,7 +34,9 @@ Usage::
     PYTHONPATH=src python -m benchmarks.perf_gate \
         [--fresh BENCH_kernels.json] [--baseline <path-or-git>] \
         [--witness-fresh BENCH_witness.json] \
-        [--recognition-fresh BENCH_recognition.json] [--tolerance 0.5]
+        [--recognition-fresh BENCH_recognition.json] \
+        [--saturation-fresh BENCH_saturation.json] \
+        [--tolerance 0.5] [--knee-ratio-floor 0.8]
 
 ``--baseline`` defaults to ``git show HEAD:<fresh-name>`` — the artifact
 as committed, which is what "no worse than the repo claims" means.
@@ -129,6 +138,45 @@ def gate_sweep_sharing(fresh: Dict, key: str, label: str) -> List[str]:
     return errs
 
 
+def gate_saturation_knees(
+    fresh: Dict, base: Dict, label: str, tolerance: float
+) -> List[str]:
+    """Loose gate: each serving config's knee throughput (graphs/s at the
+    saturation burst) may not collapse below tolerance× its committed
+    knee. Compared per config name over the overlap, like the speedup
+    floors — absolute graphs/s drift with the box, hence the slack."""
+    errs = []
+    f, b = fresh.get("configs", {}), base.get("configs", {})
+    for name in sorted(set(f) & set(b)):
+        floor = tolerance * float(b[name]["knee_gps"])
+        if float(f[name]["knee_gps"]) < floor:
+            errs.append(
+                f"{label}.configs[{name}].knee_gps: "
+                f"{f[name]['knee_gps']} < {tolerance}x committed "
+                f"{b[name]['knee_gps']} (floor {floor:.0f})")
+    return errs
+
+
+def gate_saturation_ratio(
+    fresh: Dict, label: str, ratio_floor: float
+) -> List[str]:
+    """Intra-artifact gate: the autotuned config's knee relative to the
+    best static wait. Both numbers come from the same fresh run on the
+    same box, so this is immune to absolute-speed drift; the floor is
+    below 1.0 only to absorb run-to-run scheduler noise. Needs no
+    baseline file."""
+    vs = fresh.get("autotuned_vs_static_best")
+    if vs is None:
+        return []
+    ratio = float(vs.get("knee_ratio", 0.0))
+    if ratio < ratio_floor:
+        return [
+            f"{label}.autotuned_vs_static_best.knee_ratio: {ratio} < "
+            f"floor {ratio_floor} — the autotuned admission loop lost "
+            f"to static wait {vs.get('static_best')!r}"]
+    return []
+
+
 def run_gate(
     fresh_path: str = "BENCH_kernels.json",
     baseline: Optional[str] = None,
@@ -136,7 +184,10 @@ def run_gate(
     witness_baseline: Optional[str] = None,
     recognition_fresh: Optional[str] = "BENCH_recognition.json",
     recognition_baseline: Optional[str] = None,
+    saturation_fresh: Optional[str] = "BENCH_saturation.json",
+    saturation_baseline: Optional[str] = None,
     tolerance: float = 0.5,
+    knee_ratio_floor: float = 0.8,
 ) -> List[str]:
     """All gate failures across both artifacts (empty = pass)."""
     errs: List[str] = []
@@ -195,6 +246,25 @@ def run_gate(
             else:
                 print(f"# perf_gate: no committed baseline for "
                       f"{recognition_fresh}; skipping", file=sys.stderr)
+
+    if saturation_fresh is not None:
+        try:
+            with open(saturation_fresh) as f:
+                sfresh = json.load(f)
+        except OSError:
+            sfresh = None
+        if sfresh is not None:
+            # the parity ratio is self-contained — gate it even with no
+            # committed baseline
+            errs += gate_saturation_ratio(
+                sfresh, saturation_fresh, knee_ratio_floor)
+            sbase = _load_baseline(saturation_fresh, saturation_baseline)
+            if sbase is not None:
+                errs += gate_saturation_knees(
+                    sfresh, sbase, saturation_fresh, tolerance)
+            else:
+                print(f"# perf_gate: no committed baseline for "
+                      f"{saturation_fresh}; skipping", file=sys.stderr)
     return errs
 
 
@@ -207,8 +277,12 @@ def main(argv=None) -> int:
     ap.add_argument("--witness-baseline", default=None)
     ap.add_argument("--recognition-fresh", default="BENCH_recognition.json")
     ap.add_argument("--recognition-baseline", default=None)
+    ap.add_argument("--saturation-fresh", default="BENCH_saturation.json")
+    ap.add_argument("--saturation-baseline", default=None)
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="speedup floor / overhead ceiling factor")
+    ap.add_argument("--knee-ratio-floor", type=float, default=0.8,
+                    help="min fresh autotuned/static-best knee ratio")
     args = ap.parse_args(argv)
     errs = run_gate(
         fresh_path=args.fresh, baseline=args.baseline,
@@ -216,7 +290,10 @@ def main(argv=None) -> int:
         witness_baseline=args.witness_baseline,
         recognition_fresh=args.recognition_fresh,
         recognition_baseline=args.recognition_baseline,
-        tolerance=args.tolerance)
+        saturation_fresh=args.saturation_fresh,
+        saturation_baseline=args.saturation_baseline,
+        tolerance=args.tolerance,
+        knee_ratio_floor=args.knee_ratio_floor)
     if errs:
         for e in errs:
             print(f"PERF REGRESSION: {e}", file=sys.stderr)

@@ -25,7 +25,7 @@ def main(argv=None) -> int:
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
                          "kernels,lexbfs,engine,router,service,witness,"
-                         "recognition")
+                         "recognition,saturation")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -34,7 +34,8 @@ def main(argv=None) -> int:
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
-         "lexbfs", "engine", "router", "service", "witness", "recognition"]
+         "lexbfs", "engine", "router", "service", "witness", "recognition",
+         "saturation"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -191,6 +192,30 @@ def main(argv=None) -> int:
         with open("BENCH_recognition.json", "w") as f:
             json.dump(artifact, f, indent=2, sort_keys=True)
         print("# wrote BENCH_recognition.json", file=sys.stderr)
+    if "saturation" in which:
+        print("# saturation bench - static waits vs autotuned under "
+              "bimodal-n load (-> BENCH_saturation.json)", file=sys.stderr)
+        # The stream must be long enough that the saturation burst blows
+        # the autotuned delay budget (the controller's collapse signal)
+        # and that per-pass scheduler jitter amortizes; below ~300
+        # requests the end-of-stream window tax dominates and the knee
+        # measures the tail, not the serving discipline.
+        if args.smoke:
+            rows, artifact = kernel_bench.bench_saturation(
+                requests=320, max_batch=16, waits_ms=(0.0, 2.0),
+                offered_gps=(1000, 0), repeats=2, burst_repeats=9)
+        elif args.quick:
+            rows, artifact = kernel_bench.bench_saturation(
+                requests=512, max_batch=16, waits_ms=(0.0, 2.0, 8.0),
+                offered_gps=(1000, 4000, 0), repeats=3, burst_repeats=15)
+        else:
+            rows, artifact = kernel_bench.bench_saturation()
+        emit(rows)
+        import json
+
+        with open("BENCH_saturation.json", "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_saturation.json", file=sys.stderr)
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

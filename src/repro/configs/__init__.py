@@ -15,6 +15,7 @@ from repro.configs import (
 from repro.configs.base import ArchSpec
 from repro.configs.service import (
     SERVICE_CONFIGS,
+    AutotuneConfig,
     ServiceConfig,
     service_config,
 )

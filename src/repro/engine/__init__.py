@@ -26,6 +26,10 @@ Backend discovery: :func:`list_backends` returns every registered
 :class:`BackendSpec` (name, capability flags, one-line doc);
 ``ChordalityEngine(backend="auto")`` lets the router pick per work unit.
 """
+from repro.engine.autotune import (
+    Autotuner,
+    RefitPolicy,
+)
 from repro.engine.backends import (
     BackendCaps,
     BackendSpec,
@@ -69,6 +73,8 @@ from repro.engine.session import (
 )
 
 __all__ = [
+    "Autotuner",
+    "RefitPolicy",
     "BackendCaps",
     "BackendSpec",
     "ChordalityBackend",

@@ -1,0 +1,223 @@
+"""Closed-loop service tuning — the feedback layer behind ``autotune=``.
+
+The async service measures everything the static knobs would need to be
+set correctly — per-unit occupancy, queue-delay percentiles, unit
+latencies, deadline pressure — but through PR 7 those measurements only
+flowed *out* (ServiceStats). This module closes the loops (DESIGN.md
+§14): :class:`Autotuner` turns the measurements back into knob movements,
+inside hard bounds, so a service under shifting traffic tracks its own
+operating point instead of serving yesterday's hand fit.
+
+Three loops, all configured by ``repro.configs.service.AutotuneConfig``:
+
+* **admission wait (AIMD, per n_pad bucket)** — each bucket's
+  ``max_wait_ms`` adapts from that bucket's own observed units: additive
+  increase while units run under ``target_occupancy`` with queue delay
+  inside ``delay_budget_ms`` (holding the bucket longer fills it), and
+  multiplicative decrease the moment the bucket's p95 queue delay blows
+  the budget (congestion sheds latency fast). Classic AIMD shape:
+  cautious toward adding latency, aggressive about removing it, always
+  clamped to ``[wait_min_ms, wait_max_ms]``.
+* **online router refit** (:class:`RefitPolicy`) — decides *when* the
+  service should call ``ChordalityEngine.refit_router()`` from the live
+  sample log: after ``refit_min_samples`` fresh unit samples, or when
+  the last refit is ``refit_max_staleness_s`` stale and any fresh
+  evidence exists. The refit itself (and its degenerate-sample guards)
+  lives in the session layer.
+* **deadline-pressure load shedding** — from an EMA of per-unit
+  execution time the tuner projects how long a bucket's backlog will
+  take to clear (:meth:`Autotuner.projected_delay_ms`); the service
+  sheds queued *deadlined* requests, lowest priority class first, when
+  the projection exceeds their remaining deadline — dropping work at
+  admission that would only expire after consuming a unit slot.
+  Deadline-free requests are never shed (they didn't opt into
+  best-effort semantics).
+
+The tuner is deliberately passive: it owns no threads and takes no
+locks. The service calls ``observe_unit`` from its executor and
+``wait_ms`` / ``projected_delay_ms`` from its admission loop, all under
+the service lock, so tuner state needs no synchronization of its own.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.service import AutotuneConfig, ServiceConfig
+
+#: EMA weight for the newest per-unit execution time (the shed
+#: projection's rate estimate). 0.3 tracks a platform warming up within
+#: a few units without letting one slow outlier own the projection.
+_EXEC_EMA_ALPHA = 0.3
+
+
+def _percentile(values: Sequence[float], q: float) -> float:
+    """p-th percentile by linear interpolation; 0.0 on an empty window.
+
+    Tiny fixed windows (an AIMD observation interval holds a handful of
+    delays) don't warrant numpy round-trips, and the controller only
+    needs a stable, monotone summary — not a specific estimator.
+    """
+    if not values:
+        return 0.0
+    xs = sorted(values)
+    if len(xs) == 1:
+        return float(xs[0])
+    pos = (q / 100.0) * (len(xs) - 1)
+    lo = int(math.floor(pos))
+    hi = min(lo + 1, len(xs) - 1)
+    return float(xs[lo] + (xs[hi] - xs[lo]) * (pos - lo))
+
+
+@dataclasses.dataclass
+class _BucketState:
+    """One n_pad bucket's controller state."""
+
+    wait_ms: float
+    #: observation window since the last AIMD decision
+    occupancies: List[int] = dataclasses.field(default_factory=list)
+    delays_ms: List[float] = dataclasses.field(default_factory=list)
+    units_seen: int = 0
+    #: EMA of per-unit execution latency (None until the first unit)
+    exec_ema_ms: Optional[float] = None
+
+
+class Autotuner:
+    """Per-bucket wait controller + backlog-delay projector.
+
+    Args:
+      config: the service's :class:`ServiceConfig`; ``config.autotune``
+        must be set (the service only constructs a tuner when it is).
+
+    The initial per-bucket wait is ``config.max_wait_ms`` clamped into
+    the autotune bounds — the static knob is the controller's starting
+    guess, not its ceiling.
+    """
+
+    def __init__(self, config: ServiceConfig):
+        if config.autotune is None:
+            raise ValueError("Autotuner requires config.autotune")
+        self.config = config
+        self.knobs: AutotuneConfig = config.autotune
+        self._buckets: Dict[int, _BucketState] = {}
+        self._global_exec_ema_ms: Optional[float] = None
+
+    def _bucket(self, n_pad: int) -> _BucketState:
+        st = self._buckets.get(n_pad)
+        if st is None:
+            init = min(max(self.config.max_wait_ms,
+                           self.knobs.wait_min_ms),
+                       self.knobs.wait_max_ms)
+            st = self._buckets[n_pad] = _BucketState(wait_ms=init)
+        return st
+
+    # -- admission-side reads ----------------------------------------------
+    def wait_ms(self, n_pad: int) -> float:
+        """Current adapted wait window for this bucket."""
+        return self._bucket(n_pad).wait_ms
+
+    def projected_delay_ms(
+        self, n_pad: int, n_queued: int, ready_units: int,
+    ) -> Optional[float]:
+        """Projected queue delay for work at the back of this bucket.
+
+        ``ceil(n_queued / max_batch)`` units still to drain plus
+        ``ready_units`` already routed and waiting for the executor, each
+        priced at the bucket's per-unit execution EMA (service-wide EMA
+        until this bucket has executed; None before *any* unit has — no
+        projection means no shedding, so a cold service never drops work
+        on a guess).
+        """
+        st = self._buckets.get(n_pad)
+        ema = st.exec_ema_ms if st is not None and \
+            st.exec_ema_ms is not None else self._global_exec_ema_ms
+        if ema is None or n_queued <= 0:
+            return None
+        units_ahead = ready_units + \
+            math.ceil(n_queued / self.config.max_batch)
+        return units_ahead * ema
+
+    # -- executor-side feedback --------------------------------------------
+    def observe_unit(
+        self,
+        n_pad: int,
+        occupancy: int,
+        queue_delays_ms: Sequence[float],
+        exec_ms: float,
+    ) -> bool:
+        """Feed one executed unit's measurements; returns True when the
+        bucket's wait window moved.
+
+        The execution EMA updates on every unit; the AIMD decision fires
+        once per ``interval_units`` units, over that window's occupancy
+        mean and queue-delay p95:
+
+        * p95 delay over budget -> multiplicative decrease (congestion);
+        * underfilled units with delay in budget -> additive increase;
+        * otherwise the window is at a good operating point — hold.
+        """
+        st = self._bucket(n_pad)
+        st.exec_ema_ms = exec_ms if st.exec_ema_ms is None else (
+            _EXEC_EMA_ALPHA * exec_ms
+            + (1.0 - _EXEC_EMA_ALPHA) * st.exec_ema_ms)
+        self._global_exec_ema_ms = exec_ms \
+            if self._global_exec_ema_ms is None else (
+                _EXEC_EMA_ALPHA * exec_ms
+                + (1.0 - _EXEC_EMA_ALPHA) * self._global_exec_ema_ms)
+        st.occupancies.append(occupancy)
+        st.delays_ms.extend(queue_delays_ms)
+        st.units_seen += 1
+        if st.units_seen < self.knobs.interval_units:
+            return False
+        mean_occ = sum(st.occupancies) / len(st.occupancies) \
+            / max(self.config.max_batch, 1)
+        p95 = _percentile(st.delays_ms, 95.0)
+        st.occupancies.clear()
+        st.delays_ms.clear()
+        st.units_seen = 0
+        old = st.wait_ms
+        if p95 > self.knobs.delay_budget_ms:
+            st.wait_ms = max(self.knobs.wait_min_ms,
+                             st.wait_ms * self.knobs.wait_decrease)
+        elif mean_occ < self.knobs.target_occupancy:
+            st.wait_ms = min(self.knobs.wait_max_ms,
+                             st.wait_ms + self.knobs.wait_increase_ms)
+        return st.wait_ms != old
+
+    def snapshot(self) -> Dict[int, float]:
+        """{n_pad: current wait_ms} for every bucket seen so far."""
+        return {n_pad: st.wait_ms for n_pad, st in self._buckets.items()}
+
+
+class RefitPolicy:
+    """When should the service re-fit the router from live samples?
+
+    Tracks the engine's monotone ``router_sample_count`` against the
+    count at the last refit. :meth:`due` fires on either trigger from
+    :class:`~repro.configs.service.AutotuneConfig`: enough fresh samples
+    (``refit_min_samples``), or a stale fit (``refit_max_staleness_s``)
+    with *any* fresh evidence. :meth:`mark` records a completed refit
+    attempt; the caller invokes it whether or not the session accepted
+    the samples, so a degenerate log (see ``refit_router``) doesn't spin
+    the trigger on every unit.
+    """
+
+    def __init__(self, knobs: AutotuneConfig, now: float,
+                 sample_count: int = 0):
+        self.knobs = knobs
+        self._last_count = sample_count
+        self._last_t = now
+
+    def due(self, sample_count: int, now: float) -> bool:
+        fresh = sample_count - self._last_count
+        if fresh <= 0:
+            return False
+        if fresh >= self.knobs.refit_min_samples:
+            return True
+        return (self.knobs.refit_max_staleness_s is not None
+                and now - self._last_t >= self.knobs.refit_max_staleness_s)
+
+    def mark(self, sample_count: int, now: float) -> None:
+        self._last_count = sample_count
+        self._last_t = now

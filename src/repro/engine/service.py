@@ -50,6 +50,17 @@ Three client-surface extras on top of the triad:
   shared-sweep recognition executable compiled for the *union* of the
   live requests' property sets (``kind="recognition:<props>"``), and each
   response is filtered back down to what its request asked for.
+* **priorities** — ``submit(priority=...)`` assigns the request a class
+  from ``ServiceConfig.priority_weights``; each bucket drains its
+  classes in smooth weighted-fair order (:class:`_BucketQueue`), so
+  high-priority traffic gets proportionally more unit slots under
+  contention without starving anyone.
+* **autotune** — ``ServiceConfig.autotune=AutotuneConfig(...)`` closes
+  the control loops (``repro.engine.autotune``, DESIGN.md §14): the
+  wait window adapts per bucket (AIMD on occupancy/queue-delay p95),
+  the router re-fits continuously from live unit samples, and queued
+  deadlined work projected to miss is shed lowest-priority-first
+  (``ServiceStats.n_shed`` / ``shed_by_priority``).
 """
 from __future__ import annotations
 
@@ -65,6 +76,7 @@ import collections
 import numpy as np
 
 from repro.configs.service import ServiceConfig
+from repro.engine.autotune import Autotuner, RefitPolicy
 from repro.engine.planner import unit_for_chunk
 from repro.engine.session import Certificate, ChordalityEngine
 from repro.graphs.structure import Graph, bucket_graphs, bucket_npad
@@ -97,9 +109,12 @@ class ServiceResponse:
     n_pad: int = 0         # padding bucket the request landed in
     batch: int = 0         # compiled batch dimension of its unit
     occupancy: int = 0     # real requests in the unit (rest = padding)
+    priority: int = 0      # class the request was admitted under
 
 
-@dataclasses.dataclass
+# eq=False: requests are identity objects — queue membership tests and
+# shed-path removal must never compare payload graphs (ndarray ==).
+@dataclasses.dataclass(eq=False)
 class _Request:
     graph: Graph
     future: Future
@@ -107,6 +122,7 @@ class _Request:
     want_certificate: bool
     want_witness: bool = False
     properties: Tuple[str, ...] = ()     # normalized; empty = verdict-only
+    priority: int = 0                    # index into priority_weights
     deadline: Optional[float] = None     # absolute perf_counter seconds
 
 
@@ -118,9 +134,109 @@ class _AdmittedUnit:
     requests: List[_Request]
 
 
+class _BucketQueue:
+    """One n_pad bucket's admission queue: a FIFO deque per priority
+    class, drained in smooth weighted-fair order.
+
+    Each :meth:`pop` credits every backlogged class its weight and
+    serves the richest (ties to the higher class), so over a contended
+    stretch class ``p`` receives ~``weights[p] / sum(weights of
+    backlogged classes)`` of the unit slots, and no non-empty class
+    starves — its credit grows every pop until it wins. A class that
+    empties forfeits its accumulated credit: absence must not bank a
+    burst for later.
+    """
+
+    __slots__ = ("_weights", "_dqs", "_credit", "_len")
+
+    def __init__(self, weights: Tuple[float, ...]):
+        self._weights = weights
+        self._dqs: List[Deque[_Request]] = [
+            collections.deque() for _ in weights]
+        self._credit = [0.0] * len(weights)
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def push(self, req: _Request) -> None:
+        self._dqs[req.priority].append(req)
+        self._len += 1
+
+    def pop(self) -> _Request:
+        """Weighted-fair pop (see class docstring)."""
+        backlogged = [p for p, dq in enumerate(self._dqs) if dq]
+        if not backlogged:
+            raise IndexError("pop from empty bucket queue")
+        total = 0.0
+        for p, dq in enumerate(self._dqs):
+            if dq:
+                self._credit[p] += self._weights[p]
+                total += self._weights[p]
+            else:
+                self._credit[p] = 0.0
+        best = max(backlogged, key=lambda p: (self._credit[p], p))
+        self._credit[best] -= total
+        self._len -= 1
+        return self._dqs[best].popleft()
+
+    def remove(self, req: _Request) -> bool:
+        """Drop one queued request (identity match) — the shed path."""
+        try:
+            self._dqs[req.priority].remove(req)
+        except ValueError:
+            return False
+        self._len -= 1
+        return True
+
+    def remove_if(self, pred) -> List[_Request]:
+        """Remove and return every queued request matching ``pred``."""
+        removed: List[_Request] = []
+        for p, dq in enumerate(self._dqs):
+            if not any(pred(r) for r in dq):
+                continue
+            keep: Deque[_Request] = collections.deque()
+            for r in dq:
+                if pred(r):
+                    removed.append(r)
+                else:
+                    keep.append(r)
+            self._dqs[p] = keep
+        self._len -= len(removed)
+        return removed
+
+    def drain_all(self) -> List[_Request]:
+        """Empty the queue; returns the requests (class-ascending, FIFO)."""
+        out = list(self.requests())
+        for dq in self._dqs:
+            dq.clear()
+        self._credit = [0.0] * len(self._weights)
+        self._len = 0
+        return out
+
+    def requests(self):
+        """Iterate queued requests, class-ascending, FIFO within class."""
+        for dq in self._dqs:
+            yield from dq
+
+    def oldest_t_submit(self) -> Optional[float]:
+        """Submission time of the oldest queued request (any class)."""
+        heads = [dq[0].t_submit for dq in self._dqs if dq]
+        return min(heads) if heads else None
+
+
 @dataclasses.dataclass
 class ServiceStats:
-    """Aggregate serving behavior (mutated under the service lock)."""
+    """Aggregate serving behavior (mutated under the service lock).
+
+    The sample buffers (``queue_delays_ms``, ``exec_latencies_ms``) are
+    bounded sliding windows: :meth:`record_queue_delay` /
+    :meth:`record_exec_latency` roll the oldest samples off beyond
+    ``window`` entries, so a long-lived service reports recent-window
+    percentiles instead of leaking memory. The percentile properties
+    are degenerate-safe — 0 samples reads 0.0, 1 sample reads that
+    sample — and never mutate the buffers.
+    """
 
     n_submitted: int = 0
     n_completed: int = 0
@@ -128,6 +244,17 @@ class ServiceStats:
     n_rejected: int = 0
     n_failed: int = 0
     n_expired: int = 0     # dropped in-queue past their deadline
+    #: dropped by the deadline-pressure shedding policy (autotune only):
+    #: queued deadlined work whose projected queue delay exceeded its
+    #: remaining deadline — cancelled at admission, lowest class first.
+    n_shed: int = 0
+    #: {priority class: requests shed from it}
+    shed_by_priority: Dict[int, int] = dataclasses.field(
+        default_factory=dict)
+    #: AIMD wait-window movements (autotune only)
+    wait_adjustments: int = 0
+    #: online router refits that updated at least one backend
+    router_refits: int = 0
     n_units: int = 0
     #: units upgraded to the fused witness executable because at least one
     #: live request in them asked ``want_witness`` — the batching economics
@@ -139,6 +266,8 @@ class ServiceStats:
     recognition_upgraded: int = 0
     queue_delays_ms: List[float] = dataclasses.field(default_factory=list)
     exec_latencies_ms: List[float] = dataclasses.field(default_factory=list)
+    #: sliding-window bound on the sample buffers above
+    window: int = 4096
     #: {filled slots: units executed with that occupancy}
     occupancy_histogram: Dict[int, int] = dataclasses.field(
         default_factory=dict)
@@ -148,20 +277,38 @@ class ServiceStats:
     #: {"full" | "timeout" | "forced": units drained for that reason}
     drain_reasons: Dict[str, int] = dataclasses.field(default_factory=dict)
 
+    @staticmethod
+    def _pct(buf: List[float], q: float) -> float:
+        """Percentile over a copy of ``buf`` — well-defined for 0 samples
+        (0.0) and 1 sample (that sample), and never mutates or reorders
+        the buffer itself (np.percentile sorts its own copy)."""
+        if not buf:
+            return 0.0
+        return float(np.percentile(np.asarray(buf, dtype=float), q))
+
+    def record_queue_delay(self, ms: float) -> None:
+        self.queue_delays_ms.append(ms)
+        excess = len(self.queue_delays_ms) - self.window
+        if excess > 0:
+            del self.queue_delays_ms[:excess]
+
+    def record_exec_latency(self, ms: float) -> None:
+        self.exec_latencies_ms.append(ms)
+        excess = len(self.exec_latencies_ms) - self.window
+        if excess > 0:
+            del self.exec_latencies_ms[:excess]
+
     @property
     def p50_queue_ms(self) -> float:
-        return float(np.median(self.queue_delays_ms)) \
-            if self.queue_delays_ms else 0.0
+        return self._pct(self.queue_delays_ms, 50.0)
 
     @property
     def p95_queue_ms(self) -> float:
-        return float(np.percentile(self.queue_delays_ms, 95)) \
-            if self.queue_delays_ms else 0.0
+        return self._pct(self.queue_delays_ms, 95.0)
 
     @property
     def p50_exec_ms(self) -> float:
-        return float(np.median(self.exec_latencies_ms)) \
-            if self.exec_latencies_ms else 0.0
+        return self._pct(self.exec_latencies_ms, 50.0)
 
     @property
     def mean_occupancy(self) -> float:
@@ -219,17 +366,28 @@ class AsyncChordalityEngine:
                 buckets=buckets,
                 router=router,
             )
-        self.stats = ServiceStats()
+        self.stats = ServiceStats(window=self.config.stats_window)
 
         self._lock = threading.Lock()
         self._work_cv = threading.Condition(self._lock)   # admission wakeups
         self._done_cv = threading.Condition(self._lock)   # backlog drains
-        self._pending: Dict[int, Deque[_Request]] = \
-            collections.defaultdict(collections.deque)
+        self._pending: Dict[int, _BucketQueue] = {}
         self._backlog = 0          # submitted, not yet resolved
         self._n_deadlined = 0      # queued requests carrying a deadline
         self._closed = False
         self._force_drain = False
+        # shutdown(drain=False) structural guard: once up, the admission
+        # loop may only cancel pending requests, never drain them.
+        self._no_drain = False
+        # Control loops (None = static knobs, the pre-autotune service).
+        self._autotuner = Autotuner(self.config) \
+            if self.config.autotune is not None else None
+        self._refit_policy = None
+        if self.config.autotune is not None \
+                and self.engine.router is not None:
+            self._refit_policy = RefitPolicy(
+                self.config.autotune, time.perf_counter(),
+                self.engine.router_sample_count)
         self._ready: "queue.Queue[Optional[_AdmittedUnit]]" = queue.Queue()
         self._admitter = threading.Thread(
             target=self._admission_loop, name="chordality-admission",
@@ -274,6 +432,7 @@ class AsyncChordalityEngine:
         want_certificate: bool = False,
         want_witness: bool = False,
         properties: Optional[Sequence[str]] = None,
+        priority: Optional[int] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> "Future[ServiceResponse]":
@@ -294,9 +453,15 @@ class AsyncChordalityEngine:
         executable for the union of the unit's live property sets.
         Mutually exclusive with ``want_witness`` — recognition carries its
         own proper-interval witness.
+        ``priority`` (default: the config's ``default_priority``) picks
+        the request's class in ``config.priority_weights``; its bucket
+        drains classes weighted-fair, so higher classes get
+        proportionally more unit slots under contention.
         ``deadline_ms`` (default: the config's) drops the request if it is
         still queued this long after submission — the future is cancelled
-        and ``ServiceStats.n_expired`` counts it.
+        and ``ServiceStats.n_expired`` counts it. Deadlined requests are
+        also the load-shedding candidates when autotuning (see
+        ``ServiceStats.n_shed``).
         """
         props: Tuple[str, ...] = ()
         if properties is not None:
@@ -316,6 +481,12 @@ class AsyncChordalityEngine:
         if deadline_ms is not None and deadline_ms <= 0:
             raise ValueError(
                 f"deadline_ms must be positive or None, got {deadline_ms}")
+        if priority is None:
+            priority = self.config.default_priority
+        if not 0 <= priority < self.config.n_priorities:
+            raise ValueError(
+                f"priority {priority} outside classes "
+                f"0..{self.config.n_priorities - 1}")
         t_submit = time.perf_counter()
         fut: Future = Future()
         req = _Request(
@@ -323,6 +494,7 @@ class AsyncChordalityEngine:
             want_certificate=want_certificate,
             want_witness=want_witness,
             properties=props,
+            priority=priority,
             deadline=None if deadline_ms is None
             else t_submit + deadline_ms / 1e3)
         deadline = None if timeout is None else \
@@ -343,15 +515,23 @@ class AsyncChordalityEngine:
                     raise QueueFullError(
                         f"backlog still full after {timeout}s")
                 self._done_cv.wait(remaining)
-            self._backlog += 1
-            self.stats.n_submitted += 1
-            if req.deadline is not None:
-                self._n_deadlined += 1
-            n_pad = bucket_npad(
-                max(graph.n_nodes, 1), self.engine.buckets)
-            self._pending[n_pad].append(req)
-            self._work_cv.notify_all()
+            self._admit_locked(req)
         return fut
+
+    def _admit_locked(self, req: _Request) -> None:
+        """Book-keep one accepted request into its bucket (lock held)."""
+        self._backlog += 1
+        self.stats.n_submitted += 1
+        if req.deadline is not None:
+            self._n_deadlined += 1
+        n_pad = bucket_npad(
+            max(req.graph.n_nodes, 1), self.engine.buckets)
+        bq = self._pending.get(n_pad)
+        if bq is None:
+            bq = self._pending[n_pad] = _BucketQueue(
+                self.config.priority_weights)
+        bq.push(req)
+        self._work_cv.notify_all()
 
     def submit_many(
         self,
@@ -359,6 +539,7 @@ class AsyncChordalityEngine:
         want_certificate: bool = False,
         want_witness: bool = False,
         properties: Optional[Sequence[str]] = None,
+        priority: Optional[int] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ) -> List["Future[ServiceResponse]"]:
@@ -366,6 +547,7 @@ class AsyncChordalityEngine:
         return [
             self.submit(g, want_certificate=want_certificate,
                         want_witness=want_witness, properties=properties,
+                        priority=priority,
                         deadline_ms=deadline_ms, timeout=timeout)
             for g in graphs
         ]
@@ -376,6 +558,7 @@ class AsyncChordalityEngine:
         want_certificate: bool = False,
         want_witness: bool = False,
         properties: Optional[Sequence[str]] = None,
+        priority: Optional[int] = None,
         deadline_ms: Optional[float] = None,
         timeout: Optional[float] = None,
     ):
@@ -399,7 +582,7 @@ class AsyncChordalityEngine:
         fut = self.submit(
             graph, want_certificate=want_certificate,
             want_witness=want_witness, properties=properties,
-            deadline_ms=deadline_ms, timeout=timeout)
+            priority=priority, deadline_ms=deadline_ms, timeout=timeout)
         return asyncio.wrap_future(fut)
 
     def flush(self, timeout: Optional[float] = None) -> None:
@@ -445,15 +628,12 @@ class AsyncChordalityEngine:
             if drain:
                 self._force_drain = True
             else:
-                for dq in self._pending.values():
-                    while dq:
-                        req = dq.popleft()
-                        if req.deadline is not None:
-                            self._n_deadlined -= 1
-                        if req.future.cancel():
-                            self.stats.n_cancelled += 1
-                        self._backlog -= 1
-                self._done_cv.notify_all()
+                # Raise the structural guard *before* cancelling: from
+                # this point the admission loop can only cancel pending
+                # requests, never drain them into units — whatever
+                # interleaving leaves (or lands) requests in a bucket.
+                self._no_drain = True
+                self._cancel_pending_locked()
             self._work_cv.notify_all()
         t = self.config.drain_timeout_s if timeout is None else timeout
         self._admitter.join(t)
@@ -474,8 +654,20 @@ class AsyncChordalityEngine:
             return self._backlog
 
     # -- admission loop ----------------------------------------------------
+    def _cancel_pending_locked(self) -> None:
+        """Cancel every queued request and release its backlog slot."""
+        for bq in self._pending.values():
+            for req in bq.drain_all():
+                if req.deadline is not None:
+                    self._n_deadlined -= 1
+                if req.future.cancel():
+                    self.stats.n_cancelled += 1
+                self._backlog -= 1
+        self._done_cv.notify_all()
+
     def _expire_locked(self, now: float) -> Optional[float]:
-        """Drop queued requests past their deadline; cancel their futures.
+        """Deadline sweep: drop queued requests past their deadline, then
+        shed queued deadlined work projected to miss (autotune only).
 
         Returns the earliest deadline still pending (the admission loop's
         extra wakeup bound), or None when nothing is deadlined. Only
@@ -487,43 +679,92 @@ class AsyncChordalityEngine:
         """
         if self._n_deadlined == 0:
             return None
-        earliest: Optional[float] = None
         dropped = 0
-        for n_pad, dq in self._pending.items():
-            if not any(r.deadline is not None for r in dq):
-                continue
-            keep: Deque[_Request] = collections.deque()
-            for req in dq:
-                if req.deadline is not None and now >= req.deadline:
-                    if req.future.cancelled():  # client beat the deadline
-                        self.stats.n_cancelled += 1
-                    else:
-                        req.future.cancel()
-                        self.stats.n_expired += 1
-                    self._backlog -= 1
-                    self._n_deadlined -= 1
-                    dropped += 1
-                    continue
+        for bq in self._pending.values():
+            for req in bq.remove_if(
+                    lambda r: r.deadline is not None and now >= r.deadline):
+                if req.future.cancelled():  # client beat the deadline
+                    self.stats.n_cancelled += 1
+                else:
+                    req.future.cancel()
+                    self.stats.n_expired += 1
+                self._backlog -= 1
+                self._n_deadlined -= 1
+                dropped += 1
+        dropped += self._shed_locked(now)
+        earliest: Optional[float] = None
+        for bq in self._pending.values():
+            for req in bq.requests():
                 if req.deadline is not None and (
                         earliest is None or req.deadline < earliest):
                     earliest = req.deadline
-                keep.append(req)
-            self._pending[n_pad] = keep
         if dropped:
             self._done_cv.notify_all()
         return earliest
 
+    def _shed_locked(self, now: float) -> int:
+        """Deadline-pressure load shedding (autotune only; DESIGN.md §14).
+
+        For each bucket, while the tuner projects the backlog's clear
+        time to exceed ``shed_headroom`` × some queued deadlined
+        request's remaining deadline, cancel that request now — lowest
+        priority class first, oldest first — instead of letting it hold
+        a unit slot it can only expire in. Deadline-free requests are
+        never shed. Returns the number of requests shed.
+        """
+        if self._autotuner is None or self._n_deadlined == 0:
+            return 0
+        headroom = self._autotuner.knobs.shed_headroom
+        ready_units = self._ready.qsize()
+        shed = 0
+        for n_pad, bq in self._pending.items():
+            while len(bq) and self._n_deadlined:
+                proj = self._autotuner.projected_delay_ms(
+                    n_pad, len(bq), ready_units)
+                if proj is None:
+                    break
+                victim: Optional[_Request] = None
+                for req in bq.requests():   # class-ascending, FIFO within
+                    if req.deadline is None:
+                        continue
+                    if proj > headroom * (req.deadline - now) * 1e3:
+                        victim = req
+                        break
+                if victim is None or not bq.remove(victim):
+                    break
+                if victim.future.cancelled():
+                    self.stats.n_cancelled += 1
+                else:
+                    victim.future.cancel()
+                    self.stats.n_shed += 1
+                    self.stats.shed_by_priority[victim.priority] = \
+                        self.stats.shed_by_priority.get(
+                            victim.priority, 0) + 1
+                self._backlog -= 1
+                self._n_deadlined -= 1
+                shed += 1
+        return shed
+
+    def _wait_s(self, n_pad: int) -> float:
+        """This bucket's current batching window, seconds (the AIMD
+        controller's adapted value when autotuning, the static config
+        knob otherwise)."""
+        if self._autotuner is not None:
+            return self._autotuner.wait_ms(n_pad) / 1e3
+        return self.config.max_wait_ms / 1e3
+
     def _drainable(self, now: float):
         """(bucket n_pads to drain now, seconds until the next deadline)."""
         drain, next_wait = [], None
-        wait_s = self.config.max_wait_ms / 1e3
-        for n_pad, dq in self._pending.items():
-            if not dq:
+        if self._no_drain:          # shutdown(drain=False): cancel-only
+            return drain, next_wait
+        for n_pad, bq in self._pending.items():
+            if not bq:
                 continue
-            if self._force_drain or len(dq) >= self.config.max_batch:
+            if self._force_drain or len(bq) >= self.config.max_batch:
                 drain.append(n_pad)
                 continue
-            deadline = dq[0].t_submit + wait_s
+            deadline = bq.oldest_t_submit() + self._wait_s(n_pad)
             if now >= deadline:
                 drain.append(n_pad)
             else:
@@ -542,10 +783,16 @@ class AsyncChordalityEngine:
                     drain, next_wait = self._drainable(now)
                     if drain:
                         break
-                    if self._closed and not any(
-                            self._pending.values()):
-                        self._ready.put(None)     # executor stop sentinel
-                        return
+                    if self._closed:
+                        if self._no_drain:
+                            # Defensive twin of the shutdown-side cancel:
+                            # anything still (or newly) pending after a
+                            # drain=False shutdown is cancelled here, so
+                            # no interleaving can revive a drain.
+                            self._cancel_pending_locked()
+                        if not any(self._pending.values()):
+                            self._ready.put(None)  # executor stop sentinel
+                            return
                     if next_expiry is not None:
                         expiry_wait = max(next_expiry - now, 0.0)
                         next_wait = expiry_wait if next_wait is None \
@@ -559,16 +806,33 @@ class AsyncChordalityEngine:
                 self._ready.put(au)
 
     def _drain_bucket_locked(self, n_pad: int) -> List[_AdmittedUnit]:
-        """Pop up to max_batch live requests; route; skip cancelled ones."""
-        dq = self._pending[n_pad]
+        """Pop up to max_batch live requests; route; skip dead ones.
+
+        Re-reads the clock rather than trusting the pass's sweep: an
+        admission pass drains buckets one at a time, and routing an
+        earlier bucket can stall long enough (slow router, lock held)
+        that requests here expired since the sweep ran. A request found
+        past its deadline releases its slot immediately — counted in
+        ``n_expired``, never built into the unit — so a unit's batch
+        only ever contains live work (regression: tests/test_service.py
+        ``test_expired_requests_release_slots_at_drain``).
+        """
+        bq = self._pending[n_pad]
+        now = time.perf_counter()
         out: List[_AdmittedUnit] = []
         reqs: List[_Request] = []
-        while dq and len(reqs) < self.config.max_batch:
-            req = dq.popleft()
+        while bq and len(reqs) < self.config.max_batch:
+            req = bq.pop()
             if req.deadline is not None:
                 self._n_deadlined -= 1     # leaves the queue either way
             if req.future.cancelled():
                 self.stats.n_cancelled += 1
+                self._backlog -= 1
+                self._done_cv.notify_all()
+                continue
+            if req.deadline is not None and now >= req.deadline:
+                req.future.cancel()
+                self.stats.n_expired += 1
                 self._backlog -= 1
                 self._done_cv.notify_all()
                 continue
@@ -690,13 +954,14 @@ class AsyncChordalityEngine:
                     err = e
             certs.append(cert)
             cert_errs.append(err)
+        live_delays: List[float] = []    # this unit's queue delays
         with self._lock:
             self.stats.n_units += 1
             if unit_wits is not None:
                 self.stats.witness_upgraded += 1
             if unit_recs is not None:
                 self.stats.recognition_upgraded += 1
-            self.stats.exec_latencies_ms.append(exec_ms)
+            self.stats.record_exec_latency(exec_ms)
             occ = sum(live)       # cancelled-after-drain slots don't count
             self.stats.occupancy_histogram[occ] = \
                 self.stats.occupancy_histogram.get(occ, 0) + 1
@@ -708,7 +973,8 @@ class AsyncChordalityEngine:
                     self.stats.n_failed += 1
                 else:
                     queue_ms = (t_start - r.t_submit) * 1e3
-                    self.stats.queue_delays_ms.append(queue_ms)
+                    self.stats.record_queue_delay(queue_ms)
+                    live_delays.append(queue_ms)
                     self.stats.backend_histogram[backend_name] = \
                         self.stats.backend_histogram.get(
                             backend_name, 0) + 1
@@ -739,10 +1005,47 @@ class AsyncChordalityEngine:
                         n_pad=au.unit.n_pad,
                         batch=au.unit.batch,
                         occupancy=occ,
+                        priority=r.priority,
                     ))
                     self.stats.n_completed += 1
                 self._backlog -= 1
+            if self._autotuner is not None:
+                if self._autotuner.observe_unit(
+                        au.unit.n_pad, occ, live_delays, exec_ms):
+                    self.stats.wait_adjustments += 1
             self._done_cv.notify_all()
+        self._maybe_refit()
+
+    def _maybe_refit(self) -> None:
+        """Online router refit (executor thread, outside the service lock
+        — a least-squares solve must not stall admission).
+
+        Fires on the :class:`~repro.engine.autotune.RefitPolicy`
+        triggers; the session's ``refit_router`` applies its own
+        degenerate-sample guards, and the policy is marked either way so
+        an unfittable log doesn't re-trigger on every unit.
+        """
+        if self._refit_policy is None:
+            return
+        now = time.perf_counter()
+        count = self.engine.router_sample_count
+        if not self._refit_policy.due(count, now):
+            return
+        try:
+            refitted = self.engine.refit_router(
+                min_samples=self.config.autotune.refit_backend_min_samples)
+        except Exception:      # a bad refit must never kill the executor
+            refitted = ()
+        self._refit_policy.mark(count, now)
+        if refitted:
+            with self._lock:
+                self.stats.router_refits += 1
+
+    def autotune_snapshot(self) -> Optional[Dict[int, float]]:
+        """{n_pad: adapted wait_ms} when autotuning, else None."""
+        with self._lock:
+            return None if self._autotuner is None \
+                else self._autotuner.snapshot()
 
 
 def gather(futures: Sequence["Future[ServiceResponse]"],

@@ -177,6 +177,9 @@ class ChordalityEngine:
         # Appends/trims are GIL-atomic list ops; readers snapshot first.
         self._router_samples: List[tuple] = []
         self._router_samples_cap = 4096
+        # Monotone count of samples ever logged — unlike len() of the
+        # capped list, usable as a refit trigger by long-lived services.
+        self._router_samples_total = 0
 
     # -- backend resolution ------------------------------------------------
     def _resolve(self, name: Optional[str]) -> ChordalityBackend:
@@ -379,6 +382,7 @@ class ChordalityEngine:
             / float(unit.n_pad * unit.n_pad) if unit.indices else 0.0,
             unit.batch, exec_ms * 1e3 / max(unit.batch, 1))
         self._router_samples.append(sample)
+        self._router_samples_total += 1
         excess = len(self._router_samples) - self._router_samples_cap
         if excess > 0:
             del self._router_samples[:excess]
@@ -542,7 +546,8 @@ class ChordalityEngine:
             verdicts=planes["chordal"].copy(), plan=plan, stats=stats,
             properties=planes, recognitions=recognitions)
 
-    def refit_router(self, min_samples: int = 4):
+    def refit_router(self, min_samples: int = 4,
+                     min_distinct_n: int = 2):
         """Online re-fit of the router's cost model from this session's own
         measured unit latencies (ROADMAP PR 3 extension).
 
@@ -558,8 +563,24 @@ class ChordalityEngine:
         decisions outside the regime it was fitted on (regression-tested
         in tests/test_router.py).
 
+        Degenerate live logs are refused, not extrapolated: a backend
+        whose samples cover fewer than ``min_distinct_n`` distinct n
+        values keeps its prior coefficients (a one-point fit has no
+        slope — it would price every other regime off a constant), and
+        ``fit_n_range`` only narrows to the observed span when that span
+        is a real interval (lo < hi). Single-n traffic — the common case
+        for a service warming up on one bucket — therefore leaves both
+        the model and the clamping range at their priors, so unobserved
+        regimes keep routing on the committed fit.
+
+        Thread safety: the fitted coefficients are installed by swapping
+        the cost-model dict wholesale, so concurrent ``route_unit``
+        readers see either the old model or the new one, never a
+        half-updated mix.
+
         Returns the tuple of backend names whose coefficients were
-        refitted (empty if no backend reached ``min_samples``).
+        refitted (empty if no backend reached ``min_samples`` /
+        ``min_distinct_n``).
         """
         if self.router is None:
             raise ValueError(
@@ -571,16 +592,31 @@ class ChordalityEngine:
         for s in log:
             by_backend.setdefault(s[0], []).append(s)
         samples = [
-            s for name, rows in by_backend.items()
-            if len(rows) >= min_samples for s in rows
+            s for rows in by_backend.values()
+            if len(rows) >= min_samples
+            and len({r[1] for r in rows}) >= min_distinct_n
+            for s in rows
         ]
         if not samples:
             return ()
         fitted = fit_cost_model(samples)
-        self.router.cost_model.update(fitted)
-        ns = [s[1] for s in samples]
-        self.router.fit_n_range = (min(ns), max(ns))
+        self.router.cost_model = {**self.router.cost_model, **fitted}
+        ns = {s[1] for s in samples}
+        lo, hi = min(ns), max(ns)
+        if lo < hi:
+            self.router.fit_n_range = (int(lo), int(hi))
         return tuple(sorted(fitted))
+
+    @property
+    def router_sample_count(self) -> int:
+        """Unit samples ever logged (monotone — unaffected by the log cap).
+
+        The async service's online-refit trigger compares this against
+        the count at its last refit to decide when enough fresh evidence
+        has accumulated; ``len`` of the capped log can't serve that role
+        because it stops moving once the cap is reached.
+        """
+        return self._router_samples_total
 
     def _pad_single(self, graph_or_adj):
         """Normalize one request to its bucket: ``(padded, n, n_pad)``.

@@ -1,0 +1,224 @@
+"""Control loops (repro.engine.autotune): the AIMD wait controller, the
+online-refit trigger, the shedding projection — and the autotuned service
+end to end (ISSUE 8 tentpole)."""
+import time
+
+import pytest
+
+from repro.core import generators as G
+from repro.configs.service import (
+    AutotuneConfig,
+    ServiceConfig,
+    service_config,
+)
+from repro.engine import AsyncChordalityEngine, gather
+from repro.engine.autotune import Autotuner, RefitPolicy, _percentile
+
+
+def _tuner(max_batch=8, max_wait_ms=2.0, **knobs):
+    knobs.setdefault("interval_units", 1)
+    knobs.setdefault("wait_increase_ms", 0.5)
+    knobs.setdefault("wait_decrease", 0.5)
+    knobs.setdefault("wait_max_ms", 8.0)
+    knobs.setdefault("delay_budget_ms", 50.0)
+    cfg = ServiceConfig(max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        autotune=AutotuneConfig(**knobs))
+    return Autotuner(cfg)
+
+
+# ---------------------------------------------------------------------------
+# The percentile helper the controller summarizes its windows with.
+# ---------------------------------------------------------------------------
+def test_percentile_degenerate_and_interpolated():
+    assert _percentile([], 95.0) == 0.0
+    assert _percentile([7.0], 50.0) == 7.0
+    assert _percentile([7.0], 95.0) == 7.0
+    assert _percentile([0.0, 10.0], 50.0) == pytest.approx(5.0)
+    assert _percentile([1.0, 2.0, 3.0, 4.0], 100.0) == 4.0
+
+
+# ---------------------------------------------------------------------------
+# AIMD wait controller.
+# ---------------------------------------------------------------------------
+def test_initial_wait_is_config_knob_clamped_to_bounds():
+    assert _tuner(max_wait_ms=2.0).wait_ms(64) == 2.0
+    assert _tuner(max_wait_ms=100.0).wait_ms(64) == 8.0   # clamped to max
+    t = _tuner(max_wait_ms=0.0, wait_min_ms=1.0)
+    assert t.wait_ms(64) == 1.0                           # clamped to min
+
+
+def test_additive_increase_under_low_occupancy():
+    t = _tuner(max_wait_ms=2.0)
+    for i in range(4):      # underfilled units, delay well inside budget
+        moved = t.observe_unit(64, 1, [1.0], 5.0)
+        assert moved
+        assert t.wait_ms(64) == pytest.approx(2.0 + 0.5 * (i + 1))
+
+
+def test_multiplicative_decrease_on_blown_delay_budget():
+    t = _tuner(max_wait_ms=8.0)
+    t.observe_unit(64, 8, [200.0], 5.0)    # p95 >> budget, even when full
+    assert t.wait_ms(64) == pytest.approx(4.0)
+    t.observe_unit(64, 8, [200.0], 5.0)
+    assert t.wait_ms(64) == pytest.approx(2.0)
+
+
+def test_holds_at_a_good_operating_point():
+    t = _tuner(max_wait_ms=2.0, target_occupancy=0.75)
+    for _ in range(5):      # full units, delay in budget: no reason to move
+        assert not t.observe_unit(64, 8, [10.0], 5.0)
+    assert t.wait_ms(64) == 2.0
+
+
+def test_controller_converges_under_step_change_in_offered_load():
+    # Satellite (ISSUE 8): step the offered load and watch the controller
+    # re-converge. Phase 1 (light load: underfilled, fast queues) climbs
+    # additively to the bound; phase 2 (overload: delays blow the budget)
+    # collapses multiplicatively back to the floor; phase 3 re-climbs.
+    t = _tuner(max_wait_ms=1.0, wait_max_ms=8.0, wait_min_ms=0.0)
+    seen = []
+    for _ in range(32):
+        t.observe_unit(64, 1, [2.0], 5.0)
+        seen.append(t.wait_ms(64))
+    assert seen == sorted(seen)           # monotone climb...
+    assert seen[-1] == 8.0                # ...converged to the bound
+    # 14 decisions after the step: 8.0 * 0.5^14 << any realistic floor.
+    seen = []
+    for _ in range(14):
+        t.observe_unit(64, 8, [500.0], 5.0)
+        seen.append(t.wait_ms(64))
+    assert seen == sorted(seen, reverse=True)
+    assert seen[-1] < 0.01                # collapsed within the phase
+    for _ in range(32):
+        t.observe_unit(64, 2, [1.0], 5.0)
+    assert t.wait_ms(64) == 8.0           # recovered after the load drops
+
+
+def test_decision_cadence_follows_interval_units():
+    t = _tuner(interval_units=4, max_wait_ms=2.0)
+    for _ in range(3):
+        assert not t.observe_unit(64, 1, [1.0], 5.0)   # window still open
+    assert t.observe_unit(64, 1, [1.0], 5.0)           # 4th unit decides
+    assert t.wait_ms(64) == 2.5
+
+
+def test_buckets_adapt_independently():
+    t = _tuner(max_wait_ms=2.0)
+    t.observe_unit(32, 1, [1.0], 5.0)      # underfilled -> climbs
+    t.observe_unit(128, 8, [500.0], 5.0)   # congested -> halves
+    assert t.wait_ms(32) == 2.5
+    assert t.wait_ms(128) == 1.0
+    assert t.snapshot() == {32: 2.5, 128: 1.0}
+
+
+# ---------------------------------------------------------------------------
+# Backlog-delay projection (the shedding policy's estimate).
+# ---------------------------------------------------------------------------
+def test_projection_is_units_ahead_times_exec_ema():
+    t = _tuner(max_batch=8)
+    assert t.projected_delay_ms(64, 5, 0) is None      # no evidence yet
+    t.observe_unit(64, 8, [1.0], 100.0)                # EMA seeds at 100ms
+    assert t.projected_delay_ms(64, 5, 0) == pytest.approx(100.0)
+    assert t.projected_delay_ms(64, 9, 0) == pytest.approx(200.0)
+    assert t.projected_delay_ms(64, 5, 3) == pytest.approx(400.0)
+    assert t.projected_delay_ms(64, 0, 3) is None      # empty bucket
+
+
+def test_projection_falls_back_to_global_ema_for_unseen_buckets():
+    t = _tuner(max_batch=8)
+    t.observe_unit(64, 8, [1.0], 100.0)
+    assert t.projected_delay_ms(256, 4, 0) == pytest.approx(100.0)
+
+
+def test_tuner_requires_autotune_config():
+    with pytest.raises(ValueError, match="autotune"):
+        Autotuner(ServiceConfig())
+
+
+# ---------------------------------------------------------------------------
+# Online-refit trigger.
+# ---------------------------------------------------------------------------
+def test_refit_policy_sample_count_trigger():
+    p = RefitPolicy(AutotuneConfig(refit_min_samples=4,
+                                   refit_max_staleness_s=None), now=0.0)
+    assert not p.due(3, 1.0)
+    assert p.due(4, 1.0)
+    p.mark(4, 1.0)
+    assert not p.due(4, 100.0)     # no fresh samples: never due
+    assert not p.due(7, 100.0)
+    assert p.due(8, 100.0)
+
+
+def test_refit_policy_staleness_trigger_needs_fresh_evidence():
+    p = RefitPolicy(AutotuneConfig(refit_min_samples=100,
+                                   refit_max_staleness_s=10.0), now=0.0)
+    assert not p.due(1, 5.0)       # fresh but not stale
+    assert p.due(1, 10.0)          # stale with fresh evidence
+    assert not p.due(0, 100.0)     # stale but nothing new to fit
+
+
+def test_autotune_config_validation():
+    with pytest.raises(ValueError):
+        AutotuneConfig(wait_min_ms=4.0, wait_max_ms=2.0)
+    with pytest.raises(ValueError):
+        AutotuneConfig(wait_decrease=1.0)
+    with pytest.raises(ValueError):
+        AutotuneConfig(target_occupancy=0.0)
+    with pytest.raises(ValueError):
+        AutotuneConfig(interval_units=0)
+    with pytest.raises(ValueError):
+        AutotuneConfig(shed_headroom=0.0)
+    assert service_config("autotuned").autotune is not None
+
+
+# ---------------------------------------------------------------------------
+# End to end: the autotuned service.
+# ---------------------------------------------------------------------------
+def test_autotuned_service_serves_and_adapts():
+    cfg = ServiceConfig(
+        max_batch=4, max_wait_ms=1.0, backend="numpy_ref",
+        autotune=AutotuneConfig(interval_units=1, delay_budget_ms=1e9))
+    svc = AsyncChordalityEngine(config=cfg)
+    try:
+        resps = gather(
+            svc.submit_many([G.cycle(9)] * 16), timeout=60)
+        assert all(r.verdict is False for r in resps)
+        snap = svc.autotune_snapshot()
+        assert snap and set(snap) == {16}
+        # partial-occupancy units under an infinite delay budget can only
+        # push the window up; any movement is counted.
+        assert svc.stats.wait_adjustments >= 0
+        assert svc.stats.n_completed == 16
+    finally:
+        svc.shutdown()
+    # static service reports no snapshot
+    svc = AsyncChordalityEngine(
+        config=ServiceConfig(max_batch=4), backend="numpy_ref")
+    try:
+        assert svc.autotune_snapshot() is None
+    finally:
+        svc.shutdown()
+
+
+def test_service_refits_router_online_from_live_samples():
+    # Two buckets' worth of live samples (distinct n) reach the trigger:
+    # the executor re-fits the router mid-traffic and clamps its support
+    # to the observed span.
+    cfg = ServiceConfig(
+        max_batch=4, max_wait_ms=60_000.0,
+        autotune=AutotuneConfig(refit_min_samples=2,
+                                refit_backend_min_samples=2))
+    svc = AsyncChordalityEngine(config=cfg)
+    try:
+        futs = svc.submit_many([G.cycle(9)] * 4)       # bucket 16
+        futs += svc.submit_many([G.clique(40)] * 4)    # bucket 64, dense
+        svc.flush(timeout=120)
+        gather(futs, timeout=10)
+        # futures resolve before the executor's refit step; poll briefly.
+        deadline = time.monotonic() + 10.0
+        while svc.stats.router_refits < 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert svc.stats.router_refits >= 1
+        assert svc.engine.router.fit_n_range == (16, 64)
+    finally:
+        svc.shutdown()

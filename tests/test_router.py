@@ -289,6 +289,29 @@ def test_refit_requires_auto_engine():
         eng.refit_router()
 
 
+def test_refit_with_single_n_samples_keeps_prior_model_and_support():
+    # Regression (ISSUE 8 bugfix): a sample log with only one distinct n
+    # cannot identify the cost model's n-slope. Pre-fix, the refit fitted
+    # anyway and collapsed fit_n_range to (64, 64) — every later query
+    # clamped to n=64 and, e.g., big sparse graphs misrouted to jax_fast.
+    eng = ChordalityEngine(backend="auto", max_batch=8)
+    _run_streams(eng, ns=(64,), passes=3)
+    prior_model = dict(eng.router.cost_model)
+    prior_range = eng.router.fit_n_range
+    assert eng.refit_router(min_samples=2) == ()
+    assert eng.router.cost_model == prior_model
+    assert eng.router.fit_n_range == prior_range
+    # routing for far-away n is untouched by the degenerate log
+    fresh = Router()
+    for d, b in ((0.005, 8), (0.3, 4)):
+        assert eng.router.choose(1024, d, b) == fresh.choose(1024, d, b)
+    # explicit opt-in overrides the distinct-n bar, but even then a
+    # single-n fit must not collapse the support interval
+    refitted = eng.refit_router(min_samples=2, min_distinct_n=1)
+    assert refitted
+    assert eng.router.fit_n_range == prior_range
+
+
 def test_stats_surface_unit_samples():
     eng = ChordalityEngine(backend="auto", max_batch=8)
     res = eng.run([_edge_graph(64, 6, s) for s in range(8)])

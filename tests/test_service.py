@@ -2,6 +2,7 @@
 semantics, stats accounting, and agreement with the synchronous session."""
 import threading
 import time
+from concurrent.futures import CancelledError, Future
 
 import numpy as np
 import pytest
@@ -9,6 +10,7 @@ import pytest
 from repro.core import generators as G
 from repro.configs.service import (
     SERVICE_CONFIGS,
+    AutotuneConfig,
     ServiceConfig,
     service_config,
 )
@@ -20,6 +22,7 @@ from repro.engine import (
     gather,
     unit_for_chunk,
 )
+from repro.engine.service import ServiceStats, _BucketQueue, _Request
 
 # Small n keeps every request in the 16/32 buckets: few jit shapes, fast.
 def _stream():
@@ -591,3 +594,292 @@ def test_asubmit_carries_witness_and_deadline_kwargs():
         resp = asyncio.run(drive(svc))
     assert resp.verdict and resp.witness.chordal
     assert resp.witness.treewidth == 5
+
+
+# ---------------------------------------------------------------------------
+# White-box injection: craft a request and admit it while the caller holds
+# the service lock. Public submit stamps t_submit before taking the lock,
+# so it cannot place requests into a specific pre-pass queue state — the
+# regression tests below need exactly that.
+# ---------------------------------------------------------------------------
+def _inject_locked(svc, graph, deadline_s=None, priority=None):
+    now = time.perf_counter()
+    req = _Request(
+        graph=graph, future=Future(), t_submit=now,
+        want_certificate=False,
+        priority=svc.config.default_priority if priority is None
+        else priority,
+        deadline=None if deadline_s is None else now + deadline_s)
+    svc._admit_locked(req)
+    return req.future
+
+
+# ---------------------------------------------------------------------------
+# Regression (ISSUE 8 bugfix 1): a request that expired between the
+# admission sweep and its bucket's drain must release its slot at drain
+# time — never ride into a unit as dead weight.
+# ---------------------------------------------------------------------------
+def test_expired_requests_release_slots_at_drain():
+    cfg = _quiet_config(max_batch=2)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        executed_pads = []
+        orig_route = svc.engine.route_unit
+
+        def slow_route(unit, graphs):
+            # Stall the pass while it routes the *first* bucket: the
+            # second bucket's deadlines lapse between the sweep and its
+            # own drain — exactly the stale-clock window.
+            if unit.n_pad == 32:
+                time.sleep(0.4)
+            return orig_route(unit, graphs)
+
+        orig_exec = svc.engine.execute_unit
+
+        def spy_exec(unit, graphs):
+            executed_pads.append(unit.n_pad)
+            return orig_exec(unit, graphs)
+
+        svc.engine.route_unit = slow_route
+        svc.engine.execute_unit = spy_exec
+
+        # Both buckets fill inside one lock hold, so one admission pass
+        # sweeps (nothing expired yet), then drains bucket 32 (slow),
+        # then drains bucket 64 — after its requests' 150 ms deadlines.
+        with svc._lock:
+            alive = [_inject_locked(svc, G.cycle(20)) for _ in range(2)]
+            dead = [_inject_locked(svc, G.cycle(40), deadline_s=0.15)
+                    for _ in range(4)]
+            svc._work_cv.notify_all()
+        assert all(f.result(timeout=60).verdict is False for f in alive)
+        deadline = time.monotonic() + 10
+        while svc.backlog and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert all(f.cancelled() for f in dead)
+        assert svc.stats.n_expired == 4
+        assert svc.backlog == 0
+        # the expired bucket never became a unit, partially dead or not
+        assert executed_pads == [32]
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Regression (ISSUE 8 bugfix 2): stats percentiles are degenerate-safe and
+# read-only; the sample buffers are bounded windows.
+# ---------------------------------------------------------------------------
+def test_stats_percentiles_degenerate_and_pure():
+    s = ServiceStats()
+    assert s.p50_queue_ms == 0.0 and s.p95_queue_ms == 0.0
+    assert s.p50_exec_ms == 0.0
+    s.record_queue_delay(5.0)
+    assert s.p50_queue_ms == 5.0 and s.p95_queue_ms == 5.0
+    s.record_queue_delay(9.0)
+    s.record_queue_delay(1.0)
+    before = list(s.queue_delays_ms)
+    assert s.p95_queue_ms >= s.p50_queue_ms > 0.0
+    # reading percentiles must not sort or mutate the buffer
+    assert s.queue_delays_ms == before == [5.0, 9.0, 1.0]
+
+
+def test_stats_sample_buffers_are_bounded_windows():
+    s = ServiceStats(window=8)
+    for i in range(100):
+        s.record_queue_delay(float(i))
+        s.record_exec_latency(float(i))
+    assert s.queue_delays_ms == [float(i) for i in range(92, 100)]
+    assert s.exec_latencies_ms == [float(i) for i in range(92, 100)]
+    # the service wires its config's window through
+    svc = AsyncChordalityEngine(
+        config=ServiceConfig(stats_window=17), backend="numpy_ref")
+    try:
+        assert svc.stats.window == 17
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Regression (ISSUE 8 bugfix 4): after shutdown(drain=False) raises the
+# no-drain flag, no interleaving may drain pending requests into units.
+# ---------------------------------------------------------------------------
+def test_admission_never_drains_after_no_drain_shutdown_flag():
+    # A full bucket is drainable on the very next pass; raising the
+    # closed+no-drain flags while it sits queued must cancel it, not
+    # drain it (pre-fix, the pass drained the full bucket and executed).
+    cfg = _quiet_config(max_batch=2)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    routed = []
+    orig_route = svc.engine.route_unit
+    svc.engine.route_unit = lambda unit, graphs: (
+        routed.append(unit.n_pad), orig_route(unit, graphs))[1]
+    with svc._lock:
+        futs = [_inject_locked(svc, G.cycle(9)) for _ in range(2)]
+        svc._closed = True
+        svc._no_drain = True
+        svc._work_cv.notify_all()
+    for f in futs:
+        with pytest.raises(CancelledError):
+            f.result(timeout=30)
+    assert routed == []
+    assert svc.stats.n_cancelled == 2
+    assert svc.backlog == 0
+    svc.shutdown()          # joins the (already exiting) threads
+
+
+def test_shutdown_no_drain_is_terminal():
+    cfg = _quiet_config()
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    calls = []
+    orig_exec = svc.engine.execute_unit
+    svc.engine.execute_unit = lambda unit, graphs: (
+        calls.append(unit.n_pad), orig_exec(unit, graphs))[1]
+    futs = svc.submit_many([G.cycle(9), G.clique(9)])
+    svc.shutdown(drain=False)
+    # no executor work after shutdown returned, and no way to add any
+    assert calls == []
+    assert all(f.cancelled() for f in futs)
+    assert not svc._executor.is_alive() and not svc._admitter.is_alive()
+    with pytest.raises(ServiceClosedError):
+        svc.submit(G.cycle(5))
+    time.sleep(0.05)
+    assert calls == []
+
+
+# ---------------------------------------------------------------------------
+# Priority classes: weighted-fair drain order, response echo, and the
+# shedding policy's class accounting (ISSUE 8 tentpole + satellite tests).
+# ---------------------------------------------------------------------------
+def _dummy_request(priority):
+    return _Request(graph=G.cycle(4), future=Future(),
+                    t_submit=0.0, want_certificate=False,
+                    priority=priority)
+
+
+def test_bucket_queue_weighted_fair_order():
+    bq = _BucketQueue((1.0, 2.0, 4.0))
+    for p in (0, 0, 0, 2, 2, 2):
+        bq.push(_dummy_request(p))
+    order = [bq.pop().priority for _ in range(len(bq))]
+    # class 2 holds 4x class 0's weight: it wins 2 of every 3 contested
+    # pops, and class 0 never starves.
+    assert order == [2, 2, 0, 2, 0, 0]
+    with pytest.raises(IndexError):
+        bq.pop()
+
+
+def test_bucket_queue_removal_and_iteration_order():
+    bq = _BucketQueue((1.0, 2.0))
+    reqs = [_dummy_request(p) for p in (1, 0, 1)]
+    for r in reqs:
+        bq.push(r)
+    assert [r.priority for r in bq.requests()] == [0, 1, 1]
+    assert bq.remove(reqs[0]) and not bq.remove(reqs[0])
+    assert len(bq) == 2
+    assert [r.priority for r in bq.drain_all()] == [0, 1]
+    assert len(bq) == 0
+
+
+def test_priority_classes_drain_weighted_fair():
+    cfg = _quiet_config(max_batch=3)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        unit_orders = []
+        orig = svc._execute
+        svc._execute = lambda au: (
+            unit_orders.append([r.priority for r in au.requests]),
+            orig(au))[1]
+        # Both classes queued before any drain: two full units follow.
+        with svc._lock:
+            futs = [_inject_locked(svc, G.cycle(9), priority=p)
+                    for p in (0, 0, 0, 2, 2, 2)]
+            svc._work_cv.notify_all()
+        resps = gather(futs, timeout=60)
+        assert unit_orders == [[2, 2, 0], [2, 0, 0]]
+        assert [r.priority for r in resps] == [0, 0, 0, 2, 2, 2]
+    finally:
+        svc.shutdown()
+
+
+def test_priority_rides_witness_and_recognition_upgrades():
+    # Mixed-extras unit: priorities echo per request and the unit takes
+    # both whole-unit upgrades exactly once.
+    cfg = _quiet_config(max_batch=8)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        f_plain0 = svc.submit(G.cycle(9), priority=0)
+        f_wit = svc.submit(G.cycle(9), want_witness=True, priority=2)
+        f_rec = svc.submit(G.cycle(9), properties=["interval"], priority=1)
+        f_plain2 = svc.submit(G.cycle(9), priority=2)
+        svc.flush(timeout=60)
+        r0, rw, rr, r2 = gather(
+            [f_plain0, f_wit, f_rec, f_plain2], timeout=10)
+        assert [r0.priority, rw.priority, rr.priority, r2.priority] \
+            == [0, 2, 1, 2]
+        assert rw.witness is not None and not rw.witness.chordal
+        assert r0.witness is None and r2.witness is None
+        assert rr.properties == {"chordal": False, "interval": False}
+        assert r0.properties is None
+        assert svc.stats.witness_upgraded == 1
+        assert svc.stats.recognition_upgraded == 1
+        assert svc.stats.occupancy_histogram == {4: 1}
+    finally:
+        svc.shutdown()
+
+
+def test_submit_priority_validation():
+    with AsyncChordalityEngine(
+            config=_quiet_config(), backend="numpy_ref") as svc:
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit(G.cycle(4), priority=3)
+        with pytest.raises(ValueError, match="priority"):
+            svc.submit(G.cycle(4), priority=-1)
+    with pytest.raises(ValueError, match="priority_weights"):
+        ServiceConfig(priority_weights=())
+    with pytest.raises(ValueError, match="default_priority"):
+        ServiceConfig(priority_weights=(1.0,), default_priority=1)
+
+
+def test_load_shedding_counts_by_priority_class():
+    cfg = ServiceConfig(
+        max_batch=16, max_wait_ms=60_000.0,
+        autotune=AutotuneConfig(wait_max_ms=60_000.0,
+                                interval_units=10**6))
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        # Seed the tuner's exec EMA: one unit "took" 500 ms, so any
+        # queued request with < 500 ms of remaining deadline is
+        # projected to miss.
+        svc._autotuner.observe_unit(16, 8, [1.0], 500.0)
+        lo = svc.submit_many([G.cycle(9)] * 4, priority=0,
+                             deadline_ms=250.0)
+        hi = svc.submit_many([G.cycle(9)] * 4, priority=2,
+                             deadline_ms=60_000.0)
+        deadline = time.monotonic() + 10
+        while svc.stats.n_shed < 4 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert all(f.cancelled() for f in lo)
+        assert svc.stats.n_shed == 4
+        assert svc.stats.shed_by_priority == {0: 4}
+        assert svc.stats.n_expired == 0
+        # the high class was never projected to miss: it still serves
+        svc.flush(timeout=60)
+        assert all(f.result(1).verdict is False for f in hi)
+    finally:
+        svc.shutdown()
+
+
+def test_deadline_free_requests_are_never_shed():
+    cfg = ServiceConfig(
+        max_batch=16, max_wait_ms=60_000.0,
+        autotune=AutotuneConfig(wait_max_ms=60_000.0,
+                                interval_units=10**6))
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        svc._autotuner.observe_unit(16, 8, [1.0], 500.0)
+        futs = svc.submit_many([G.cycle(9)] * 4, priority=0)  # no deadline
+        time.sleep(0.1)
+        assert svc.stats.n_shed == 0
+        svc.flush(timeout=60)
+        assert all(f.result(1).verdict is False for f in futs)
+    finally:
+        svc.shutdown()

@@ -876,3 +876,69 @@ def bench_saturation(
                 f"p95={r['p95_at_knee_ms']:.2f}ms"),
         })
     return rows, artifact
+
+
+def bench_obs(n=256, batch=32, requests=96, repeats=7):
+    """PR 9 tracing-overhead table: ``(rows, artifact)``.
+
+    The obs acceptance bar is "~zero-cost when disabled, <= 5% when
+    enabled" on the serving hot path. This measures the same
+    ``ChordalityEngine.run`` stream (n=256 graphs, jax_fast, warm
+    compile cache) with tracing off and with tracing on into a JSONL
+    sink (the most expensive configuration: every unit's span tree is
+    serialized), interleaving the two arms so clock drift and thermal
+    noise hit both medians equally. ``overhead_x`` (enabled/disabled
+    median) is what ``perf_gate.py --obs-overhead-ceiling`` enforces
+    against the committed ``BENCH_obs.json``.
+    """
+    import io
+    import time
+
+    from repro import obs
+    from repro.core import generators as G
+    from repro.engine import ChordalityEngine
+
+    graphs = [G.gnp(n, 0.05, seed=s) for s in range(requests)]
+    eng = ChordalityEngine(backend="jax_fast", max_batch=batch)
+    eng.run(graphs)                    # warm the compile cache (both arms)
+    obs.disable_tracing()
+    times = {"off": [], "on": []}
+    records_per_run = 0
+    try:
+        for _ in range(repeats):
+            for mode in ("off", "on"):
+                if mode == "on":
+                    sink = obs.JsonlSink(io.StringIO())
+                    obs.enable_tracing(sink)
+                t0 = time.perf_counter()
+                eng.run(graphs)
+                dt_ms = (time.perf_counter() - t0) * 1e3
+                if mode == "on":
+                    records_per_run = sink.n_written
+                    obs.disable_tracing()
+                times[mode].append(dt_ms)
+    finally:
+        obs.disable_tracing()
+    off_ms = float(np.median(times["off"]))
+    on_ms = float(np.median(times["on"]))
+    overhead = on_ms / off_ms if off_ms > 0 else float("nan")
+    key = f"n{n}_B{batch}"
+    artifact = {
+        "meta": {
+            "n": n, "batch": batch, "requests": requests,
+            "repeats": repeats, "backend": "jax_fast",
+            "sink": "jsonl(StringIO)",
+        },
+        "disabled_ms": {key: round(off_ms, 3)},
+        "enabled_ms": {key: round(on_ms, 3)},
+        "overhead_x": {key: round(overhead, 4)},
+        "trace_records_per_run": {key: records_per_run},
+    }
+    rows = [
+        {"name": f"obs_disabled_{key}", "us_per_call": off_ms * 1e3,
+         "derived": f"requests={requests}"},
+        {"name": f"obs_enabled_{key}", "us_per_call": on_ms * 1e3,
+         "derived": (f"overhead_x={overhead:.4f};"
+                     f"records={records_per_run}")},
+    ]
+    return rows, artifact

@@ -16,6 +16,12 @@ baseline and **fails the build** if a structural perf property regressed:
 * ``lexbfs_batched_speedup_vs_scan`` — wall-time speedup factors. Noisy
   on shared CI boxes, so the gate is loose: a fresh factor below
   ``tolerance`` × baseline (default 0.5) fails; anything above passes.
+* ``BENCH_obs.json`` — the tracing-overhead ratio
+  (``overhead_x`` = enabled/disabled median wall on the n=256 hot path)
+  may not exceed ``--obs-overhead-ceiling`` (default 1.05, the PR 9
+  "≤5% when enabled" acceptance bar). Intra-artifact: both medians come
+  from the same interleaved run on the same box, so no baseline file is
+  needed and box-speed drift cancels.
 * ``BENCH_saturation.json`` — per-config knee throughput may not
   collapse below ``tolerance`` × the committed knee, and the fresh
   ``autotuned_vs_static_best.knee_ratio`` (an intra-artifact ratio, so
@@ -36,7 +42,9 @@ Usage::
         [--witness-fresh BENCH_witness.json] \
         [--recognition-fresh BENCH_recognition.json] \
         [--saturation-fresh BENCH_saturation.json] \
-        [--tolerance 0.5] [--knee-ratio-floor 0.8]
+        [--obs-fresh BENCH_obs.json] \
+        [--tolerance 0.5] [--knee-ratio-floor 0.8] \
+        [--obs-overhead-ceiling 1.05]
 
 ``--baseline`` defaults to ``git show HEAD:<fresh-name>`` — the artifact
 as committed, which is what "no worse than the repo claims" means.
@@ -177,6 +185,25 @@ def gate_saturation_ratio(
     return []
 
 
+def gate_obs_overhead(
+    fresh: Dict, label: str, ceiling: float
+) -> List[str]:
+    """Intra-artifact gate: tracing-enabled wall may not exceed
+    ``ceiling`` × tracing-disabled wall. Both medians are measured in the
+    same interleaved run (``bench_obs``), so the ratio is immune to
+    absolute box speed; the ceiling IS the acceptance bar ("tracing
+    costs ≤5% on the hot path"), not a drift tolerance. Needs no
+    baseline file."""
+    errs = []
+    for name, ratio in sorted(fresh.get("overhead_x", {}).items()):
+        if float(ratio) > ceiling:
+            errs.append(
+                f"{label}.overhead_x[{name}]: {ratio} > ceiling "
+                f"{ceiling} — tracing costs more than "
+                f"{(ceiling - 1.0) * 100:.0f}% on the hot path")
+    return errs
+
+
 def run_gate(
     fresh_path: str = "BENCH_kernels.json",
     baseline: Optional[str] = None,
@@ -186,8 +213,10 @@ def run_gate(
     recognition_baseline: Optional[str] = None,
     saturation_fresh: Optional[str] = "BENCH_saturation.json",
     saturation_baseline: Optional[str] = None,
+    obs_fresh: Optional[str] = "BENCH_obs.json",
     tolerance: float = 0.5,
     knee_ratio_floor: float = 0.8,
+    obs_overhead_ceiling: float = 1.05,
 ) -> List[str]:
     """All gate failures across both artifacts (empty = pass)."""
     errs: List[str] = []
@@ -265,6 +294,18 @@ def run_gate(
             else:
                 print(f"# perf_gate: no committed baseline for "
                       f"{saturation_fresh}; skipping", file=sys.stderr)
+
+    if obs_fresh is not None:
+        try:
+            with open(obs_fresh) as f:
+                ofresh = json.load(f)
+        except OSError:
+            ofresh = None
+        if ofresh is not None:
+            # the overhead ratio is self-contained — gate it with no
+            # committed baseline required
+            errs += gate_obs_overhead(
+                ofresh, obs_fresh, obs_overhead_ceiling)
     return errs
 
 
@@ -279,10 +320,13 @@ def main(argv=None) -> int:
     ap.add_argument("--recognition-baseline", default=None)
     ap.add_argument("--saturation-fresh", default="BENCH_saturation.json")
     ap.add_argument("--saturation-baseline", default=None)
+    ap.add_argument("--obs-fresh", default="BENCH_obs.json")
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="speedup floor / overhead ceiling factor")
     ap.add_argument("--knee-ratio-floor", type=float, default=0.8,
                     help="min fresh autotuned/static-best knee ratio")
+    ap.add_argument("--obs-overhead-ceiling", type=float, default=1.05,
+                    help="max tracing enabled/disabled wall ratio")
     args = ap.parse_args(argv)
     errs = run_gate(
         fresh_path=args.fresh, baseline=args.baseline,
@@ -292,8 +336,10 @@ def main(argv=None) -> int:
         recognition_baseline=args.recognition_baseline,
         saturation_fresh=args.saturation_fresh,
         saturation_baseline=args.saturation_baseline,
+        obs_fresh=args.obs_fresh,
         tolerance=args.tolerance,
-        knee_ratio_floor=args.knee_ratio_floor)
+        knee_ratio_floor=args.knee_ratio_floor,
+        obs_overhead_ceiling=args.obs_overhead_ceiling)
     if errs:
         for e in errs:
             print(f"PERF REGRESSION: {e}", file=sys.stderr)

@@ -25,7 +25,7 @@ def main(argv=None) -> int:
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
                          "kernels,lexbfs,engine,router,service,witness,"
-                         "recognition,saturation")
+                         "recognition,saturation,obs")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -35,7 +35,7 @@ def main(argv=None) -> int:
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
          "lexbfs", "engine", "router", "service", "witness", "recognition",
-         "saturation"]
+         "saturation", "obs"]
         if args.tables == "all" else args.tables.split(",")
     )
 
@@ -216,6 +216,26 @@ def main(argv=None) -> int:
         with open("BENCH_saturation.json", "w") as f:
             json.dump(artifact, f, indent=2, sort_keys=True)
         print("# wrote BENCH_saturation.json", file=sys.stderr)
+    if "obs" in which:
+        print("# obs bench - tracing overhead enabled vs disabled "
+              "(-> BENCH_obs.json)", file=sys.stderr)
+        # All tiers keep n=256/B=32 so the smoke cell shares its key
+        # with the committed full-run artifact — the perf gate's
+        # overhead ceiling reads exactly that cell.
+        if args.smoke:
+            rows, artifact = kernel_bench.bench_obs(
+                n=256, batch=32, requests=32, repeats=3)
+        elif args.quick:
+            rows, artifact = kernel_bench.bench_obs(
+                n=256, batch=32, requests=64, repeats=5)
+        else:
+            rows, artifact = kernel_bench.bench_obs()
+        emit(rows)
+        import json
+
+        with open("BENCH_obs.json", "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_obs.json", file=sys.stderr)
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

@@ -123,6 +123,27 @@ def main():
               f"-> backend={unit.backend}")
     print(f"  requests per backend: {result.stats.backend_histogram}")
 
+    # --- observability: trace one request end to end (DESIGN.md §15) -------
+    print("\n=== obs: one traced service request (closed span tree) ===")
+    from repro import obs
+    from repro.engine import AsyncChordalityEngine
+
+    obs.enable_tracing(obs.ListSink())
+    with AsyncChordalityEngine(backend="jax_fast") as svc:
+        resp = svc.submit(
+            G.random_chordal(48, k=3, seed=7)).result(timeout=120)
+    obs.disable_tracing()
+
+    def show(span, depth=0):
+        attrs = {k: v for k, v in span.attrs.items()
+                 if not isinstance(v, float)}
+        print(f"  {'  ' * depth}{span.name:<10s}"
+              f"{span.duration_ms:9.3f} ms  {attrs}")
+        for c in span.children:
+            show(c, depth + 1)
+
+    show(resp.trace)  # queue + exec + finalize partition the wall time
+
     # --- the LexBFS order itself -------------------------------------------
     print("\n=== LexBFS order of a path (walks the path) ===")
     print("  ", np.asarray(lexbfs(jnp.asarray(G.path(8).adj))).tolist())

@@ -126,6 +126,20 @@ def main():
         # independent checkers can validate without trusting the engine.
         asyncio_witness_demo(svc, requests, kinds)
 
+        # The scrape surface a dashboard would poll (DESIGN.md §15):
+        # stage percentiles, outcome counts, backend mix, cache traffic.
+        t = svc.telemetry()
+        q, e = t["stages"]["queue_ms"], t["stages"]["exec_ms"]
+        print("  telemetry:")
+        print(f"    stages: queue p50 {q['p50']:.2f}ms / p95 "
+              f"{q['p95']:.2f}ms, exec p50 {e['p50']:.2f}ms / p95 "
+              f"{e['p95']:.2f}ms")
+        print(f"    requests: {t['requests']}")
+        print(f"    backend mix: {t['backend_mix']}, cache hit ratio "
+              f"{t['cache']['hit_ratio']:.2f} "
+              f"({t['cache']['hits']} hits / {t['cache']['misses']} "
+              f"misses, {t['cache']['entries']} executables)")
+
 
 def asyncio_witness_demo(svc, requests, kinds, k=4):
     """await-style clients: deadline-bounded witness requests."""

@@ -102,6 +102,11 @@ class Autotuner:
         self.knobs: AutotuneConfig = config.autotune
         self._buckets: Dict[int, _BucketState] = {}
         self._global_exec_ema_ms: Optional[float] = None
+        #: The last AIMD movement (``observe_unit`` returned True), as
+        #: {n_pad, old_wait_ms, wait_ms, reason, mean_occupancy,
+        #: p95_delay_ms} — the service publishes it as an obs event and
+        #: the ``repro_autotune_wait_ms`` gauge. None until a first move.
+        self.last_decision: Optional[Dict] = None
 
     def _bucket(self, n_pad: int) -> _BucketState:
         st = self._buckets.get(n_pad)
@@ -177,13 +182,26 @@ class Autotuner:
         st.delays_ms.clear()
         st.units_seen = 0
         old = st.wait_ms
+        reason = "hold"
         if p95 > self.knobs.delay_budget_ms:
             st.wait_ms = max(self.knobs.wait_min_ms,
                              st.wait_ms * self.knobs.wait_decrease)
+            reason = "congestion"
         elif mean_occ < self.knobs.target_occupancy:
             st.wait_ms = min(self.knobs.wait_max_ms,
                              st.wait_ms + self.knobs.wait_increase_ms)
-        return st.wait_ms != old
+            reason = "underfill"
+        moved = st.wait_ms != old
+        if moved:
+            self.last_decision = {
+                "n_pad": n_pad,
+                "old_wait_ms": old,
+                "wait_ms": st.wait_ms,
+                "reason": reason,
+                "mean_occupancy": mean_occ,
+                "p95_delay_ms": p95,
+            }
+        return moved
 
     def snapshot(self) -> Dict[int, float]:
         """{n_pad: current wait_ms} for every bucket seen so far."""

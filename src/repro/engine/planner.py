@@ -23,8 +23,22 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.configs.shapes import engine_batch_bucket
 from repro.graphs.structure import Graph, bucket_graphs
+
+# Process-wide cache traffic, aggregated across every CompileCache
+# instance (each cache also keeps its own int counters for per-engine
+# stats). Steady-state serving shows hits climbing while misses stay
+# flat — the compile-amortization story as a scrapeable metric.
+_M_CACHE_HITS = obs.registry.counter(
+    "repro_compile_cache_hits_total", "compile-cache executable reuses")
+_M_CACHE_MISSES = obs.registry.counter(
+    "repro_compile_cache_misses_total",
+    "compile-cache misses (each pays trace + compile)")
+_M_COMPILE_S = obs.registry.counter(
+    "repro_compile_seconds_total",
+    "wall seconds spent building executables on cache misses")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -194,22 +208,30 @@ class CompileCache:
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
-            if kind == "verdict":
-                fn = backend.compile_batch(n_pad, batch)
-            elif kind == "fused":
-                fn = backend.compile_fused_batch(n_pad, batch)
-            elif kind == "fused_packed":
-                fn = backend.compile_fused_packed_batch(n_pad, batch)
-            elif kind == "witness":
-                fn = backend.compile_witness_batch(n_pad, batch)
-            elif kind == "fused_witness":
-                fn = backend.compile_fused_witness_batch(n_pad, batch)
-            elif kind.startswith("recognition:"):
-                props = tuple(kind[len("recognition:"):].split(","))
-                fn = backend.compile_recognition_batch(n_pad, batch, props)
-            else:
-                raise ValueError(f"unknown executable kind {kind!r}")
+            _M_CACHE_MISSES.inc()
+            with obs.span("compile", backend=backend.name, kind=kind,
+                          n_pad=n_pad, batch=batch) as sp:
+                t0 = obs.clock.now()
+                if kind == "verdict":
+                    fn = backend.compile_batch(n_pad, batch)
+                elif kind == "fused":
+                    fn = backend.compile_fused_batch(n_pad, batch)
+                elif kind == "fused_packed":
+                    fn = backend.compile_fused_packed_batch(n_pad, batch)
+                elif kind == "witness":
+                    fn = backend.compile_witness_batch(n_pad, batch)
+                elif kind == "fused_witness":
+                    fn = backend.compile_fused_witness_batch(n_pad, batch)
+                elif kind.startswith("recognition:"):
+                    props = tuple(kind[len("recognition:"):].split(","))
+                    fn = backend.compile_recognition_batch(
+                        n_pad, batch, props)
+                else:
+                    raise ValueError(f"unknown executable kind {kind!r}")
+                _M_COMPILE_S.inc(obs.clock.now() - t0)
+                sp.attrs["hit"] = False
             self._fns[key] = fn
         else:
             self.hits += 1
+            _M_CACHE_HITS.inc()
         return fn

@@ -67,7 +67,6 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-import time
 from concurrent.futures import Future
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -75,6 +74,8 @@ import collections
 
 import numpy as np
 
+from repro import obs
+from repro.obs import clock as _clock
 from repro.configs.service import ServiceConfig
 from repro.engine.autotune import Autotuner, RefitPolicy
 from repro.engine.planner import unit_for_chunk
@@ -110,6 +111,9 @@ class ServiceResponse:
     batch: int = 0         # compiled batch dimension of its unit
     occupancy: int = 0     # real requests in the unit (rest = padding)
     priority: int = 0      # class the request was admitted under
+    #: the request's closed span tree (repro.obs.Span rooted at
+    #: "request") when tracing was enabled at submit time, else None.
+    trace: Optional[object] = None
 
 
 # eq=False: requests are identity objects — queue membership tests and
@@ -123,7 +127,14 @@ class _Request:
     want_witness: bool = False
     properties: Tuple[str, ...] = ()     # normalized; empty = verdict-only
     priority: int = 0                    # index into priority_weights
-    deadline: Optional[float] = None     # absolute perf_counter seconds
+    #: absolute repro.obs.clock seconds (one monotonic clock for
+    #: deadlines, waits, and spans alike — see repro/obs/clock.py)
+    deadline: Optional[float] = None
+    # Tracing (None unless the tracer was enabled at submit): the open
+    # "request" root and its "queue" child, carried across the submit ->
+    # admission -> executor thread hops and closed at resolution.
+    trace: Optional[object] = None
+    queue_span: Optional[object] = None
 
 
 @dataclasses.dataclass
@@ -132,6 +143,9 @@ class _AdmittedUnit:
 
     unit: object                     # WorkUnit with indices 0..len(reqs)-1
     requests: List[_Request]
+    #: admission-time "plan" span (unit formation + routing), adopted
+    #: into each live request's trace at execution; None when untraced.
+    plan_span: Optional[object] = None
 
 
 class _BucketQueue:
@@ -311,6 +325,10 @@ class ServiceStats:
         return self._pct(self.exec_latencies_ms, 50.0)
 
     @property
+    def p95_exec_ms(self) -> float:
+        return self._pct(self.exec_latencies_ms, 95.0)
+
+    @property
     def mean_occupancy(self) -> float:
         """Mean real requests per executed unit."""
         total = sum(k * v for k, v in self.occupancy_histogram.items())
@@ -386,8 +404,38 @@ class AsyncChordalityEngine:
         if self.config.autotune is not None \
                 and self.engine.router is not None:
             self._refit_policy = RefitPolicy(
-                self.config.autotune, time.perf_counter(),
+                self.config.autotune, _clock.now(),
                 self.engine.router_sample_count)
+        # Observability (DESIGN.md §15): the process tracer (checked per
+        # request — near-free when disabled) and the registry series the
+        # service publishes into. Metrics are always on.
+        self._tracer = obs.get_tracer()
+        _m = obs.registry
+        self._m_requests = _m.counter(
+            "repro_requests_total",
+            "service requests by terminal outcome", labels=("outcome",))
+        self._m_units = _m.counter(
+            "repro_units_total", "work units executed", labels=("kind",))
+        self._m_backend = _m.counter(
+            "repro_backend_requests_total",
+            "requests served per backend", labels=("backend",))
+        self._m_queue_ms = _m.histogram(
+            "repro_queue_delay_ms", "submit -> unit execution start")
+        self._m_exec_ms = _m.histogram(
+            "repro_unit_exec_ms", "unit executable wall time")
+        self._m_occupancy = _m.histogram(
+            "repro_unit_occupancy", "live requests per executed unit",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128))
+        self._m_wait_adjust = _m.counter(
+            "repro_autotune_wait_adjustments_total",
+            "AIMD wait-window movements")
+        self._m_wait_ms = _m.gauge(
+            "repro_autotune_wait_ms",
+            "current adapted batching window per bucket",
+            labels=("n_pad",))
+        self._m_refits = _m.counter(
+            "repro_router_refits_total",
+            "online router refits that updated at least one backend")
         self._ready: "queue.Queue[Optional[_AdmittedUnit]]" = queue.Queue()
         self._admitter = threading.Thread(
             target=self._admission_loop, name="chordality-admission",
@@ -487,7 +535,7 @@ class AsyncChordalityEngine:
             raise ValueError(
                 f"priority {priority} outside classes "
                 f"0..{self.config.n_priorities - 1}")
-        t_submit = time.perf_counter()
+        t_submit = _clock.now()
         fut: Future = Future()
         req = _Request(
             graph=graph, future=fut, t_submit=t_submit,
@@ -497,21 +545,32 @@ class AsyncChordalityEngine:
             priority=priority,
             deadline=None if deadline_ms is None
             else t_submit + deadline_ms / 1e3)
-        deadline = None if timeout is None else \
-            time.monotonic() + timeout
+        if self._tracer.enabled:
+            req.trace = self._tracer.start_span(
+                "request", t=t_submit, n_nodes=graph.n_nodes,
+                priority=priority, want_witness=want_witness,
+                want_certificate=want_certificate,
+                properties=list(props))
+            req.queue_span = req.trace.child("queue", t=t_submit)
+        # Admission-wait deadline: same obs clock as request deadlines —
+        # mixing clock sources here is exactly the bug PR 9 removed.
+        deadline = None if timeout is None else _clock.now() + timeout
         with self._lock:
             while True:
                 if self._closed:
+                    self._resolve_request_locked(req, "rejected")
                     raise ServiceClosedError("service is shut down")
                 if self._backlog < self.config.max_queue:
                     break
                 if deadline is None:
                     self.stats.n_rejected += 1
+                    self._resolve_request_locked(req, "rejected")
                     raise QueueFullError(
                         f"backlog at max_queue={self.config.max_queue}")
-                remaining = deadline - time.monotonic()
+                remaining = deadline - _clock.now()
                 if remaining <= 0:
                     self.stats.n_rejected += 1
+                    self._resolve_request_locked(req, "rejected")
                     raise QueueFullError(
                         f"backlog still full after {timeout}s")
                 self._done_cv.wait(remaining)
@@ -526,6 +585,8 @@ class AsyncChordalityEngine:
             self._n_deadlined += 1
         n_pad = bucket_npad(
             max(req.graph.n_nodes, 1), self.engine.buckets)
+        if req.trace is not None:
+            req.trace.attrs["n_pad"] = n_pad
         bq = self._pending.get(n_pad)
         if bq is None:
             bq = self._pending[n_pad] = _BucketQueue(
@@ -594,7 +655,7 @@ class AsyncChordalityEngine:
         config's ``drain_timeout_s``).
         """
         t = self.config.drain_timeout_s if timeout is None else timeout
-        deadline = time.monotonic() + t
+        deadline = _clock.now() + t
         with self._lock:
             while self._backlog > 0:
                 # Re-assert every wakeup: admission clears the flag once
@@ -602,7 +663,7 @@ class AsyncChordalityEngine:
                 # would otherwise sit out its full batching window.
                 self._force_drain = True
                 self._work_cv.notify_all()
-                remaining = deadline - time.monotonic()
+                remaining = deadline - _clock.now()
                 if remaining <= 0:
                     raise TimeoutError(
                         f"backlog {self._backlog} after {t}s flush")
@@ -654,6 +715,24 @@ class AsyncChordalityEngine:
             return self._backlog
 
     # -- admission loop ----------------------------------------------------
+    def _resolve_request_locked(self, req: _Request, outcome: str,
+                                t: Optional[float] = None) -> None:
+        """Terminal observability bookkeeping for one request: count the
+        outcome and, when traced, close + emit its span tree. Idempotent
+        per request (the trace is detached on first resolution); safe for
+        the pre-admission reject path too (nothing here needs the lock —
+        the metric and sink carry their own)."""
+        self._m_requests.inc(outcome=outcome)
+        if req.trace is None:
+            return
+        tnow = _clock.now() if t is None else t
+        if req.queue_span is not None and req.queue_span.t_end is None:
+            req.queue_span.end(tnow)
+        req.trace.attrs["outcome"] = outcome
+        req.trace.end(tnow)
+        self._tracer.finish(req.trace)
+        req.trace = None
+
     def _cancel_pending_locked(self) -> None:
         """Cancel every queued request and release its backlog slot."""
         for bq in self._pending.values():
@@ -662,6 +741,7 @@ class AsyncChordalityEngine:
                     self._n_deadlined -= 1
                 if req.future.cancel():
                     self.stats.n_cancelled += 1
+                self._resolve_request_locked(req, "cancelled")
                 self._backlog -= 1
         self._done_cv.notify_all()
 
@@ -685,9 +765,11 @@ class AsyncChordalityEngine:
                     lambda r: r.deadline is not None and now >= r.deadline):
                 if req.future.cancelled():  # client beat the deadline
                     self.stats.n_cancelled += 1
+                    self._resolve_request_locked(req, "cancelled", t=now)
                 else:
                     req.future.cancel()
                     self.stats.n_expired += 1
+                    self._resolve_request_locked(req, "expired", t=now)
                 self._backlog -= 1
                 self._n_deadlined -= 1
                 dropped += 1
@@ -734,12 +816,14 @@ class AsyncChordalityEngine:
                     break
                 if victim.future.cancelled():
                     self.stats.n_cancelled += 1
+                    self._resolve_request_locked(victim, "cancelled", t=now)
                 else:
                     victim.future.cancel()
                     self.stats.n_shed += 1
                     self.stats.shed_by_priority[victim.priority] = \
                         self.stats.shed_by_priority.get(
                             victim.priority, 0) + 1
+                    self._resolve_request_locked(victim, "shed", t=now)
                 self._backlog -= 1
                 self._n_deadlined -= 1
                 shed += 1
@@ -778,7 +862,7 @@ class AsyncChordalityEngine:
             admitted: List[_AdmittedUnit] = []
             with self._lock:
                 while True:
-                    now = time.perf_counter()
+                    now = _clock.now()
                     next_expiry = self._expire_locked(now)
                     drain, next_wait = self._drainable(now)
                     if drain:
@@ -818,7 +902,7 @@ class AsyncChordalityEngine:
         ``test_expired_requests_release_slots_at_drain``).
         """
         bq = self._pending[n_pad]
-        now = time.perf_counter()
+        now = _clock.now()
         out: List[_AdmittedUnit] = []
         reqs: List[_Request] = []
         while bq and len(reqs) < self.config.max_batch:
@@ -827,12 +911,14 @@ class AsyncChordalityEngine:
                 self._n_deadlined -= 1     # leaves the queue either way
             if req.future.cancelled():
                 self.stats.n_cancelled += 1
+                self._resolve_request_locked(req, "cancelled", t=now)
                 self._backlog -= 1
                 self._done_cv.notify_all()
                 continue
             if req.deadline is not None and now >= req.deadline:
                 req.future.cancel()
                 self.stats.n_expired += 1
+                self._resolve_request_locked(req, "expired", t=now)
                 self._backlog -= 1
                 self._done_cv.notify_all()
                 continue
@@ -844,6 +930,13 @@ class AsyncChordalityEngine:
                   else "forced" if self._force_drain else "timeout")
         self.stats.drain_reasons[reason] = \
             self.stats.drain_reasons.get(reason, 0) + 1
+        # Unit formation + routing as a "plan" span. It overlaps the
+        # requests' queue stage (planning happens while they sit queued),
+        # so it is adopted into each trace as its own root child rather
+        # than splitting the queue span.
+        plan_span = self._tracer.start_span(
+            "plan", t=now, n_pad=n_pad, count=len(reqs), reason=reason) \
+            if self._tracer.enabled else None
         unit = unit_for_chunk(
             n_pad, len(reqs), self.config.max_batch)
         try:
@@ -855,12 +948,19 @@ class AsyncChordalityEngine:
                 if r.future.set_running_or_notify_cancel():
                     r.future.set_exception(e)
                     self.stats.n_failed += 1
+                    self._resolve_request_locked(r, "failed")
                 else:
                     self.stats.n_cancelled += 1
+                    self._resolve_request_locked(r, "cancelled")
                 self._backlog -= 1
             self._done_cv.notify_all()
             return out
-        out.append(_AdmittedUnit(unit=unit, requests=reqs))
+        if plan_span is not None:
+            plan_span.attrs["backend"] = unit.backend
+            plan_span.attrs["batch"] = unit.batch
+            plan_span.end()
+        out.append(_AdmittedUnit(
+            unit=unit, requests=reqs, plan_span=plan_span))
         return out
 
     # -- executor loop -----------------------------------------------------
@@ -882,22 +982,37 @@ class AsyncChordalityEngine:
             for r in au.requests:
                 if r.future.cancelled():
                     self.stats.n_cancelled += 1
+                    self._resolve_request_locked(r, "cancelled")
                 elif r.future.done():
                     continue                        # already resolved
                 else:
                     if r.future.set_running_or_notify_cancel():
                         r.future.set_exception(exc)
                         self.stats.n_failed += 1
+                        self._resolve_request_locked(r, "failed")
                     else:
                         self.stats.n_cancelled += 1
+                        self._resolve_request_locked(r, "cancelled")
                 self._backlog -= 1
             self._done_cv.notify_all()
 
     def _execute(self, au: _AdmittedUnit) -> None:
-        t_start = time.perf_counter()
+        t_start = _clock.now()
         live = [r.future.set_running_or_notify_cancel()
                 for r in au.requests]
         graphs = [r.graph for r in au.requests]
+        # The shared "exec" span: entered on this executor thread so the
+        # session's unit/realize/compile/dispatch spans nest inside it,
+        # emit=False because it is adopted into each live request's root
+        # rather than emitted standalone. Queue spans close at its exact
+        # start instant so queue+exec+finalize sums to the root duration.
+        exec_span = self._tracer.span(
+            "exec", emit=False, n_pad=au.unit.n_pad, batch=au.unit.batch)
+        if self._tracer.enabled:
+            exec_span.t_start = t_start
+            for r in au.requests:
+                if r.queue_span is not None and r.queue_span.t_end is None:
+                    r.queue_span.end(t_start)
         # One witness-wanting live request upgrades the whole unit to the
         # fused witness executable: the certificates are batched, so they
         # ride the unit's single device call instead of per-request passes.
@@ -908,39 +1023,46 @@ class AsyncChordalityEngine:
         unit_wits: Optional[List] = None
         unit_recs: Optional[tuple] = None   # (props, batch, results)
         try:
-            prop_union = set()
-            for r, ok in zip(au.requests, live):
-                if ok:
-                    prop_union.update(r.properties)
-            if prop_union:
-                from repro.recognition import normalize_properties
+            with exec_span:
+                prop_union = set()
+                for r, ok in zip(au.requests, live):
+                    if ok:
+                        prop_union.update(r.properties)
+                if prop_union:
+                    from repro.recognition import normalize_properties
 
-                props = normalize_properties(sorted(prop_union))
-                rb, recs, backend_name, exec_ms = \
-                    self.engine.execute_unit_recognition(
-                        au.unit, graphs, props)
-                unit_recs = (props, rb, recs)
-                out = np.asarray(
-                    rb.verdicts["chordal"][: len(au.requests)], dtype=bool)
-            if any(r.want_witness and ok
-                   for r, ok in zip(au.requests, live)):
-                out, unit_wits, backend_name, wit_ms = \
-                    self.engine.execute_unit_witness(au.unit, graphs)
-                exec_ms = wit_ms if unit_recs is None else exec_ms + wit_ms
-            elif unit_recs is None:
-                out, backend_name, exec_ms = self.engine.execute_unit(
-                    au.unit, graphs)
+                    props = normalize_properties(sorted(prop_union))
+                    rb, recs, backend_name, exec_ms = \
+                        self.engine.execute_unit_recognition(
+                            au.unit, graphs, props)
+                    unit_recs = (props, rb, recs)
+                    out = np.asarray(
+                        rb.verdicts["chordal"][: len(au.requests)],
+                        dtype=bool)
+                if any(r.want_witness and ok
+                       for r, ok in zip(au.requests, live)):
+                    out, unit_wits, backend_name, wit_ms = \
+                        self.engine.execute_unit_witness(au.unit, graphs)
+                    exec_ms = wit_ms if unit_recs is None \
+                        else exec_ms + wit_ms
+                elif unit_recs is None:
+                    out, backend_name, exec_ms = self.engine.execute_unit(
+                        au.unit, graphs)
         except Exception as e:
             with self._lock:
                 for r, ok in zip(au.requests, live):
                     if ok:
                         r.future.set_exception(e)
                         self.stats.n_failed += 1
+                        self._resolve_request_locked(r, "failed")
                     else:
                         self.stats.n_cancelled += 1
+                        self._resolve_request_locked(r, "cancelled")
                     self._backlog -= 1
                 self._done_cv.notify_all()
             return
+        if self._tracer.enabled:
+            exec_span.attrs["backend"] = backend_name
         # Certificates are per-request extras: one failing must neither
         # fail its unit-mates nor kill the executor thread.
         certs: List[Optional[Certificate]] = []
@@ -957,27 +1079,37 @@ class AsyncChordalityEngine:
         live_delays: List[float] = []    # this unit's queue delays
         with self._lock:
             self.stats.n_units += 1
-            if unit_wits is not None:
-                self.stats.witness_upgraded += 1
+            kinds = []
             if unit_recs is not None:
                 self.stats.recognition_upgraded += 1
+                kinds.append("recognition")
+            if unit_wits is not None:
+                self.stats.witness_upgraded += 1
+                kinds.append("witness")
+            self._m_units.inc(kind="+".join(kinds) or "verdict")
             self.stats.record_exec_latency(exec_ms)
+            self._m_exec_ms.observe(exec_ms)
             occ = sum(live)       # cancelled-after-drain slots don't count
             self.stats.occupancy_histogram[occ] = \
                 self.stats.occupancy_histogram.get(occ, 0) + 1
+            self._m_occupancy.observe(occ)
             for slot, (r, ok) in enumerate(zip(au.requests, live)):
                 if not ok:
                     self.stats.n_cancelled += 1
+                    self._resolve_request_locked(r, "cancelled")
                 elif cert_errs[slot] is not None:
                     r.future.set_exception(cert_errs[slot])
                     self.stats.n_failed += 1
+                    self._resolve_request_locked(r, "failed")
                 else:
                     queue_ms = (t_start - r.t_submit) * 1e3
                     self.stats.record_queue_delay(queue_ms)
+                    self._m_queue_ms.observe(queue_ms)
                     live_delays.append(queue_ms)
                     self.stats.backend_histogram[backend_name] = \
                         self.stats.backend_histogram.get(
                             backend_name, 0) + 1
+                    self._m_backend.inc(backend=backend_name)
                     props_resp = recog_resp = None
                     if unit_recs is not None and r.properties:
                         # Filter the unit's union answers back down to
@@ -991,6 +1123,26 @@ class AsyncChordalityEngine:
                             witness=recs[slot].witness
                             if "proper_interval" in r.properties
                             else None)
+                    # Close the trace BEFORE resolving the future so the
+                    # client-visible response carries a finished tree:
+                    # adopt the shared plan/exec subtrees, then a
+                    # "finalize" stage from exec end to now (covers the
+                    # certificate pass and response assembly), then the
+                    # root — ends stitched so the stage sum is exact.
+                    trace_obj = None
+                    if r.trace is not None:
+                        root = r.trace
+                        if au.plan_span is not None:
+                            root.adopt(au.plan_span)
+                        root.adopt(exec_span)
+                        fin = root.child("finalize", t=exec_span.t_end)
+                        fin.end()
+                        root.attrs["outcome"] = "completed"
+                        root.end(t=fin.t_end)
+                        self._tracer.finish(root)
+                        trace_obj = root
+                        r.trace = None
+                    self._m_requests.inc(outcome="completed")
                     r.future.set_result(ServiceResponse(
                         verdict=bool(out[slot]),
                         certificate=certs[slot],
@@ -1006,6 +1158,7 @@ class AsyncChordalityEngine:
                         batch=au.unit.batch,
                         occupancy=occ,
                         priority=r.priority,
+                        trace=trace_obj,
                     ))
                     self.stats.n_completed += 1
                 self._backlog -= 1
@@ -1013,6 +1166,13 @@ class AsyncChordalityEngine:
                 if self._autotuner.observe_unit(
                         au.unit.n_pad, occ, live_delays, exec_ms):
                     self.stats.wait_adjustments += 1
+                    self._m_wait_adjust.inc()
+                    decision = self._autotuner.last_decision
+                    if decision is not None:
+                        self._m_wait_ms.set(
+                            decision["wait_ms"],
+                            n_pad=decision["n_pad"])
+                        self._tracer.event("autotune_wait", **decision)
             self._done_cv.notify_all()
         self._maybe_refit()
 
@@ -1027,7 +1187,7 @@ class AsyncChordalityEngine:
         """
         if self._refit_policy is None:
             return
-        now = time.perf_counter()
+        now = _clock.now()
         count = self.engine.router_sample_count
         if not self._refit_policy.due(count, now):
             return
@@ -1038,6 +1198,10 @@ class AsyncChordalityEngine:
             refitted = ()
         self._refit_policy.mark(count, now)
         if refitted:
+            self._m_refits.inc()
+            self._tracer.event(
+                "router_refit", backends=list(refitted),
+                sample_count=count)
             with self._lock:
                 self.stats.router_refits += 1
 
@@ -1046,6 +1210,54 @@ class AsyncChordalityEngine:
         with self._lock:
             return None if self._autotuner is None \
                 else self._autotuner.snapshot()
+
+    def telemetry(self) -> dict:
+        """Service-level observability snapshot (DESIGN.md §15).
+
+        One dict a dashboard (or the serving demo) can dump directly:
+        per-stage latency percentiles from the sliding stats windows,
+        the backend mix and request-outcome counts, the inner engine's
+        compile-cache traffic, the autotuner's adapted wait windows, and
+        the process-global metrics registry snapshot.
+        """
+        with self._lock:
+            st = self.stats
+            stages = {
+                "queue_ms": {"p50": st.p50_queue_ms,
+                             "p95": st.p95_queue_ms},
+                "exec_ms": {"p50": st.p50_exec_ms,
+                            "p95": st.p95_exec_ms},
+            }
+            requests = {
+                "submitted": st.n_submitted,
+                "completed": st.n_completed,
+                "cancelled": st.n_cancelled,
+                "rejected": st.n_rejected,
+                "failed": st.n_failed,
+                "expired": st.n_expired,
+                "shed": st.n_shed,
+            }
+            units = {
+                "executed": st.n_units,
+                "mean_occupancy": st.mean_occupancy,
+                "witness_upgraded": st.witness_upgraded,
+                "recognition_upgraded": st.recognition_upgraded,
+                "drain_reasons": dict(st.drain_reasons),
+            }
+            backend_mix = dict(st.backend_histogram)
+            autotune = None if self._autotuner is None \
+                else self._autotuner.snapshot()
+        engine_tel = self.engine.telemetry()   # takes no service state
+        return {
+            "stages": stages,
+            "requests": requests,
+            "units": units,
+            "backend_mix": backend_mix,
+            "cache": engine_tel["cache"],
+            "router_samples": engine_tel["router_samples"],
+            "autotune_wait_ms": autotune,
+            "metrics": engine_tel["metrics"],
+        }
 
 
 def gather(futures: Sequence["Future[ServiceResponse]"],

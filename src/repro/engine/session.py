@@ -32,11 +32,12 @@ host-array contract.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro import obs
+from repro.obs import clock as _clock
 from repro.engine.backends import (
     ChordalityBackend,
     make_backend,
@@ -369,13 +370,19 @@ class ChordalityEngine:
         units' samples to its stats without racing the async executor's
         appends to the shared log)."""
         backend = self._resolve(unit.backend)
-        payload = self._realize(backend, unit, graphs)
-        fn = self.cache.get(
-            backend, unit.n_pad, unit.batch,
-            kind=backend.verdict_kind(unit.n_pad))
-        t1 = time.perf_counter()
-        out = fn(payload)
-        exec_ms = (time.perf_counter() - t1) * 1e3
+        kind = backend.verdict_kind(unit.n_pad)
+        with obs.span("unit", n_pad=unit.n_pad, batch=unit.batch,
+                      backend=backend.name, kind=kind):
+            with obs.span("realize"):
+                payload = self._realize(backend, unit, graphs)
+            fn = self.cache.get(backend, unit.n_pad, unit.batch, kind=kind)
+            t1 = _clock.now()
+            with obs.span("dispatch", backend=backend.name, kind=kind), \
+                    obs.trace_annotation(
+                        f"repro.dispatch/{backend.name}/{kind}"
+                        f"/n{unit.n_pad}b{unit.batch}"):
+                out = fn(payload)
+            exec_ms = (_clock.now() - t1) * 1e3
         sample = (
             backend.name, unit.n_pad,
             float(np.mean([graphs[i].n_edges for i in unit.indices]))
@@ -402,22 +409,30 @@ class ChordalityEngine:
         back to ``jax_faithful`` (see :meth:`_resolve_witness`).
         """
         backend = self._resolve_witness(unit.backend)
-        payload = self._realize(backend, unit, graphs)
-        n_vec = self._unit_n_nodes(unit, graphs)
-        fn = self.cache.get(
-            backend, unit.n_pad, unit.batch,
-            kind=backend.witness_kind(unit.n_pad))
-        t1 = time.perf_counter()
-        wb = fn(payload, n_vec)
-        exec_ms = (time.perf_counter() - t1) * 1e3
-        witnesses = []
-        for slot, idx in enumerate(unit.indices):
-            g = graphs[idx]
-            adj = None
-            if not wb.chordal[slot] and wb.cycle_len[slot] < 4:
-                adj = g.with_dense().adj       # exhaustive-fallback input
-            witnesses.append(wb.result(slot, g.n_nodes, adj=adj))
-        verdicts = np.asarray(wb.chordal[: len(unit.indices)], dtype=bool)
+        kind = backend.witness_kind(unit.n_pad)
+        with obs.span("unit", n_pad=unit.n_pad, batch=unit.batch,
+                      backend=backend.name, kind=kind):
+            with obs.span("realize"):
+                payload = self._realize(backend, unit, graphs)
+                n_vec = self._unit_n_nodes(unit, graphs)
+            fn = self.cache.get(backend, unit.n_pad, unit.batch, kind=kind)
+            t1 = _clock.now()
+            with obs.span("dispatch", backend=backend.name, kind=kind), \
+                    obs.trace_annotation(
+                        f"repro.dispatch/{backend.name}/{kind}"
+                        f"/n{unit.n_pad}b{unit.batch}"):
+                wb = fn(payload, n_vec)
+            exec_ms = (_clock.now() - t1) * 1e3
+            with obs.span("finalize", kind="witness_crop"):
+                witnesses = []
+                for slot, idx in enumerate(unit.indices):
+                    g = graphs[idx]
+                    adj = None
+                    if not wb.chordal[slot] and wb.cycle_len[slot] < 4:
+                        adj = g.with_dense().adj  # exhaustive-fallback input
+                    witnesses.append(wb.result(slot, g.n_nodes, adj=adj))
+                verdicts = np.asarray(
+                    wb.chordal[: len(unit.indices)], dtype=bool)
         return verdicts, witnesses, backend.name, exec_ms
 
     def execute_unit_recognition(
@@ -438,18 +453,25 @@ class ChordalityEngine:
 
         props = normalize_properties(properties)
         backend = self._resolve_properties(unit.backend)
-        payload = realize_unit(unit, graphs)   # dense contract only
-        n_vec = self._unit_n_nodes(unit, graphs)
-        fn = self.cache.get(
-            backend, unit.n_pad, unit.batch,
-            kind="recognition:" + ",".join(props))
-        t1 = time.perf_counter()
-        rb = fn(payload, n_vec)
-        exec_ms = (time.perf_counter() - t1) * 1e3
-        results = [
-            rb.result(slot, graphs[idx].n_nodes)
-            for slot, idx in enumerate(unit.indices)
-        ]
+        kind = "recognition:" + ",".join(props)
+        with obs.span("unit", n_pad=unit.n_pad, batch=unit.batch,
+                      backend=backend.name, kind=kind):
+            with obs.span("realize"):
+                payload = realize_unit(unit, graphs)  # dense contract only
+                n_vec = self._unit_n_nodes(unit, graphs)
+            fn = self.cache.get(backend, unit.n_pad, unit.batch, kind=kind)
+            t1 = _clock.now()
+            with obs.span("dispatch", backend=backend.name, kind=kind), \
+                    obs.trace_annotation(
+                        f"repro.dispatch/{backend.name}/{kind}"
+                        f"/n{unit.n_pad}b{unit.batch}"):
+                rb = fn(payload, n_vec)
+            exec_ms = (_clock.now() - t1) * 1e3
+            with obs.span("finalize", kind="recognition_crop"):
+                results = [
+                    rb.result(slot, graphs[idx].n_nodes)
+                    for slot, idx in enumerate(unit.indices)
+                ]
         return rb, results, backend.name, exec_ms
 
     def run(
@@ -488,7 +510,7 @@ class ChordalityEngine:
         stats = EngineStats(
             n_requests=plan.n_requests, n_units=len(plan.units))
         hits0, misses0 = self.cache.hits, self.cache.misses
-        t0 = time.perf_counter()
+        t0 = _clock.now()
         for unit in plan.units:
             if witness:
                 out, wits, backend_name, exec_ms = \
@@ -504,7 +526,7 @@ class ChordalityEngine:
             stats.backend_histogram[backend_name] = (
                 stats.backend_histogram.get(backend_name, 0)
                 + len(unit.indices))
-        stats.wall_s = time.perf_counter() - t0
+        stats.wall_s = _clock.now() - t0
         stats.compile_hits = self.cache.hits - hits0
         stats.compile_misses = self.cache.misses - misses0
         stats.bucket_histogram = plan.bucket_histogram
@@ -525,7 +547,7 @@ class ChordalityEngine:
         stats = EngineStats(
             n_requests=plan.n_requests, n_units=len(plan.units))
         hits0, misses0 = self.cache.hits, self.cache.misses
-        t0 = time.perf_counter()
+        t0 = _clock.now()
         for unit in plan.units:
             rb, results, backend_name, exec_ms = \
                 self.execute_unit_recognition(unit, graphs, props)
@@ -538,7 +560,7 @@ class ChordalityEngine:
             stats.backend_histogram[backend_name] = (
                 stats.backend_histogram.get(backend_name, 0)
                 + len(unit.indices))
-        stats.wall_s = time.perf_counter() - t0
+        stats.wall_s = _clock.now() - t0
         stats.compile_hits = self.cache.hits - hits0
         stats.compile_misses = self.cache.misses - misses0
         stats.bucket_histogram = plan.bucket_histogram
@@ -617,6 +639,29 @@ class ChordalityEngine:
         because it stops moving once the cap is reached.
         """
         return self._router_samples_total
+
+    def telemetry(self) -> dict:
+        """Session-level observability snapshot (DESIGN.md §15).
+
+        Returns the engine's compile-cache traffic (with hit ratio), the
+        router-calibration sample count, and the process-global metrics
+        registry snapshot (which the cache and kernel counters publish
+        into). The VMEM-plan gauges are refreshed on every call so the
+        snapshot always carries the current static budget table.
+        """
+        obs.publish_vmem_plan()
+        hits, misses = self.cache.hits, self.cache.misses
+        total = hits + misses
+        return {
+            "cache": {
+                "entries": len(self.cache),
+                "hits": hits,
+                "misses": misses,
+                "hit_ratio": hits / total if total else 0.0,
+            },
+            "router_samples": self._router_samples_total,
+            "metrics": obs.registry.snapshot(),
+        }
 
     def _pad_single(self, graph_or_adj):
         """Normalize one request to its bucket: ``(padded, n, n_pad)``.

@@ -6,21 +6,41 @@
 :data:`dispatch_counter` counts host-level compiled-program launches —
 each tick is one host->device dispatch (a jit call or a ``pallas_call``
 invocation from Python). The fused-pipeline benchmarks read deltas off it
-to report *measured* dispatches per work unit (``BENCH_kernels.json``);
-it costs one integer increment and is not thread-safe beyond CPython's
-GIL, which is all the benchmarks need.
+to report *measured* dispatches per work unit (``BENCH_kernels.json``).
+
+Since PR 9 the counter is an alias over the obs metrics registry
+(``repro_dispatches_total`` in :data:`repro.obs.registry`) and the
+increment is lock-protected — it is ticked from the async service's
+background executor threads, where GIL-only atomicity is not a
+guarantee for ``+=``. The legacy surface (``.count`` attribute,
+``tick``/``delta``, tests assigning ``count`` directly) is preserved.
 """
 from __future__ import annotations
 
+from repro.obs.metrics import Counter
+from repro.obs.metrics import registry as _registry
+
 
 class DispatchCounter:
-    """Counts host-level device-program launches (benchmark telemetry)."""
+    """Counts host-level device-program launches (registry-backed,
+    thread-safe; see module docstring)."""
 
-    def __init__(self) -> None:
-        self.count = 0
+    def __init__(self, metric: Counter | None = None) -> None:
+        self._metric = metric if metric is not None else _registry.counter(
+            "repro_dispatches_total",
+            "host-level compiled-program launches (jit / pallas_call)")
 
     def tick(self, k: int = 1) -> None:
-        self.count += k
+        self._metric.inc(k)
+
+    @property
+    def count(self) -> int:
+        return int(self._metric.value())
+
+    @count.setter
+    def count(self, value: int) -> None:
+        # Legacy test hook: suites snapshot-and-reset the raw attribute.
+        self._metric.set_value(int(value))
 
     def delta(self, since: int) -> int:
         return self.count - since

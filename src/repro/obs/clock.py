@@ -1,0 +1,71 @@
+"""The single monotonic clock behind every deadline, wait, and span.
+
+Before PR 9 the serving stack mixed two clocks: `_Request.deadline` was
+documented as "absolute ``perf_counter`` seconds" while the blocking
+waits in ``submit``/``flush`` compared against ``time.monotonic()``.
+Both clocks are monotonic, but their epochs are unrelated — on platforms
+where they diverge, a deadline computed on one and compared on the other
+is off by the epoch gap.  Everything now goes through :func:`now`, and
+tests can install a :class:`FakeClock` to step time deterministically.
+
+``threading.Condition.wait(timeout)`` still sleeps in *real* time — a
+fake clock controls what ``now()`` returns, not how long a wait blocks.
+Tests that freeze time must therefore trigger re-evaluation explicitly
+(e.g. a subsequent ``submit`` notifies the admission loop).
+"""
+from __future__ import annotations
+
+import time
+
+
+class MonotonicClock:
+    """Default clock: a thin veneer over ``time.monotonic``."""
+
+    def now(self) -> float:
+        return time.monotonic()
+
+
+class FakeClock:
+    """Deterministic test clock.  Starts at ``start`` and only moves when
+    told to via :meth:`advance` / :meth:`set`."""
+
+    def __init__(self, start: float = 1000.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        self._t += float(dt)
+        return self._t
+
+    def set(self, t: float) -> float:
+        self._t = float(t)
+        return self._t
+
+
+_clock = MonotonicClock()
+
+
+def now() -> float:
+    """Seconds on the process-wide obs clock (monotonic; epoch arbitrary)."""
+    return _clock.now()
+
+
+def get_clock():
+    return _clock
+
+
+def set_clock(clock) -> object:
+    """Install ``clock`` (anything with ``.now() -> float``); returns the
+    previous clock so tests can restore it in a ``finally``."""
+    global _clock
+    prev = _clock
+    _clock = clock
+    return prev
+
+
+def reset_clock() -> None:
+    """Restore the default monotonic clock."""
+    global _clock
+    _clock = MonotonicClock()

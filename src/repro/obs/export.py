@@ -1,0 +1,154 @@
+"""Export surfaces: JSON-lines trace sink and Prometheus text render.
+
+Two consumers, two formats:
+
+* **JSONL** — one line per finished span tree (``{"type": "span", ...}``)
+  or point event (``{"type": "event", ...}``); machine-readable, append
+  only, safe to tail while the service runs.  :func:`parse_jsonl` /
+  :func:`span_from_dict` round-trip a line back into a :class:`Span`
+  tree for offline analysis.
+* **Prometheus exposition text** — :func:`render_prometheus` snapshots
+  the registry in the ``# HELP``/``# TYPE`` + sample-line format any
+  scraper parses.  Histograms render cumulative ``_bucket{le=...}``
+  series plus ``_sum``/``_count``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import threading
+from typing import Dict, Iterable, List, Optional, Union
+
+from repro.obs.metrics import MetricsRegistry, _HistCell
+from repro.obs.metrics import registry as _global_registry
+from repro.obs.trace import Span
+
+
+class ListSink:
+    """In-memory sink: keeps the live :class:`Span` objects (``.spans``)
+    and event dicts (``.events``) for tests and demos."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.spans: List[Span] = []
+        self.events: List[dict] = []
+
+    def write_span(self, span: Span) -> None:
+        with self._lock:
+            self.spans.append(span)
+
+    def write_event(self, event: dict) -> None:
+        with self._lock:
+            self.events.append(event)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self.spans) + len(self.events)
+
+
+class JsonlSink:
+    """JSON-lines sink.  ``target`` is a path (opened append) or any
+    object with ``.write(str)``; writes are lock-serialized."""
+
+    def __init__(self, target: Union[str, object]):
+        self._lock = threading.Lock()
+        if isinstance(target, str):
+            self._f = open(target, "a")
+            self._owns = True
+        else:
+            self._f = target
+            self._owns = False
+        self.n_written = 0
+
+    def write_span(self, span: Span) -> None:
+        self._write({"type": "span", **span.to_dict()})
+
+    def write_event(self, event: dict) -> None:
+        self._write(event)
+
+    def _write(self, record: dict) -> None:
+        line = json.dumps(record, sort_keys=True)
+        with self._lock:
+            self._f.write(line + "\n")
+            self.n_written += 1
+
+    def flush(self) -> None:
+        with self._lock:
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.flush()
+            if self._owns:
+                self._f.close()
+
+
+def span_from_dict(d: dict) -> Span:
+    """Rebuild a :class:`Span` tree from :meth:`Span.to_dict` output (or
+    a parsed JSONL ``span`` record — the extra ``type`` key is ignored)."""
+    s = Span(d["name"], d.get("attrs") or {}, t_start=d["t_start"])
+    s.t_end = d.get("t_end")
+    for c in d.get("children", ()):
+        s.children.append(span_from_dict(c))
+    return s
+
+
+def parse_jsonl(source: Union[str, Iterable[str]]) -> List[dict]:
+    """Parse JSONL text (or an iterable of lines) into record dicts."""
+    if isinstance(source, str):
+        lines = source.splitlines()
+    else:
+        lines = source
+    return [json.loads(ln) for ln in lines if ln.strip()]
+
+
+def _fmt_value(v: float) -> str:
+    if isinstance(v, float) and math.isinf(v):
+        return "+Inf" if v > 0 else "-Inf"
+    if isinstance(v, float) and v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v) if isinstance(v, float) else str(v)
+
+
+def _fmt_labels(labels: Dict[str, str], extra: Optional[dict] = None) -> str:
+    items = dict(labels)
+    if extra:
+        items.update(extra)
+    if not items:
+        return ""
+    body = ",".join(
+        '{}="{}"'.format(k, str(v).replace("\\", r"\\").replace('"', r"\""))
+        for k, v in items.items())
+    return "{" + body + "}"
+
+
+def render_prometheus(reg: Optional[MetricsRegistry] = None) -> str:
+    """Prometheus text exposition format snapshot of the registry."""
+    reg = _global_registry if reg is None else reg
+    out: List[str] = []
+    for name, m in sorted(reg.metrics().items()):
+        if m.help:
+            out.append(f"# HELP {name} {m.help}")
+        out.append(f"# TYPE {name} {m.kind}")
+        for key, val in sorted(m.series().items()):
+            labels = dict(zip(m.labels, key))
+            if isinstance(val, _HistCell):
+                running = 0
+                for edge, c in zip(m.buckets, val.counts):
+                    running += c
+                    out.append(
+                        f"{name}_bucket"
+                        f"{_fmt_labels(labels, {'le': _fmt_value(edge)})}"
+                        f" {running}")
+                out.append(
+                    f"{name}_bucket{_fmt_labels(labels, {'le': '+Inf'})}"
+                    f" {val.count}")
+                out.append(
+                    f"{name}_sum{_fmt_labels(labels)} "
+                    f"{_fmt_value(val.sum)}")
+                out.append(
+                    f"{name}_count{_fmt_labels(labels)} {val.count}")
+            else:
+                out.append(
+                    f"{name}{_fmt_labels(labels)} {_fmt_value(val)}")
+    return "\n".join(out) + ("\n" if out else "")

@@ -1,0 +1,202 @@
+"""Process-wide metrics registry: counters, gauges, histograms with labels.
+
+One global :data:`registry` absorbs the repo's scattered instrumentation
+(``dispatch_counter``, ``sweep_counter``, cache hit/miss ints, the
+service's hand-rolled stats) behind a single snapshot/render surface.
+Metrics are always on — a labelled increment is a dict lookup and an add
+under a small lock — so there is no enabled/disabled split as with
+tracing.
+
+Label handling follows the Prometheus model: a metric is declared once
+with a label-name tuple, and each distinct label-value combination is an
+independent series.  All mutation is lock-protected so the async
+service's executor threads (and anything else) can tick concurrently
+without lost increments.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, Iterable, Optional, Tuple
+
+DEFAULT_BUCKETS_MS = (0.5, 1.0, 2.0, 5.0, 10.0, 25.0, 50.0, 100.0,
+                      250.0, 1000.0)
+
+
+class _Metric:
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Tuple[str, ...] = ()):
+        self.name = name
+        self.help = help
+        self.labels = tuple(labels)
+        self._lock = threading.Lock()
+        self._series: Dict[Tuple[str, ...], object] = {}
+
+    def _key(self, labelvals: Dict[str, object]) -> Tuple[str, ...]:
+        if set(labelvals) != set(self.labels):
+            raise ValueError(
+                f"{self.name}: expected labels {self.labels}, "
+                f"got {tuple(labelvals)}")
+        return tuple(str(labelvals[k]) for k in self.labels)
+
+    def series(self) -> Dict[Tuple[str, ...], object]:
+        with self._lock:
+            return dict(self._series)
+
+
+class Counter(_Metric):
+    """Monotonically increasing count (resettable only via the explicit
+    test hook :meth:`set_value`)."""
+
+    kind = "counter"
+
+    def inc(self, amount: float = 1, **labelvals) -> None:
+        key = self._key(labelvals)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0) + amount
+
+    def value(self, **labelvals) -> float:
+        key = self._key(labelvals)
+        with self._lock:
+            return self._series.get(key, 0)
+
+    def total(self) -> float:
+        with self._lock:
+            return sum(self._series.values())
+
+    def set_value(self, value: float, **labelvals) -> None:
+        """Test-only escape hatch: legacy counter aliases document that
+        tests may reset ``.count`` directly."""
+        key = self._key(labelvals)
+        with self._lock:
+            self._series[key] = value
+
+
+class Gauge(_Metric):
+    """Point-in-time value (set wins; inc/dec for convenience)."""
+
+    kind = "gauge"
+
+    def set(self, value: float, **labelvals) -> None:
+        key = self._key(labelvals)
+        with self._lock:
+            self._series[key] = float(value)
+
+    def inc(self, amount: float = 1, **labelvals) -> None:
+        key = self._key(labelvals)
+        with self._lock:
+            self._series[key] = self._series.get(key, 0.0) + amount
+
+    def value(self, **labelvals) -> float:
+        key = self._key(labelvals)
+        with self._lock:
+            return self._series.get(key, 0.0)
+
+
+class _HistCell:
+    __slots__ = ("counts", "sum", "count")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * n_buckets  # cumulative rendered later
+        self.sum = 0.0
+        self.count = 0
+
+
+class Histogram(_Metric):
+    """Fixed-bucket histogram (bucket edges are upper bounds, +Inf
+    implicit)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 labels: Tuple[str, ...] = (),
+                 buckets: Iterable[float] = DEFAULT_BUCKETS_MS):
+        super().__init__(name, help, labels)
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+
+    def observe(self, value: float, **labelvals) -> None:
+        key = self._key(labelvals)
+        with self._lock:
+            cell = self._series.get(key)
+            if cell is None:
+                cell = self._series[key] = _HistCell(len(self.buckets))
+            for i, edge in enumerate(self.buckets):
+                if value <= edge:
+                    cell.counts[i] += 1
+                    break
+            cell.sum += value
+            cell.count += 1
+
+    def cell(self, **labelvals):
+        key = self._key(labelvals)
+        with self._lock:
+            return self._series.get(key)
+
+
+class MetricsRegistry:
+    """Name → metric; get-or-create with kind checking."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get_or_create(self, cls, name, help, labels, **kw):
+        with self._lock:
+            m = self._metrics.get(name)
+            if m is not None:
+                if not isinstance(m, cls):
+                    raise TypeError(
+                        f"metric {name!r} already registered as {m.kind}")
+                return m
+            m = cls(name, help=help, labels=tuple(labels), **kw)
+            self._metrics[name] = m
+            return m
+
+    def counter(self, name: str, help: str = "",
+                labels: Tuple[str, ...] = ()) -> Counter:
+        return self._get_or_create(Counter, name, help, labels)
+
+    def gauge(self, name: str, help: str = "",
+              labels: Tuple[str, ...] = ()) -> Gauge:
+        return self._get_or_create(Gauge, name, help, labels)
+
+    def histogram(self, name: str, help: str = "",
+                  labels: Tuple[str, ...] = (),
+                  buckets: Iterable[float] = DEFAULT_BUCKETS_MS
+                  ) -> Histogram:
+        return self._get_or_create(Histogram, name, help, labels,
+                                   buckets=buckets)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        with self._lock:
+            return self._metrics.get(name)
+
+    def metrics(self) -> Dict[str, _Metric]:
+        with self._lock:
+            return dict(self._metrics)
+
+    def snapshot(self) -> Dict[str, dict]:
+        """JSON-friendly dump: ``{name: {type, help, series: [...]}}``."""
+        out: Dict[str, dict] = {}
+        for name, m in sorted(self.metrics().items()):
+            series = []
+            for key, val in sorted(m.series().items()):
+                labels = dict(zip(m.labels, key))
+                if isinstance(val, _HistCell):
+                    cum, running = [], 0
+                    for c in val.counts:
+                        running += c
+                        cum.append(running)
+                    series.append({
+                        "labels": labels,
+                        "buckets": {str(b): c for b, c in
+                                    zip(m.buckets, cum)},
+                        "sum": val.sum, "count": val.count})
+                else:
+                    series.append({"labels": labels, "value": val})
+            out[name] = {"type": m.kind, "help": m.help, "series": series}
+        return out
+
+
+registry = MetricsRegistry()

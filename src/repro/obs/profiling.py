@@ -1,0 +1,42 @@
+"""Opt-in bridge from obs spans to ``jax.profiler`` trace annotations.
+
+When enabled (``enable_jax_annotations()``), :func:`trace_annotation`
+wraps each backend dispatch in a ``jax.profiler.TraceAnnotation`` so the
+named interval shows up on the device timeline of a captured profile —
+letting our host-side ``dispatch`` spans line up with the XLA/TPU trace.
+Disabled (the default) it returns a shared null context: no jax import
+cost, no profiler dependency on the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_jax_annotations_enabled = False
+_NULL = contextlib.nullcontext()
+
+
+def enable_jax_annotations() -> None:
+    global _jax_annotations_enabled
+    _jax_annotations_enabled = True
+
+
+def disable_jax_annotations() -> None:
+    global _jax_annotations_enabled
+    _jax_annotations_enabled = False
+
+
+def jax_annotations_enabled() -> bool:
+    return _jax_annotations_enabled
+
+
+def trace_annotation(name: str):
+    """Context manager for a device-profile annotation around a dispatch.
+    A null context unless annotations are enabled and jax's profiler is
+    importable."""
+    if not _jax_annotations_enabled:
+        return _NULL
+    try:
+        from jax.profiler import TraceAnnotation
+    except Exception:  # pragma: no cover - jax always present in-tree
+        return _NULL
+    return TraceAnnotation(name)

@@ -45,13 +45,29 @@ class SweepCounter:
     """Counts vertex-ordering sweeps executed by recognition executables
     (mirror of ``repro.kernels.dispatch_counter``). Tests snapshot
     ``count``, run an engine call, and assert the delta matches the
-    *shared* plan — the proof that σ1 is reused across properties."""
+    *shared* plan — the proof that σ1 is reused across properties.
+
+    Registry-backed since PR 9 (``repro_sweeps_total`` in
+    ``repro.obs.registry``) and lock-protected: recognition executables
+    run on the async service's executor threads."""
 
     def __init__(self) -> None:
-        self.count = 0
+        from repro.obs.metrics import registry
+        self._metric = registry.counter(
+            "repro_sweeps_total",
+            "vertex-ordering sweeps executed by recognition executables")
 
     def tick(self, k: int = 1) -> None:
-        self.count += k
+        self._metric.inc(k)
+
+    @property
+    def count(self) -> int:
+        return int(self._metric.value())
+
+    @count.setter
+    def count(self, value: int) -> None:
+        # Legacy test hook ("tests may reset count directly").
+        self._metric.set_value(int(value))
 
     def delta(self, since: int) -> int:
         return self.count - since

@@ -942,3 +942,116 @@ def bench_obs(n=256, batch=32, requests=96, repeats=7):
                      f"records={records_per_run}")},
     ]
     return rows, artifact
+
+
+def bench_mesh(n=256, batch=32, requests=96, devices=(1, 2, 4, 8),
+               repeats=5):
+    """PR 10 mesh-scaling table: ``(rows, artifact)`` -> BENCH_mesh.json.
+
+    Runs the same request stream through the ``sharded`` backend at each
+    mesh size (emulated host devices on CPU CI — ``benchmarks.run`` sets
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` before jax
+    initializes) plus the non-sharded ``jax_fast`` reference arm, all on
+    warm compile caches. Three claims feed ``perf_gate.py``:
+
+    * ``scaling_efficiency`` — ``wall(1) / wall(d)`` per mesh size. On
+      emulated CPU devices the shards *serialize on one core*, so this
+      measures partitioning overhead (a real mesh adds ICI time instead);
+      the gate floors the max-d point, where per-shard program size
+      shrinks fastest.
+    * ``single_device_parity`` — jax_fast wall / sharded-d=1 wall: a
+      size-1 mesh must not tax the existing path (floor 0.9x).
+    * ``dispatch_per_unit`` — exactly 1 host launch per work unit at
+      every mesh size: sharding must never multiply dispatches.
+
+    Verdict bit-identity vs the reference arm is asserted outright —
+    a partitioning bug fails the bench, not just the gate.
+    """
+    import time
+
+    import jax
+
+    from repro.core import generators as G
+    from repro.engine.backends import make_backend
+    from repro.engine.session import ChordalityEngine
+    from repro.kernels import dispatch_counter
+
+    avail = jax.device_count()
+    devices = tuple(d for d in devices if d <= avail)
+    graphs = [G.gnp(n, 0.05, seed=s) for s in range(requests)]
+
+    def timed_run(eng):
+        eng.run(graphs)                      # warm compile cache
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            eng.run(graphs)
+            ts.append((time.perf_counter() - t0) * 1e3)
+        return float(np.median(ts))
+
+    ref = ChordalityEngine(backend="jax_fast", max_batch=batch)
+    want = ref.run(graphs).verdicts
+    ref_ms = timed_run(ref)
+
+    rows: List[Dict] = []
+    artifact: Dict = {
+        "schema": "bench_mesh/v1",
+        "jax": jax.__version__,
+        "platform": jax.default_backend(),
+        "meta": {
+            "n": n, "batch": batch, "requests": requests,
+            "repeats": repeats, "devices": list(devices),
+            "device_count_visible": avail,
+            "emulated": avail > 1,
+            "note": ("emulated host devices serialize on one core: "
+                     "scaling_efficiency measures partitioning overhead, "
+                     "not interconnect speedup (TESTING.md)"),
+        },
+        "ref_jax_fast_ms": {f"n{n}_B{batch}": round(ref_ms, 3)},
+        "wall_ms": {},
+        "throughput_gps": {},
+        "scaling_efficiency": {},
+        "single_device_parity": {},
+        "dispatch_per_unit": {},
+    }
+    wall: Dict[int, float] = {}
+    for d in devices:
+        eng = ChordalityEngine(
+            backend=make_backend("sharded", n_devices=d), max_batch=batch)
+        res = eng.run(graphs)
+        np.testing.assert_array_equal(
+            res.verdicts, want,
+            err_msg=f"sharded d={d} verdicts diverge from jax_fast")
+        c0 = dispatch_counter.count
+        res = eng.run(graphs)
+        dpu = (dispatch_counter.count - c0) / max(len(res.plan.units), 1)
+        ms = timed_run(eng)
+        wall[d] = ms
+        key = f"n{n}_B{batch}_d{d}"
+        artifact["wall_ms"][key] = round(ms, 3)
+        artifact["throughput_gps"][key] = round(requests / (ms / 1e3), 1)
+        artifact["dispatch_per_unit"][key] = round(dpu, 4)
+    base = wall.get(1)
+    for d in devices:
+        key = f"n{n}_B{batch}_d{d}"
+        eff = base / wall[d] if base else float("nan")
+        artifact["scaling_efficiency"][key] = round(eff, 4)
+        rows.append({
+            "name": f"mesh_sharded_{key}",
+            "us_per_call": wall[d] * 1e3 / requests,
+            "derived": (f"eff={eff:.3f};"
+                        f"gps={artifact['throughput_gps'][key]};"
+                        f"dispatch_per_unit="
+                        f"{artifact['dispatch_per_unit'][key]:.2f}"),
+        })
+    if base:
+        parity = ref_ms / base
+        artifact["single_device_parity"][f"n{n}_B{batch}"] = \
+            round(parity, 4)
+        rows.append({
+            "name": f"mesh_parity_n{n}_B{batch}",
+            "us_per_call": base * 1e3 / requests,
+            "derived": (f"jax_fast_over_sharded_d1={parity:.3f};"
+                        f"ref_ms={ref_ms:.1f}"),
+        })
+    return rows, artifact

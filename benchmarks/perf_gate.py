@@ -29,6 +29,15 @@ baseline and **fails the build** if a structural perf property regressed:
   (default 0.8): the committed artifact claims parity-or-better for the
   autotuned control loops; a fresh run far below parity means the
   controller regressed, not the box.
+* ``BENCH_mesh.json`` — three mesh-sharding claims (DESIGN.md §16), all
+  intra-artifact so no baseline is needed: scaling efficiency
+  (``wall(1)/wall(d)``) at the largest mesh size may not fall below
+  ``--mesh-efficiency-floor`` (default 0.6) for n_pad >= 256 cells;
+  single-device parity (jax_fast wall / sharded-d=1 wall) may not fall
+  below ``--mesh-parity-floor`` (default 0.9) — a size-1 mesh must not
+  tax the existing path; and ``dispatch_per_unit`` must stay exactly 1
+  at every mesh size (sharding must never multiply host launches — also
+  gated against the committed baseline like the fused pipelines).
 
 Only keys present in *both* artifacts are compared — a baseline measured
 at different sizes (e.g. ``--smoke`` vs full) gates only the overlap,
@@ -43,8 +52,16 @@ Usage::
         [--recognition-fresh BENCH_recognition.json] \
         [--saturation-fresh BENCH_saturation.json] \
         [--obs-fresh BENCH_obs.json] \
+        [--mesh-fresh BENCH_mesh.json] \
         [--tolerance 0.5] [--knee-ratio-floor 0.8] \
-        [--obs-overhead-ceiling 1.05]
+        [--obs-overhead-ceiling 1.05] \
+        [--mesh-efficiency-floor 0.6] [--mesh-parity-floor 0.9] \
+        [--only mesh]
+
+``--only`` restricts gating to a comma list of artifact families
+(``kernels,witness,recognition,saturation,obs,mesh``) — the fast CI job
+regenerates only the mesh artifact and gates it alone with
+``--only mesh``, while the slow job's full invocation is unchanged.
 
 ``--baseline`` defaults to ``git show HEAD:<fresh-name>`` — the artifact
 as committed, which is what "no worse than the repo claims" means.
@@ -53,6 +70,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import subprocess
 import sys
 from typing import Dict, List, Optional
@@ -204,8 +222,50 @@ def gate_obs_overhead(
     return errs
 
 
+def gate_mesh(
+    fresh: Dict, label: str, efficiency_floor: float, parity_floor: float
+) -> List[str]:
+    """Intra-artifact mesh gates (no baseline needed — every ratio is
+    measured within one run on one box):
+
+    * scaling efficiency at the largest mesh size, n_pad >= 256 cells
+      only (small buckets are dispatch-bound and legitimately shard
+      poorly; the floor covers the cells the mesh exists for);
+    * single-device parity — a size-1 mesh vs the plain jit path;
+    * one host dispatch per unit at every mesh size, exactly.
+    """
+    errs = []
+    cells = []
+    for name, val in fresh.get("scaling_efficiency", {}).items():
+        m = re.fullmatch(r"n(\d+)_B(\d+)_d(\d+)", name)
+        if m:
+            cells.append((int(m.group(1)), int(m.group(3)),
+                          name, float(val)))
+    big = [c for c in cells if c[0] >= 256]
+    if big:
+        d_max = max(c[1] for c in big)
+        for n, d, name, val in sorted(big):
+            if d == d_max and val < efficiency_floor:
+                errs.append(
+                    f"{label}.scaling_efficiency[{name}]: {val} < floor "
+                    f"{efficiency_floor} — the {d}-device mesh lost its "
+                    f"scaling claim")
+    for name, val in sorted(fresh.get("single_device_parity", {}).items()):
+        if float(val) < parity_floor:
+            errs.append(
+                f"{label}.single_device_parity[{name}]: {val} < floor "
+                f"{parity_floor} — a size-1 mesh taxes the existing "
+                f"single-device path")
+    for name, val in sorted(fresh.get("dispatch_per_unit", {}).items()):
+        if float(val) > 1.0:
+            errs.append(
+                f"{label}.dispatch_per_unit[{name}]: {val} > 1 — "
+                f"sharding multiplied host launches")
+    return errs
+
+
 def run_gate(
-    fresh_path: str = "BENCH_kernels.json",
+    fresh_path: Optional[str] = "BENCH_kernels.json",
     baseline: Optional[str] = None,
     witness_fresh: Optional[str] = "BENCH_witness.json",
     witness_baseline: Optional[str] = None,
@@ -214,28 +274,37 @@ def run_gate(
     saturation_fresh: Optional[str] = "BENCH_saturation.json",
     saturation_baseline: Optional[str] = None,
     obs_fresh: Optional[str] = "BENCH_obs.json",
+    mesh_fresh: Optional[str] = "BENCH_mesh.json",
+    mesh_baseline: Optional[str] = None,
     tolerance: float = 0.5,
     knee_ratio_floor: float = 0.8,
     obs_overhead_ceiling: float = 1.05,
+    mesh_efficiency_floor: float = 0.6,
+    mesh_parity_floor: float = 0.9,
 ) -> List[str]:
-    """All gate failures across both artifacts (empty = pass)."""
+    """All gate failures across the artifacts (empty = pass). Any
+    ``*_fresh`` path may be None to skip that family entirely (the
+    ``--only`` mechanism) — except that a non-None ``fresh_path`` whose
+    file is missing is still a hard error, since the kernels artifact is
+    the smoke job's primary product."""
     errs: List[str] = []
-    try:
-        with open(fresh_path) as f:
-            fresh = json.load(f)
-    except OSError:
-        return [f"fresh artifact {fresh_path!r} missing — run "
-                "`python -m benchmarks.run --tables kernels` first"]
-    base = _load_baseline(fresh_path, baseline)
-    if base is None:
-        print(f"# perf_gate: no committed baseline for {fresh_path}; "
-              "skipping", file=sys.stderr)
-    else:
-        errs += gate_dispatch_counts(
-            fresh, base, "dispatch_per_unit", fresh_path)
-        errs += gate_speedups(
-            fresh, base, "lexbfs_batched_speedup_vs_scan", fresh_path,
-            tolerance)
+    if fresh_path is not None:
+        try:
+            with open(fresh_path) as f:
+                fresh = json.load(f)
+        except OSError:
+            return [f"fresh artifact {fresh_path!r} missing — run "
+                    "`python -m benchmarks.run --tables kernels` first"]
+        base = _load_baseline(fresh_path, baseline)
+        if base is None:
+            print(f"# perf_gate: no committed baseline for {fresh_path}; "
+                  "skipping", file=sys.stderr)
+        else:
+            errs += gate_dispatch_counts(
+                fresh, base, "dispatch_per_unit", fresh_path)
+            errs += gate_speedups(
+                fresh, base, "lexbfs_batched_speedup_vs_scan", fresh_path,
+                tolerance)
 
     if witness_fresh is not None:
         try:
@@ -306,6 +375,26 @@ def run_gate(
             # committed baseline required
             errs += gate_obs_overhead(
                 ofresh, obs_fresh, obs_overhead_ceiling)
+
+    if mesh_fresh is not None:
+        try:
+            with open(mesh_fresh) as f:
+                mfresh = json.load(f)
+        except OSError:
+            mfresh = None
+        if mfresh is not None:
+            # efficiency/parity/dispatch claims are self-contained —
+            # gate them even with no committed baseline
+            errs += gate_mesh(
+                mfresh, mesh_fresh, mesh_efficiency_floor,
+                mesh_parity_floor)
+            mbase = _load_baseline(mesh_fresh, mesh_baseline)
+            if mbase is not None:
+                errs += gate_dispatch_counts(
+                    mfresh, mbase, "dispatch_per_unit", mesh_fresh)
+            else:
+                print(f"# perf_gate: no committed baseline for "
+                      f"{mesh_fresh}; skipping", file=sys.stderr)
     return errs
 
 
@@ -321,13 +410,43 @@ def main(argv=None) -> int:
     ap.add_argument("--saturation-fresh", default="BENCH_saturation.json")
     ap.add_argument("--saturation-baseline", default=None)
     ap.add_argument("--obs-fresh", default="BENCH_obs.json")
+    ap.add_argument("--mesh-fresh", default="BENCH_mesh.json")
+    ap.add_argument("--mesh-baseline", default=None)
     ap.add_argument("--tolerance", type=float, default=0.5,
                     help="speedup floor / overhead ceiling factor")
     ap.add_argument("--knee-ratio-floor", type=float, default=0.8,
                     help="min fresh autotuned/static-best knee ratio")
     ap.add_argument("--obs-overhead-ceiling", type=float, default=1.05,
                     help="max tracing enabled/disabled wall ratio")
+    ap.add_argument("--mesh-efficiency-floor", type=float, default=0.6,
+                    help="min scaling efficiency at the largest mesh "
+                         "size (n_pad >= 256 cells)")
+    ap.add_argument("--mesh-parity-floor", type=float, default=0.9,
+                    help="min jax_fast/sharded-d1 wall ratio")
+    ap.add_argument("--only", default=None,
+                    help="comma list of artifact families to gate "
+                         "(kernels,witness,recognition,saturation,obs,"
+                         "mesh); others are skipped entirely")
     args = ap.parse_args(argv)
+    if args.only is not None:
+        only = set(args.only.split(","))
+        known = {"kernels", "witness", "recognition", "saturation",
+                 "obs", "mesh"}
+        unknown = only - known
+        if unknown:
+            ap.error(f"--only: unknown families {sorted(unknown)}")
+        if "kernels" not in only:
+            args.fresh = None
+        if "witness" not in only:
+            args.witness_fresh = None
+        if "recognition" not in only:
+            args.recognition_fresh = None
+        if "saturation" not in only:
+            args.saturation_fresh = None
+        if "obs" not in only:
+            args.obs_fresh = None
+        if "mesh" not in only:
+            args.mesh_fresh = None
     errs = run_gate(
         fresh_path=args.fresh, baseline=args.baseline,
         witness_fresh=args.witness_fresh,
@@ -337,9 +456,13 @@ def main(argv=None) -> int:
         saturation_fresh=args.saturation_fresh,
         saturation_baseline=args.saturation_baseline,
         obs_fresh=args.obs_fresh,
+        mesh_fresh=args.mesh_fresh,
+        mesh_baseline=args.mesh_baseline,
         tolerance=args.tolerance,
         knee_ratio_floor=args.knee_ratio_floor,
-        obs_overhead_ceiling=args.obs_overhead_ceiling)
+        obs_overhead_ceiling=args.obs_overhead_ceiling,
+        mesh_efficiency_floor=args.mesh_efficiency_floor,
+        mesh_parity_floor=args.mesh_parity_floor)
     if errs:
         for e in errs:
             print(f"PERF REGRESSION: {e}", file=sys.stderr)

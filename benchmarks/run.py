@@ -9,11 +9,14 @@ headline metric — or graphs/s for the engine tables.
 
 Flags: --quick shrinks sizes (local iteration); --smoke shrinks harder
 (the CI smoke step runs ``--tables engine --smoke``); --tables selects
-sections.
+sections. The ``mesh`` table is opt-in only (never part of ``all``): it
+forces 8 emulated host devices via XLA_FLAGS *before jax initializes*,
+which would contaminate every other table's single-device timings.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 
@@ -25,12 +28,13 @@ def main(argv=None) -> int:
     ap.add_argument("--tables", default="all",
                     help="comma list: cliques,dense,sparse,trees,chordal,"
                          "kernels,lexbfs,engine,router,service,witness,"
-                         "recognition,saturation,obs")
+                         "recognition,saturation,obs,mesh (mesh is opt-in"
+                         " only; it is excluded from 'all')")
+    ap.add_argument("--mesh-devices", type=int, default=8,
+                    help="emulated host device count for --tables mesh")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
-
-    from benchmarks import kernel_bench, paper_tables
 
     which = (
         ["cliques", "dense", "sparse", "trees", "chordal", "kernels",
@@ -38,6 +42,24 @@ def main(argv=None) -> int:
          "saturation", "obs"]
         if args.tables == "all" else args.tables.split(",")
     )
+
+    if "mesh" in which:
+        # Must happen before anything imports jax: the device count is
+        # frozen at backend init. A jax already imported (e.g. via a
+        # caller's site hook) would silently pin device_count=1, so the
+        # mesh table refuses to run in that case.
+        if "jax" in sys.modules:
+            print("error: --tables mesh needs XLA_FLAGS set before jax "
+                  "imports; run benchmarks.run as a fresh process",
+                  file=sys.stderr)
+            return 2
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count="
+              f"{args.mesh_devices}").strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from benchmarks import kernel_bench, paper_tables
 
     print("name,us_per_call,derived")
 
@@ -236,6 +258,29 @@ def main(argv=None) -> int:
         with open("BENCH_obs.json", "w") as f:
             json.dump(artifact, f, indent=2, sort_keys=True)
         print("# wrote BENCH_obs.json", file=sys.stderr)
+    if "mesh" in which:
+        print("# mesh bench - sharded scaling over emulated devices "
+              "(-> BENCH_mesh.json)", file=sys.stderr)
+        # All tiers keep n=256/B=32/d=1..8 so the smoke cells share
+        # their keys with the committed full-run artifact — the perf
+        # gate's efficiency/parity floors read exactly those cells.
+        # Smoke floor: requests must give >= 2 work units per timed run
+        # (64/B32) — a single-unit run can't amortize per-run overhead
+        # and the d=1 parity cell flakes under the 0.9 gate floor.
+        if args.smoke:
+            rows, artifact = kernel_bench.bench_mesh(
+                n=256, batch=32, requests=64, repeats=3)
+        elif args.quick:
+            rows, artifact = kernel_bench.bench_mesh(
+                n=256, batch=32, requests=64, repeats=3)
+        else:
+            rows, artifact = kernel_bench.bench_mesh()
+        emit(rows)
+        import json
+
+        with open("BENCH_mesh.json", "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print("# wrote BENCH_mesh.json", file=sys.stderr)
     if "router" in which:
         print("# router cost-model calibration samples", file=sys.stderr)
         emit(kernel_bench.bench_router_samples(quick=args.quick))

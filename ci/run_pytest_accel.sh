@@ -1,0 +1,36 @@
+#!/usr/bin/env bash
+# Accelerator test lane — stub for future real-TPU/GPU wiring.
+#
+# GitHub CI only has CPU runners, so the mesh tests there run on
+# emulated host devices (XLA_FLAGS=--xla_force_host_platform_device_count,
+# see TESTING.md): that proves partitioning correctness but says nothing
+# about real cross-device scaling. When an accelerator runner exists,
+# point its job at this script; until then it runs the same suite on
+# whatever jax.devices() reports, so it is safe to invoke anywhere.
+#
+# Usage:  ci/run_pytest_accel.sh [extra pytest args...]
+# Env:    REPRO_ACCEL_PLATFORM  optional jax platform pin (tpu|gpu|cpu)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="${PYTHONPATH:+${PYTHONPATH}:}$(pwd)/src"
+if [[ -n "${REPRO_ACCEL_PLATFORM:-}" ]]; then
+  export JAX_PLATFORMS="${REPRO_ACCEL_PLATFORM}"
+fi
+
+python - <<'PY'
+import jax
+devs = jax.devices()
+print(f"accel lane: {len(devs)} x {devs[0].platform} "
+      f"({jax.__version__})")
+PY
+
+# Mesh + differential suites are the accelerator-sensitive surfaces;
+# everything else is covered by the CPU jobs.
+python -m pytest -q tests/test_mesh.py tests/test_differential.py "$@"
+
+# Real-device scaling numbers (overwrites BENCH_mesh.json in this
+# scratch checkout only — emulated CPU numbers are the committed
+# baseline; see benchmarks/run.py --tables mesh).
+python -m benchmarks.run --tables mesh --smoke
+python -m benchmarks.perf_gate --only mesh

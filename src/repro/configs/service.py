@@ -146,6 +146,15 @@ class ServiceConfig:
         delays, exec latencies). Beyond it the oldest samples roll off,
         so a long-lived service keeps recent-window percentiles instead
         of a monotonically growing list.
+      n_lanes: executor lanes (PR 10). 1 (the default) is the classic
+        single-executor service. With ``n_lanes > 1`` the service runs
+        one executor thread per lane — one per device or mesh slice —
+        with least-loaded dispatch and weighted work-stealing, so a
+        slow lane never stalls the admission loop (DESIGN.md §16).
+      lane_weights: optional per-lane steal weights, length ``n_lanes``.
+        A lane's share of stolen work scales with its weight — weight 2
+        steals twice as eagerly as weight 1 (keeps a fast device fed
+        from a slow device's backlog). None = all lanes weight 1.0.
       autotune: feedback-loop knobs (:class:`AutotuneConfig`); None (the
         default) disables every control loop — static knobs only.
     """
@@ -159,6 +168,8 @@ class ServiceConfig:
     default_priority: int = 1
     drain_timeout_s: float = 60.0
     stats_window: int = 4096
+    n_lanes: int = 1
+    lane_weights: Optional[Tuple[float, ...]] = None
     autotune: Optional[AutotuneConfig] = None
 
     def __post_init__(self):
@@ -185,6 +196,17 @@ class ServiceConfig:
         if self.stats_window < 1:
             raise ValueError(
                 f"stats_window must be >= 1, got {self.stats_window}")
+        if self.n_lanes < 1:
+            raise ValueError(f"n_lanes must be >= 1, got {self.n_lanes}")
+        if self.lane_weights is not None:
+            if len(self.lane_weights) != self.n_lanes:
+                raise ValueError(
+                    f"lane_weights length {len(self.lane_weights)} != "
+                    f"n_lanes {self.n_lanes}")
+            if any(w <= 0 for w in self.lane_weights):
+                raise ValueError(
+                    f"lane_weights must all be positive, got "
+                    f"{self.lane_weights}")
 
     @property
     def n_priorities(self) -> int:

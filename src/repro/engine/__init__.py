@@ -40,6 +40,16 @@ from repro.engine.backends import (
     make_backend,
     register_backend,
 )
+from repro.engine.mesh import (
+    MESH_AXIS,
+    build_mesh,
+    host_device_count,
+    make_mesh_verdict_runner,
+    make_mesh_verdicts,
+    mesh_device_count,
+    mesh_signature,
+    pad_to_shards,
+)
 from repro.engine.planner import (
     CompileCache,
     Plan,
@@ -52,10 +62,13 @@ from repro.engine.planner import (
 from repro.engine.router import (
     BackendCost,
     DEFAULT_COST_MODEL,
+    DEFAULT_FIT_DEVICE_RANGE,
     DEFAULT_FIT_N_RANGE,
     DEFAULT_RECOGNITION_COST_MODEL,
+    PLATFORM_COST_MODELS,
     Router,
     fit_cost_model,
+    platform_cost_model,
 )
 from repro.engine.service import (
     AsyncChordalityEngine,
@@ -83,6 +96,14 @@ __all__ = [
     "list_backends",
     "make_backend",
     "register_backend",
+    "MESH_AXIS",
+    "build_mesh",
+    "host_device_count",
+    "make_mesh_verdict_runner",
+    "make_mesh_verdicts",
+    "mesh_device_count",
+    "mesh_signature",
+    "pad_to_shards",
     "CompileCache",
     "Plan",
     "WorkUnit",
@@ -92,10 +113,13 @@ __all__ = [
     "unit_for_chunk",
     "BackendCost",
     "DEFAULT_COST_MODEL",
+    "DEFAULT_FIT_DEVICE_RANGE",
     "DEFAULT_FIT_N_RANGE",
     "DEFAULT_RECOGNITION_COST_MODEL",
+    "PLATFORM_COST_MODELS",
     "Router",
     "fit_cost_model",
+    "platform_cost_model",
     "AsyncChordalityEngine",
     "QueueFullError",
     "ServiceClosedError",

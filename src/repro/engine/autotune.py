@@ -31,7 +31,12 @@ Three loops, all configured by ``repro.configs.service.AutotuneConfig``:
   the projection exceeds their remaining deadline — dropping work at
   admission that would only expire after consuming a unit slot.
   Deadline-free requests are never shed (they didn't opt into
-  best-effort semantics).
+  best-effort semantics). Since PR 10 the projection is lane-aware:
+  a multi-lane executor (``ServiceConfig.n_lanes``) drains the ready
+  backlog concurrently, so the projection divides by the lane count,
+  and the tuner keeps **per-lane** execution/occupancy EMAs
+  (``observe_unit(..., lane=i)``) instead of only the global one — a
+  slow lane is visible as its own rate estimate, not averaged away.
 
 The tuner is deliberately passive: it owns no threads and takes no
 locks. The service calls ``observe_unit`` from its executor and
@@ -102,6 +107,10 @@ class Autotuner:
         self.knobs: AutotuneConfig = config.autotune
         self._buckets: Dict[int, _BucketState] = {}
         self._global_exec_ema_ms: Optional[float] = None
+        # Per-lane feedback (PR 10): one exec-latency EMA and one
+        # normalized-occupancy EMA per executor lane that has reported.
+        self._lane_exec_ema_ms: Dict[int, float] = {}
+        self._lane_occ_ema: Dict[int, float] = {}
         #: The last AIMD movement (``observe_unit`` returned True), as
         #: {n_pad, old_wait_ms, wait_ms, reason, mean_occupancy,
         #: p95_delay_ms} — the service publishes it as an obs event and
@@ -132,7 +141,10 @@ class Autotuner:
         priced at the bucket's per-unit execution EMA (service-wide EMA
         until this bucket has executed; None before *any* unit has — no
         projection means no shedding, so a cold service never drops work
-        on a guess).
+        on a guess). With a multi-lane executor the ready backlog drains
+        ``n_lanes`` units at a time, so the projection divides by the
+        configured lane count — an 8-lane service with 8 queued units
+        projects one unit's latency, not eight.
         """
         st = self._buckets.get(n_pad)
         ema = st.exec_ema_ms if st is not None and \
@@ -141,7 +153,8 @@ class Autotuner:
             return None
         units_ahead = ready_units + \
             math.ceil(n_queued / self.config.max_batch)
-        return units_ahead * ema
+        n_lanes = max(1, getattr(self.config, "n_lanes", 1))
+        return units_ahead * ema / n_lanes
 
     # -- executor-side feedback --------------------------------------------
     def observe_unit(
@@ -150,9 +163,16 @@ class Autotuner:
         occupancy: int,
         queue_delays_ms: Sequence[float],
         exec_ms: float,
+        lane: int = 0,
     ) -> bool:
         """Feed one executed unit's measurements; returns True when the
         bucket's wait window moved.
+
+        ``lane`` attributes the unit to the executor lane that ran it
+        (PR 10): the tuner keeps a per-lane execution EMA and a per-lane
+        occupancy EMA alongside the per-bucket state, so lane skew (one
+        slow device) is observable via :meth:`lane_snapshot` instead of
+        being averaged into the global EMA.
 
         The execution EMA updates on every unit; the AIMD decision fires
         once per ``interval_units`` units, over that window's occupancy
@@ -170,6 +190,13 @@ class Autotuner:
             if self._global_exec_ema_ms is None else (
                 _EXEC_EMA_ALPHA * exec_ms
                 + (1.0 - _EXEC_EMA_ALPHA) * self._global_exec_ema_ms)
+        prev = self._lane_exec_ema_ms.get(lane)
+        self._lane_exec_ema_ms[lane] = exec_ms if prev is None else (
+            _EXEC_EMA_ALPHA * exec_ms + (1.0 - _EXEC_EMA_ALPHA) * prev)
+        occ_norm = occupancy / max(self.config.max_batch, 1)
+        prev_occ = self._lane_occ_ema.get(lane)
+        self._lane_occ_ema[lane] = occ_norm if prev_occ is None else (
+            _EXEC_EMA_ALPHA * occ_norm + (1.0 - _EXEC_EMA_ALPHA) * prev_occ)
         st.occupancies.append(occupancy)
         st.delays_ms.extend(queue_delays_ms)
         st.units_seen += 1
@@ -206,6 +233,20 @@ class Autotuner:
     def snapshot(self) -> Dict[int, float]:
         """{n_pad: current wait_ms} for every bucket seen so far."""
         return {n_pad: st.wait_ms for n_pad, st in self._buckets.items()}
+
+    def lane_snapshot(self) -> Dict[int, Dict[str, float]]:
+        """Per-lane feedback state: {lane: {exec_ema_ms, occupancy_ema}}
+        for every lane that has executed at least one unit. The service's
+        telemetry surfaces this; the lane scheduler's steal decisions use
+        live queue lengths, not these EMAs (the EMAs answer "is a lane
+        slow", the queues answer "is a lane backed up")."""
+        return {
+            lane: {
+                "exec_ema_ms": self._lane_exec_ema_ms[lane],
+                "occupancy_ema": self._lane_occ_ema.get(lane, 0.0),
+            }
+            for lane in sorted(self._lane_exec_ema_ms)
+        }
 
 
 class RefitPolicy:

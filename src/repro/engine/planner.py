@@ -14,7 +14,9 @@ closes that gap with two rounds of power-of-two bucketing:
 The result: for a given engine config, at most
 ``len(ENGINE_NPAD_BUCKETS) * (log2(max_batch) + 1)`` distinct compiled
 shapes ever exist, regardless of traffic. :class:`CompileCache` holds those
-executables, keyed on ``(backend, n_pad, batch)``.
+executables, keyed on ``(backend, cache_scope, kind, n_pad, batch)`` —
+the scope pins each program to the platform/device (or mesh slice) it
+was compiled against.
 """
 from __future__ import annotations
 
@@ -169,7 +171,16 @@ def realize_unit_csr(unit: WorkUnit, graphs: Sequence[Graph]):
 
 
 class CompileCache:
-    """Executable cache keyed on (backend name, kind, n_pad, batch).
+    """Executable cache keyed on (backend name, cache scope, kind, n_pad,
+    batch).
+
+    ``scope`` is ``backend.cache_scope()`` — the platform + device (or
+    mesh slice) the executable is pinned to: ``"host"`` for host
+    backends, ``"cpu:0"``-style for single-device jit backends,
+    ``"cpu:mesh8"`` for mesh-sharded ones (DESIGN.md §16). Two backends
+    that differ only in device placement (a 4- vs an 8-device mesh, or
+    the same code on CPU vs TPU) therefore never share a compiled
+    program.
 
     ``kind`` selects the executable family: ``"verdict"`` programs come
     from ``backend.compile_batch``, ``"fused"`` programs (the whole unit
@@ -195,7 +206,7 @@ class CompileCache:
     """
 
     def __init__(self):
-        self._fns: Dict[Tuple[str, str, int, int], Callable] = {}
+        self._fns: Dict[Tuple[str, str, str, int, int], Callable] = {}
         self.hits = 0
         self.misses = 0
 
@@ -204,13 +215,14 @@ class CompileCache:
 
     def get(self, backend, n_pad: int, batch: int,
             kind: str = "verdict") -> Callable:
-        key = (backend.name, kind, n_pad, batch)
+        scope = backend.cache_scope()
+        key = (backend.name, scope, kind, n_pad, batch)
         fn = self._fns.get(key)
         if fn is None:
             self.misses += 1
             _M_CACHE_MISSES.inc()
-            with obs.span("compile", backend=backend.name, kind=kind,
-                          n_pad=n_pad, batch=batch) as sp:
+            with obs.span("compile", backend=backend.name, scope=scope,
+                          kind=kind, n_pad=n_pad, batch=batch) as sp:
                 t0 = obs.clock.now()
                 if kind == "verdict":
                     fn = backend.compile_batch(n_pad, batch)

@@ -4,15 +4,23 @@ The registry (``engine.backends``) says what each backend *can* do; this
 module decides what it *should* do for a given work unit. The model is a
 per-backend linear form in the features that dominate measured runtime:
 
-    us_per_graph = dispatch_us/B + per_graph_us
-                   + sweep_us·n/B + n_us·n + n2_us·n² + m_us·m
+    us_per_graph = dispatch_us/B + per_graph_us + sweep_us·n/B
+                   + (n_us·n + n2_us·n² + m_us·m)/D + dev_us·(D-1)
 
-with ``m = density·n²`` (directed edge entries at the padded size). The
-terms mirror the implementations: every LexBFS runs n sequential sweeps,
-whose fixed per-sweep overhead (XLA thunk dispatch for the jit backends,
-numpy-call overhead for the host ones) is shared across a unit's batch
-(``sweep_us·n/B``); per-graph data cost is O(n) per sweep for the dense
-rank vector (``n2_us·n²``) and O(m) one-shot for the CSR PEO (``m_us·m``).
+with ``m = density·n²`` (directed edge entries at the padded size) and
+``D`` the ``device_count`` feature — how many devices the unit's batch
+shards across (PR 10). The terms mirror the implementations: every
+LexBFS runs n sequential sweeps, whose fixed per-sweep overhead (XLA
+thunk dispatch for the jit backends, numpy-call overhead for the host
+ones) is shared across a unit's batch (``sweep_us·n/B``); per-graph data
+cost is O(n) per sweep for the dense rank vector (``n2_us·n²``) and O(m)
+one-shot for the CSR PEO (``m_us·m``). Device parallelism divides the
+per-graph compute terms (each shard runs B/D graphs concurrently) and
+adds a per-device coordination term; single-device backends pin
+``max_devices=1`` so ``D`` degenerates to 1 and the PR 8 form is
+recovered exactly. ``D`` is clamped to the router's *fitted* device
+support (``fit_device_range``) — a model fitted from single-device live
+logs must never extrapolate multi-device costs (clamp_features).
 
 ``DEFAULT_COST_MODEL`` is least-squares fitted from
 ``benchmarks.kernel_bench.bench_router_samples`` measurements on the
@@ -47,13 +55,20 @@ class BackendCost:
     n_us: float = 0.0            # × n, per graph
     n2_us: float = 0.0           # × n², per graph
     m_us: float = 0.0            # × m (directed nnz), per graph
+    dev_us: float = 0.0          # × (D-1): per-device coordination cost
+    max_devices: int = 1         # device span this entry was fitted over
 
-    def us_per_graph(self, n: int, density: float, batch: int) -> float:
+    def us_per_graph(self, n: int, density: float, batch: int,
+                     device_count: int = 1) -> float:
         b = max(batch, 1)
+        # Per-entry clamp: a backend fitted single-device must not have
+        # its compute terms divided by a mesh width it never ran at.
+        d = max(1, min(int(device_count), self.max_devices))
         m = density * n * n
         return (self.dispatch_us / b + self.per_graph_us
-                + self.sweep_us * n / b + self.n_us * n
-                + self.n2_us * n * n + self.m_us * m)
+                + self.sweep_us * n / b
+                + (self.n_us * n + self.n2_us * n * n + self.m_us * m) / d
+                + self.dev_us * (d - 1))
 
 
 CostModel = Mapping[str, BackendCost]
@@ -151,6 +166,41 @@ DEFAULT_RECOGNITION_COST_MODEL: Dict[str, BackendCost] = {
 #: specialist backends (pallas_peo, sharded) stay opt-in by name.
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("numpy_ref", "jax_fast", "csr")
 
+# Per-platform coefficient overlays (PR 10). The defaults above are the
+# CPU CI reference fit; a platform overlay replaces/extends entries whose
+# measured coefficients differ structurally — today that is the sharded
+# mesh backend, whose device_count terms only exist where a mesh was
+# actually measured. The CPU entry is fitted from BENCH_mesh.json's
+# 8-device *emulated* scaling run (serialized shards — see TESTING.md),
+# so on CPU it prices sharding as batch-partitioning overhead, which is
+# honest there; a TPU/GPU deployment re-fits via refit_router() or
+# --tables router on real hardware and gets real dev_us coefficients.
+# Opt in via Router(platform="cpu", candidates=(*DEFAULT_CANDIDATES,
+# "sharded"), fit_device_range=(1, 8)).
+PLATFORM_COST_MODELS: Dict[str, Dict[str, BackendCost]] = {
+    "cpu": {
+        # Fitted via fit_cost_model over live unit samples from the
+        # BENCH_mesh calibration grid (n 64/128/256, B 32, D 1/2/4/8
+        # emulated devices, 72 samples): a fixed per-graph cost plus an
+        # n²/D compute term and a per-device partition/reassembly cost.
+        "sharded": BackendCost(
+            dispatch_us=2.9, per_graph_us=93.6, sweep_us=0.0,
+            n_us=0.0, n2_us=0.02192, m_us=0.0,
+            dev_us=4.81, max_devices=8),
+    },
+    "tpu": {},
+    "gpu": {},
+}
+
+
+def platform_cost_model(platform: Optional[str] = None
+                        ) -> Dict[str, BackendCost]:
+    """DEFAULT_COST_MODEL overlaid with the platform's fitted entries."""
+    model = dict(DEFAULT_COST_MODEL)
+    if platform:
+        model.update(PLATFORM_COST_MODELS.get(platform, {}))
+    return model
+
 #: n-range DEFAULT_COST_MODEL was fitted over (bench_router_samples sweeps
 #: the engine's n_pad buckets, smallest 16, largest measured 8192). Outside
 #: it, the linear forms have no data behind them: below the floor the csr
@@ -158,6 +208,12 @@ DEFAULT_CANDIDATES: Tuple[str, ...] = ("numpy_ref", "jax_fast", "csr")
 #: cost on paper while losing in practice, so routing must clamp rather
 #: than extrapolate.
 DEFAULT_FIT_N_RANGE: Tuple[int, int] = (16, 8192)
+
+#: Device span the default model was fitted over: single device. A
+#: router only prices multi-device execution after seeing multi-device
+#: measurements (a platform overlay entry, or refit_router over samples
+#: with device_count variation widening the range).
+DEFAULT_FIT_DEVICE_RANGE: Tuple[int, int] = (1, 1)
 
 
 class Router:
@@ -171,9 +227,12 @@ class Router:
         *,
         witness_cost_model: Optional[CostModel] = None,
         recognition_cost_model: Optional[CostModel] = None,
+        platform: Optional[str] = None,
+        fit_device_range: Tuple[int, int] = DEFAULT_FIT_DEVICE_RANGE,
     ):
         self.cost_model: Dict[str, BackendCost] = dict(
-            DEFAULT_COST_MODEL if cost_model is None else cost_model)
+            platform_cost_model(platform) if cost_model is None
+            else cost_model)
         # Witness-mode coefficients; a backend missing here falls back to
         # its verdict entry (custom verdict-only models keep working).
         self.witness_cost_model: Dict[str, BackendCost] = dict(
@@ -191,10 +250,15 @@ class Router:
         if not (0 < lo <= hi):
             raise ValueError(f"invalid fit_n_range {fit_n_range}")
         self.fit_n_range = (int(lo), int(hi))
+        dlo, dhi = fit_device_range
+        if not (0 < dlo <= dhi):
+            raise ValueError(f"invalid fit_device_range {fit_device_range}")
+        self.fit_device_range = (int(dlo), int(dhi))
 
     def clamp_features(
-        self, n: int, density: float, batch: int
-    ) -> Tuple[int, float, int]:
+        self, n: int, density: float, batch: int,
+        device_count: Optional[int] = None,
+    ):
         """Pull a feature point back inside the model's measured support.
 
         Degenerate requests (n below every bucket, zero-edge graphs whose
@@ -202,6 +266,14 @@ class Router:
         fit where it was never sampled, and the cheapest extrapolation wins
         for the wrong reasons. Clamping keeps the *ordering* question
         inside the regime the coefficients were measured on.
+
+        ``device_count`` gets the same treatment against
+        ``fit_device_range``: a model refitted from single-device live
+        logs has ``(1, 1)`` support, so pricing an 8-wide mesh with it
+        must collapse to the single-device estimate rather than divide
+        compute terms by a width nobody measured. Returns a 3-tuple when
+        ``device_count`` is omitted (the pre-PR 10 surface), a 4-tuple
+        when it is passed.
         """
         lo, hi = self.fit_n_range
         n = min(max(int(n), lo), hi)
@@ -209,23 +281,28 @@ class Router:
             density = 0.0
         density = min(max(float(density), 0.0), 1.0)
         batch = max(int(batch), 1)
-        return n, density, batch
+        if device_count is None:
+            return n, density, batch
+        dlo, dhi = self.fit_device_range
+        device_count = min(max(int(device_count), dlo), dhi)
+        return n, density, batch, device_count
 
     def estimate_us_per_graph(
         self, name: str, n: int, density: float, batch: int,
-        *, mode: str = "verdict",
+        *, mode: str = "verdict", device_count: int = 1,
     ) -> float:
         if mode == "witness":
             cost = self.witness_cost_model.get(name)
             if cost is not None:
-                return cost.us_per_graph(n, density, batch)
+                return cost.us_per_graph(n, density, batch, device_count)
         elif mode == "recognition":
             cost = self.recognition_cost_model.get(name)
             if cost is not None:
-                return cost.us_per_graph(n, density, batch)
+                return cost.us_per_graph(n, density, batch, device_count)
         elif mode != "verdict":
             raise ValueError(f"unknown routing mode {mode!r}")
-        return self.cost_model[name].us_per_graph(n, density, batch)
+        return self.cost_model[name].us_per_graph(
+            n, density, batch, device_count)
 
     def choose(
         self,
@@ -235,6 +312,7 @@ class Router:
         require: Iterable[str] = (),
         *,
         mode: str = "verdict",
+        device_count: int = 1,
     ) -> str:
         """Cheapest candidate whose capabilities cover ``require``.
 
@@ -248,9 +326,13 @@ class Router:
         coefficients and the ``properties`` capability. Features are
         clamped to the fitted support first (:meth:`clamp_features`), so
         degenerate inputs route like the nearest measured regime instead
-        of extrapolating.
+        of extrapolating. ``device_count`` is the mesh width available to
+        device-parallel candidates — clamped to ``fit_device_range``
+        here, and again per cost entry to its own ``max_devices`` (a
+        single-device backend never sees its compute terms divided).
         """
-        n, density, batch = self.clamp_features(n, density, batch)
+        n, density, batch, device_count = self.clamp_features(
+            n, density, batch, device_count)
         req = tuple(require)
         if mode == "witness" and "witness" not in req:
             req = req + ("witness",)
@@ -262,7 +344,8 @@ class Router:
             if any(not getattr(caps, r) for r in req):
                 continue
             cost = self.estimate_us_per_graph(
-                name, n, density, batch, mode=mode)
+                name, n, density, batch, mode=mode,
+                device_count=device_count)
             if cost < best_cost:
                 best_name, best_cost = name, cost
         if best_name is None:
@@ -272,7 +355,7 @@ class Router:
 
     def annotate(
         self, plan: Plan, graphs, *, witness: bool = False,
-        mode: Optional[str] = None,
+        mode: Optional[str] = None, device_count: int = 1,
     ) -> Plan:
         """Return a plan whose units carry per-unit backend choices.
 
@@ -282,6 +365,8 @@ class Router:
         plan's units will run certified executables, whose cost curves
         cross over elsewhere); ``mode`` overrides outright (the session's
         recognition path passes ``mode="recognition"``).
+        ``device_count`` is the mesh width available to device-parallel
+        candidates (see :meth:`choose`).
         """
         if mode is None:
             mode = "witness" if witness else "verdict"
@@ -291,7 +376,8 @@ class Router:
                 float(np.mean([graphs[i].n_edges for i in u.indices]))
                 if u.indices else 0.0)
             density = m_mean / float(u.n_pad * u.n_pad)
-            name = self.choose(u.n_pad, density, u.batch, mode=mode)
+            name = self.choose(u.n_pad, density, u.batch, mode=mode,
+                               device_count=device_count)
             units.append(dataclasses.replace(u, backend=name))
         return Plan(units=units, n_requests=plan.n_requests)
 
@@ -302,46 +388,65 @@ class Router:
 #: collinear features from inventing phantom terms that wreck routing at
 #: the regime boundaries.
 FIT_FEATURE_MASKS: Dict[str, Tuple[int, ...]] = {
-    # indices into (dispatch, per_graph, sweep, n, n2, m)
+    # indices into (dispatch, per_graph, sweep, n, n2, m, dev)
     "numpy_ref": (1, 3, 4),
     "jax_fast": (0, 1, 2, 3, 4),
     "csr": (0, 1, 2, 3, 4, 5),
     # One dispatch per unit; the in-kernel n-loop + comparator are pure
     # per-graph n/n² costs (density-independent: dense row reads).
     "pallas_peo": (0, 1, 3, 4),
+    # jax_fast-shaped compute per shard, plus the device_count terms:
+    # the per-graph n/n² features already carry the 1/D division, and
+    # feature 6 (= D-1) absorbs partition/reassembly coordination.
+    "sharded": (0, 1, 3, 4, 6),
 }
 
 
 def fit_cost_model(
-    samples: Sequence[Tuple[str, int, float, int, float]],
+    samples: Sequence[Tuple],
     feature_masks: Optional[Mapping[str, Tuple[int, ...]]] = None,
 ) -> Dict[str, BackendCost]:
     """Least-squares fit of per-backend coefficients from measurements.
 
-    ``samples`` rows are ``(backend, n, density, batch, us_per_graph)`` —
-    the format ``benchmarks.kernel_bench.bench_router_samples`` emits.
+    ``samples`` rows are ``(backend, n, density, batch, us_per_graph)``
+    or, since PR 10, ``(backend, n, density, batch, device_count,
+    us_per_graph)`` — the formats
+    ``benchmarks.kernel_bench.bench_router_samples`` and the engine's
+    live unit-sample log emit. 5-field rows fit at ``device_count=1``.
     The fit is *relative* (rows weighted by 1/µs — routing needs tiny-n
     rows as accurate as big-n rows), masked per backend
     (:data:`FIT_FEATURE_MASKS`), and clipped at 0 (a negative term has no
     physical reading and would let the router extrapolate nonsense).
+    Each fitted entry's ``max_devices`` is the largest device_count that
+    backend was actually measured at, so estimates never divide compute
+    terms past the fitted span.
     """
     masks = dict(FIT_FEATURE_MASKS)
     if feature_masks:
         masks.update(feature_masks)
-    by_backend: Dict[str, List[Tuple[int, float, int, float]]] = {}
-    for name, n, density, batch, us in samples:
-        by_backend.setdefault(name, []).append((n, density, batch, us))
+    by_backend: Dict[str, List[Tuple[int, float, int, int, float]]] = {}
+    for row in samples:
+        if len(row) == 5:
+            name, n, density, batch, us = row
+            d = 1
+        else:
+            name, n, density, batch, d, us = row
+        by_backend.setdefault(name, []).append(
+            (n, density, batch, max(int(d), 1), us))
     out: Dict[str, BackendCost] = {}
     for name, rows in by_backend.items():
         feats = np.array([
-            [1.0 / b, 1.0, n * 1.0 / b, n, n * n, density * n * n]
-            for n, density, b, _ in rows])
+            [1.0 / b, 1.0, n * 1.0 / b, n * 1.0 / d, n * n * 1.0 / d,
+             density * n * n / d, d - 1.0]
+            for n, density, b, d, _ in rows])
         mask = masks.get(name, (0, 1, 2, 3, 4, 5))
         target = np.array([us for *_, us in rows])
         w = (1.0 / target)[:, None]
         coef, *_ = np.linalg.lstsq(
             feats[:, mask] * w, target * w[:, 0], rcond=None)
-        full = np.zeros(6)
+        full = np.zeros(7)
         full[list(mask)] = np.clip(coef, 0.0, None)
-        out[name] = BackendCost(*[float(c) for c in full])
+        out[name] = BackendCost(
+            *[float(c) for c in full],
+            max_devices=max(d for *_, d, _us in rows))
     return out

@@ -13,11 +13,17 @@ that gap with the classic serving triad:
   oldest request has waited ``max_wait_ms``; the drained chunk becomes a
   :func:`~repro.engine.planner.unit_for_chunk` work unit, routed per unit
   by the engine's router (``backend="auto"`` is the default serving path).
-* **background executor thread** — pops routed units off an internal FIFO
-  and drives the session's single execution path
-  (``ChordalityEngine.execute_unit``): same compile cache, same realize
-  contract (dense or padded-CSR), so admission overlaps execution and the
-  compiled-shape universe is identical to offline runs.
+* **background executor lanes** — routed units land on per-lane deques
+  (one executor thread per lane, ``ServiceConfig.n_lanes``; the default 1
+  is the classic single-executor service). Admission dispatches each unit
+  to the least-loaded lane (weighted by ``lane_weights``) and an idle
+  lane steals from the most-loaded lane's tail, so a slow lane — a slow
+  device, in the mesh deployment of DESIGN.md §16 — never stalls the
+  admission loop or starves the other lanes. Every lane drives the
+  session's single execution path (``ChordalityEngine.execute_unit``):
+  same compile cache, same realize contract (dense or padded-CSR), so
+  admission overlaps execution and the compiled-shape universe is
+  identical to offline runs.
 
 Each ``submit`` returns a ``concurrent.futures.Future`` resolving to a
 :class:`ServiceResponse` (verdict, optional certificate, optional checkable
@@ -65,7 +71,6 @@ Three client-surface extras on top of the triad:
 from __future__ import annotations
 
 import dataclasses
-import queue
 import threading
 from concurrent.futures import Future
 from typing import Deque, Dict, List, Optional, Sequence, Tuple, Union
@@ -351,9 +356,16 @@ class AsyncChordalityEngine:
       buckets / router: forwarded to the inner engine.
 
     Thread safety: ``submit`` may be called from any number of threads.
-    The service runs exactly two daemon threads (admission + executor);
-    ``shutdown(drain=True)`` — or leaving a ``with`` block — resolves every
-    accepted future before returning.
+    The service runs ``1 + config.n_lanes`` daemon threads (admission +
+    one executor per lane; the default config runs the classic
+    admission + single-executor pair). ``shutdown(drain=True)`` — or
+    leaving a ``with`` block — resolves every accepted future before
+    returning.
+
+    Lock ordering: the service lock (``self._lock``) may be taken first
+    and the lane lock (``self._lane_cv``) second, never the reverse —
+    lane workers release the lane lock before executing a unit (which
+    takes the service lock to resolve futures).
     """
 
     def __init__(
@@ -415,7 +427,8 @@ class AsyncChordalityEngine:
             "repro_requests_total",
             "service requests by terminal outcome", labels=("outcome",))
         self._m_units = _m.counter(
-            "repro_units_total", "work units executed", labels=("kind",))
+            "repro_units_total", "work units executed",
+            labels=("kind", "device"))
         self._m_backend = _m.counter(
             "repro_backend_requests_total",
             "requests served per backend", labels=("backend",))
@@ -436,15 +449,36 @@ class AsyncChordalityEngine:
         self._m_refits = _m.counter(
             "repro_router_refits_total",
             "online router refits that updated at least one backend")
-        self._ready: "queue.Queue[Optional[_AdmittedUnit]]" = queue.Queue()
+        # Executor lanes (PR 10, DESIGN.md §16): one deque + one daemon
+        # thread per lane, all under one lane lock/condition. n_lanes=1
+        # degenerates to the classic single-executor service.
+        n_lanes = self.config.n_lanes
+        self._lane_weights: Tuple[float, ...] = (
+            self.config.lane_weights
+            if self.config.lane_weights is not None
+            else (1.0,) * n_lanes)
+        self._lane_queues: List[Deque[_AdmittedUnit]] = [
+            collections.deque() for _ in range(n_lanes)]
+        self._lane_cv = threading.Condition(threading.Lock())
+        self._lanes_closed = False
         self._admitter = threading.Thread(
             target=self._admission_loop, name="chordality-admission",
             daemon=True)
-        self._executor = threading.Thread(
-            target=self._executor_loop, name="chordality-executor",
-            daemon=True)
+        self._executors = [
+            threading.Thread(
+                target=self._lane_loop, args=(lane,),
+                name=f"chordality-executor-{lane}", daemon=True)
+            for lane in range(n_lanes)]
         self._admitter.start()
-        self._executor.start()
+        for t in self._executors:
+            t.start()
+
+    @property
+    def _executor(self) -> threading.Thread:
+        """Lane 0's executor thread — the single-executor service's
+        thread under its pre-lane name (kept for callers/tests that
+        join or liveness-check ``svc._executor``)."""
+        return self._executors[0]
 
     # -- client surface ----------------------------------------------------
     def warmup(self, sample: Sequence[Graph],
@@ -698,8 +732,10 @@ class AsyncChordalityEngine:
             self._work_cv.notify_all()
         t = self.config.drain_timeout_s if timeout is None else timeout
         self._admitter.join(t)
-        self._executor.join(t)
-        if self._admitter.is_alive() or self._executor.is_alive():
+        for th in self._executors:
+            th.join(t)
+        if self._admitter.is_alive() or \
+                any(th.is_alive() for th in self._executors):
             raise TimeoutError(f"service threads alive after {t}s")
 
     def __enter__(self) -> "AsyncChordalityEngine":
@@ -797,7 +833,7 @@ class AsyncChordalityEngine:
         if self._autotuner is None or self._n_deadlined == 0:
             return 0
         headroom = self._autotuner.knobs.shed_headroom
-        ready_units = self._ready.qsize()
+        ready_units = self._ready_units()
         shed = 0
         for n_pad, bq in self._pending.items():
             while len(bq) and self._n_deadlined:
@@ -875,7 +911,7 @@ class AsyncChordalityEngine:
                             # no interleaving can revive a drain.
                             self._cancel_pending_locked()
                         if not any(self._pending.values()):
-                            self._ready.put(None)  # executor stop sentinel
+                            self._close_lanes()  # lanes drain then stop
                             return
                     if next_expiry is not None:
                         expiry_wait = max(next_expiry - now, 0.0)
@@ -887,7 +923,7 @@ class AsyncChordalityEngine:
                 if self._force_drain and not any(self._pending.values()):
                     self._force_drain = self._closed  # keep for shutdown
             for au in admitted:
-                self._ready.put(au)
+                self._dispatch_unit(au)
 
     def _drain_bucket_locked(self, n_pad: int) -> List[_AdmittedUnit]:
         """Pop up to max_batch live requests; route; skip dead ones.
@@ -963,16 +999,75 @@ class AsyncChordalityEngine:
             unit=unit, requests=reqs, plan_span=plan_span))
         return out
 
-    # -- executor loop -----------------------------------------------------
-    def _executor_loop(self) -> None:
+    # -- executor lanes ----------------------------------------------------
+    def _ready_units(self) -> int:
+        """Units routed but not yet picked up by a lane (all lanes)."""
+        with self._lane_cv:
+            return sum(len(dq) for dq in self._lane_queues)
+
+    def _dispatch_unit(self, au: _AdmittedUnit) -> None:
+        """Least-loaded (weight-normalized) lane dispatch.
+
+        The admission loop places each routed unit on the lane whose
+        backlog-per-weight is smallest (ties to the lowest lane index), so
+        a weight-2 lane carries ~2x the units of a weight-1 lane in steady
+        state. A slow lane's queue grows, its normalized load rises, and
+        new work flows around it — the admission loop itself never blocks
+        on any lane.
+        """
+        with self._lane_cv:
+            lane = min(
+                range(len(self._lane_queues)),
+                key=lambda i: (len(self._lane_queues[i])
+                               / self._lane_weights[i], i))
+            self._lane_queues[lane].append(au)
+            self._lane_cv.notify_all()
+
+    def _close_lanes(self) -> None:
+        """Signal every lane to drain its remaining queue and exit."""
+        with self._lane_cv:
+            self._lanes_closed = True
+            self._lane_cv.notify_all()
+
+    def _take_unit_locked(self, lane: int) -> Optional[_AdmittedUnit]:
+        """Next unit for ``lane`` (lane lock held): own queue first,
+        else weighted steal from the most-loaded victim's tail.
+
+        An idle lane steals up to ``max(1, round(weight))`` units in one
+        grab — tail-first (the units the victim would reach last), then
+        re-ordered oldest-first onto its own queue — so a fast (heavily
+        weighted) lane drains a slow lane's backlog proportionally
+        faster. Returns None when every queue is empty.
+        """
+        dq = self._lane_queues[lane]
+        if dq:
+            return dq.popleft()
+        victims = [j for j in range(len(self._lane_queues))
+                   if j != lane and self._lane_queues[j]]
+        if not victims:
+            return None
+        victim = max(victims, key=lambda j: len(self._lane_queues[j]))
+        vq = self._lane_queues[victim]
+        k = min(len(vq), max(1, int(round(self._lane_weights[lane]))))
+        stolen = [vq.pop() for _ in range(k)]   # tail: newest first
+        stolen.reverse()                        # run oldest stolen first
+        dq.extend(stolen[1:])
+        return stolen[0]
+
+    def _lane_loop(self, lane: int) -> None:
         while True:
-            au = self._ready.get()
-            if au is None:
-                return
+            with self._lane_cv:
+                while True:
+                    au = self._take_unit_locked(lane)
+                    if au is not None:
+                        break
+                    if self._lanes_closed:
+                        return
+                    self._lane_cv.wait()
             try:
-                self._execute(au)
+                self._execute(au, lane)
             except Exception as e:                  # pragma: no cover
-                # Last-resort guard: an executor death would strand every
+                # Last-resort guard: a lane death would strand every
                 # outstanding future and hang all future submits, so any
                 # escaped exception fails this unit's requests instead.
                 self._fail_unit(au, e)
@@ -996,18 +1091,21 @@ class AsyncChordalityEngine:
                 self._backlog -= 1
             self._done_cv.notify_all()
 
-    def _execute(self, au: _AdmittedUnit) -> None:
+    def _execute(self, au: _AdmittedUnit, lane: int = 0) -> None:
         t_start = _clock.now()
         live = [r.future.set_running_or_notify_cancel()
                 for r in au.requests]
         graphs = [r.graph for r in au.requests]
-        # The shared "exec" span: entered on this executor thread so the
-        # session's unit/realize/compile/dispatch spans nest inside it,
-        # emit=False because it is adopted into each live request's root
-        # rather than emitted standalone. Queue spans close at its exact
-        # start instant so queue+exec+finalize sums to the root duration.
+        # The shared "exec" span: entered on this lane's executor thread
+        # so the session's unit/realize/compile/dispatch spans nest inside
+        # it, emit=False because it is adopted into each live request's
+        # root rather than emitted standalone. The ``lane`` attribute ties
+        # the span to the executor lane that ran the unit. Queue spans
+        # close at its exact start instant so queue+exec+finalize sums to
+        # the root duration.
         exec_span = self._tracer.span(
-            "exec", emit=False, n_pad=au.unit.n_pad, batch=au.unit.batch)
+            "exec", emit=False, n_pad=au.unit.n_pad, batch=au.unit.batch,
+            lane=lane)
         if self._tracer.enabled:
             exec_span.t_start = t_start
             for r in au.requests:
@@ -1086,7 +1184,12 @@ class AsyncChordalityEngine:
             if unit_wits is not None:
                 self.stats.witness_upgraded += 1
                 kinds.append("witness")
-            self._m_units.inc(kind="+".join(kinds) or "verdict")
+            try:
+                device = self.engine._resolve(backend_name).cache_scope()
+            except Exception:
+                device = "host"
+            self._m_units.inc(
+                kind="+".join(kinds) or "verdict", device=device)
             self.stats.record_exec_latency(exec_ms)
             self._m_exec_ms.observe(exec_ms)
             occ = sum(live)       # cancelled-after-drain slots don't count
@@ -1164,7 +1267,8 @@ class AsyncChordalityEngine:
                 self._backlog -= 1
             if self._autotuner is not None:
                 if self._autotuner.observe_unit(
-                        au.unit.n_pad, occ, live_delays, exec_ms):
+                        au.unit.n_pad, occ, live_delays, exec_ms,
+                        lane=lane):
                     self.stats.wait_adjustments += 1
                     self._m_wait_adjust.inc()
                     decision = self._autotuner.last_decision
@@ -1247,12 +1351,20 @@ class AsyncChordalityEngine:
             backend_mix = dict(st.backend_histogram)
             autotune = None if self._autotuner is None \
                 else self._autotuner.snapshot()
+            lanes = {
+                "n_lanes": self.config.n_lanes,
+                "weights": list(self._lane_weights),
+                "ready_units": self._ready_units(),
+            }
+            if self._autotuner is not None:
+                lanes["autotune"] = self._autotuner.lane_snapshot()
         engine_tel = self.engine.telemetry()   # takes no service state
         return {
             "stages": stages,
             "requests": requests,
             "units": units,
             "backend_mix": backend_mix,
+            "lanes": lanes,
             "cache": engine_tel["cache"],
             "router_samples": engine_tel["router_samples"],
             "autotune_wait_ms": autotune,

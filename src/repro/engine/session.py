@@ -64,7 +64,8 @@ class EngineStats:
     backend_histogram: Dict[str, int] = dataclasses.field(
         default_factory=dict)
     # Router-calibration rows, one per executed unit:
-    # (backend, n_pad, density, batch, us_per_graph) — the exact sample
+    # (backend, n_pad, density, batch, device_count, us_per_graph) — the
+    # exact sample
     # format ``repro.engine.router.fit_cost_model`` consumes, so a session
     # can re-fit its router from its own measurements (refit_router).
     unit_samples: List[tuple] = dataclasses.field(default_factory=list)
@@ -171,8 +172,9 @@ class ChordalityEngine:
         self.witness_default = witness
         self.cache = CompileCache()
         # Engine-lifetime measurement log feeding refit_router(); every
-        # execute_unit appends one (backend, n, density, batch, us/graph)
-        # row, from sync runs and the async service's executor alike.
+        # execute_unit appends one (backend, n, density, batch,
+        # device_count, us/graph) row, from sync runs and the async
+        # service's executor alike.
         # Bounded: beyond the cap the oldest rows roll off, so a long-lived
         # serving process keeps a recent-window fit, not a memory leak.
         # Appends/trims are GIL-atomic list ops; readers snapshot first.
@@ -387,7 +389,8 @@ class ChordalityEngine:
             backend.name, unit.n_pad,
             float(np.mean([graphs[i].n_edges for i in unit.indices]))
             / float(unit.n_pad * unit.n_pad) if unit.indices else 0.0,
-            unit.batch, exec_ms * 1e3 / max(unit.batch, 1))
+            unit.batch, int(getattr(backend, "device_count", 1) or 1),
+            exec_ms * 1e3 / max(unit.batch, 1))
         self._router_samples.append(sample)
         self._router_samples_total += 1
         excess = len(self._router_samples) - self._router_samples_cap
@@ -574,8 +577,9 @@ class ChordalityEngine:
         measured unit latencies (ROADMAP PR 3 extension).
 
         Every executed unit leaves one ``(backend, n_pad, density, batch,
-        us_per_graph)`` row in the engine's measurement log (surfaced per
-        run as ``EngineStats.unit_samples``); this re-runs the same
+        device_count, us_per_graph)`` row in the engine's measurement log
+        (surfaced per run as ``EngineStats.unit_samples``); this re-runs
+        the same
         least-squares fit the offline ``--tables router`` calibration uses
         on those rows, updates the router's coefficients for every backend
         with at least ``min_samples`` measurements (others keep their
@@ -627,6 +631,12 @@ class ChordalityEngine:
         lo, hi = min(ns), max(ns)
         if lo < hi:
             self.router.fit_n_range = (int(lo), int(hi))
+        # Device support clamps to what the live log actually measured —
+        # including *narrowing* to (1, 1) when every sample ran single-
+        # device, so a refit from such logs never extrapolates mesh costs
+        # (the PR 10 clamp_features satellite; tests/test_router.py).
+        ds = {s[4] for s in samples}
+        self.router.fit_device_range = (int(min(ds)), int(max(ds)))
         return tuple(sorted(fitted))
 
     @property

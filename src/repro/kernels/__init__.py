@@ -14,6 +14,13 @@ increment is lock-protected — it is ticked from the async service's
 background executor threads, where GIL-only atomicity is not a
 guarantee for ``+=``. The legacy surface (``.count`` attribute,
 ``tick``/``delta``, tests assigning ``count`` directly) is preserved.
+
+Since PR 10 the metric family carries a ``device`` label so mesh-sharded
+dispatches are attributable to the device slice that ran them
+(``"cpu:mesh8"`` — see ``repro.engine.mesh.mesh_signature``). Legacy
+tick sites stay label-free at the call site and land in the ``"host"``
+series; ``.count``/``.delta`` sum across every device series, so all
+pre-existing dispatch accounting is unchanged.
 """
 from __future__ import annotations
 
@@ -28,19 +35,25 @@ class DispatchCounter:
     def __init__(self, metric: Counter | None = None) -> None:
         self._metric = metric if metric is not None else _registry.counter(
             "repro_dispatches_total",
-            "host-level compiled-program launches (jit / pallas_call)")
+            "host-level compiled-program launches (jit / pallas_call)",
+            labels=("device",))
 
-    def tick(self, k: int = 1) -> None:
-        self._metric.inc(k)
+    def tick(self, k: int = 1, device: str = "host") -> None:
+        self._metric.inc(k, device=device)
 
     @property
     def count(self) -> int:
-        return int(self._metric.value())
+        # Sum across device series: dispatch accounting (bench deltas,
+        # fused-unit tests) is device-agnostic by contract.
+        return int(self._metric.total())
 
     @count.setter
     def count(self, value: int) -> None:
         # Legacy test hook: suites snapshot-and-reset the raw attribute.
-        self._metric.set_value(int(value))
+        # Zero every device series first so the total equals ``value``.
+        for key in list(self._metric.series()):
+            self._metric.set_value(0, **dict(zip(self._metric.labels, key)))
+        self._metric.set_value(int(value), device="host")
 
     def delta(self, since: int) -> int:
         return self.count - since

@@ -319,7 +319,7 @@ def test_engine_witness_runs_use_fused_witness_cache_kind():
     eng = ChordalityEngine(
         backend="pallas_peo", max_batch=4, pipeline="fused", interpret=True)
     res = eng.run(_zoo(), witness=True)
-    kinds = {key[1] for key in eng.cache._fns}
+    kinds = {key[2] for key in eng.cache._fns}
     assert "fused_witness" in kinds
     ref = ChordalityEngine(backend="numpy_ref", max_batch=4).run(_zoo())
     np.testing.assert_array_equal(res.verdicts, ref.verdicts)

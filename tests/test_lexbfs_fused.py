@@ -172,7 +172,7 @@ def test_fused_cache_entries_are_kind_fused():
     eng = ChordalityEngine(
         backend="pallas_peo", max_batch=4, pipeline="fused", interpret=True)
     eng.run(_zoo())
-    kinds = {key[1] for key in eng.cache._fns}
+    kinds = {key[2] for key in eng.cache._fns}
     assert kinds == {"fused_packed"}
 
 

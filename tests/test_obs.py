@@ -479,3 +479,63 @@ def test_profiling_bridge_is_nullcontext_when_disabled():
             pass                            # real TraceAnnotation path
     finally:
         obs.disable_jax_annotations()
+
+
+# ---------------------------------------------------------------------------
+# Multi-lane executor (PR 10): exec spans carry the lane, every terminal
+# path still closes its tree with n_lanes > 1.
+# ---------------------------------------------------------------------------
+def test_multilane_completed_traces_close_and_carry_lane():
+    sink = obs.ListSink()
+    obs.enable_tracing(sink)
+    cfg = ServiceConfig(max_batch=2, max_wait_ms=0.5, n_lanes=3)
+    with AsyncChordalityEngine(config=cfg, backend="numpy_ref") as svc:
+        futs = svc.submit_many(
+            [G.cycle(9) for _ in range(10)] + [G.clique(5)])
+        gather(futs, timeout=120)
+    obs.disable_tracing()
+    roots = _request_roots(sink)
+    assert len(roots) == 11 and all(r.closed for r in roots)
+    for r in roots:
+        assert r.attrs["outcome"] == "completed"
+        _stage_sum_equals_wall(r)
+        ex = next(c for c in r.children if c.name == "exec")
+        assert ex.attrs["lane"] in (0, 1, 2)
+
+
+def test_multilane_cancelled_traces_close():
+    sink = obs.ListSink()
+    obs.enable_tracing(sink)
+    svc = AsyncChordalityEngine(
+        config=_quiet_config(n_lanes=2), backend="numpy_ref")
+    try:
+        fut = svc.submit(G.cycle(9))
+        assert fut.cancel()
+    finally:
+        svc.shutdown(drain=False)
+    obs.disable_tracing()
+    roots = _request_roots(sink)
+    assert len(roots) == 1 and roots[0].closed
+    assert roots[0].attrs["outcome"] == "cancelled"
+
+
+def test_multilane_failed_unit_closes_traces():
+    sink = obs.ListSink()
+    obs.enable_tracing(sink)
+    cfg = ServiceConfig(max_batch=1, max_wait_ms=0.0, n_lanes=2)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    try:
+        def boom(unit, graphs):
+            raise RuntimeError("lane boom")
+
+        svc.engine.execute_unit = boom
+        futs = [svc.submit(G.cycle(9)) for _ in range(3)]
+        for f in futs:
+            with pytest.raises(RuntimeError, match="lane boom"):
+                f.result(timeout=60)
+    finally:
+        svc.shutdown(drain=False)
+    obs.disable_tracing()
+    roots = _request_roots(sink)
+    assert len(roots) == 3 and all(r.closed for r in roots)
+    assert {r.attrs["outcome"] for r in roots} == {"failed"}

@@ -220,7 +220,7 @@ def test_recognition_cache_kinds_are_per_property_set():
     eng.run([G.path(4)], properties=["chordal"])
     eng.run([G.path(4)], properties=["proper_interval"])
     eng.run([G.path(4)], properties=["proper_interval", "chordal"])  # hit
-    kinds = {k[1] for k in eng.cache._fns}
+    kinds = {k[2] for k in eng.cache._fns}
     assert "recognition:chordal" in kinds
     assert "recognition:chordal,proper_interval" in kinds
     assert len([k for k in kinds if k.startswith("recognition:")]) == 2

@@ -316,7 +316,109 @@ def test_stats_surface_unit_samples():
     eng = ChordalityEngine(backend="auto", max_batch=8)
     res = eng.run([_edge_graph(64, 6, s) for s in range(8)])
     assert len(res.stats.unit_samples) == res.stats.n_units
-    name, n, density, batch, us = res.stats.unit_samples[0]
+    name, n, density, batch, device_count, us = res.stats.unit_samples[0]
     assert name in eng.router.candidates
     assert n == 64 and batch == 8
     assert 0.0 < density < 1.0 and us > 0.0
+    # auto candidates are all single-device backends
+    assert device_count == 1
+
+
+# ---------------------------------------------------------------------------
+# device_count feature (PR 10): mesh-aware pricing, clamped to fitted
+# support so single-device logs never extrapolate multi-device costs.
+# ---------------------------------------------------------------------------
+def test_us_per_graph_device_count_divides_compute_terms():
+    c = BackendCost(dispatch_us=100, per_graph_us=10, sweep_us=2,
+                    n_us=1, n2_us=0.5, m_us=0.25, dev_us=3, max_devices=8)
+    # d=1 recovers the legacy form exactly (test_cost_formula_terms)
+    assert c.us_per_graph(4, 0.5, 2, device_count=1) == pytest.approx(78.0)
+    # d=4: compute terms (4 + 8 + 2) divide by 4, coordination adds 3*(4-1)
+    assert c.us_per_graph(4, 0.5, 2, device_count=4) == pytest.approx(
+        50 + 10 + 4 + (4 + 8 + 2) / 4 + 9)
+    # past the fitted span the entry clamps to its own max_devices
+    assert c.us_per_graph(4, 0.5, 2, device_count=64) == \
+        c.us_per_graph(4, 0.5, 2, device_count=8)
+
+
+def test_device_count_is_inert_for_single_device_entries():
+    # Every committed default entry is a single-device fit
+    # (max_devices=1): pricing with a mesh width must change nothing.
+    for c in DEFAULT_COST_MODEL.values():
+        assert c.us_per_graph(256, 0.1, 8, device_count=8) == \
+            c.us_per_graph(256, 0.1, 8)
+
+
+def test_clamp_features_clamps_device_count_to_fitted_support():
+    # The satellite fix: a router whose model was fitted single-device
+    # (the default) must clamp device_count to 1 rather than price a
+    # mesh width nobody measured.
+    r = Router()
+    assert r.fit_device_range == (1, 1)
+    assert r.clamp_features(256, 0.1, 8, 8) == (256, 0.1, 8, 1)
+    # a router fitted over a real device span passes it through...
+    r8 = Router(fit_device_range=(1, 8))
+    assert r8.clamp_features(256, 0.1, 8, 8) == (256, 0.1, 8, 8)
+    # ...and clamps past its edges
+    assert r8.clamp_features(256, 0.1, 8, 64)[3] == 8
+    assert r8.clamp_features(256, 0.1, 8, 0)[3] == 1
+    # the 3-feature surface is unchanged (pre-PR 10 callers)
+    assert r.clamp_features(256, 0.1, 8) == (256, 0.1, 8)
+
+
+def test_router_rejects_invalid_fit_device_range():
+    with pytest.raises(ValueError, match="fit_device_range"):
+        Router(fit_device_range=(0, 8))
+    with pytest.raises(ValueError, match="fit_device_range"):
+        Router(fit_device_range=(8, 1))
+
+
+def test_platform_overlay_prices_sharded_mesh():
+    from repro.engine.router import platform_cost_model
+
+    # The bare default model carries no sharded entry; the cpu overlay
+    # does (fitted from the emulated-mesh scaling bench).
+    assert "sharded" not in DEFAULT_COST_MODEL
+    cpu = platform_cost_model("cpu")
+    assert "sharded" in cpu and cpu["sharded"].max_devices == 8
+    r = Router(platform="cpu",
+               candidates=("numpy_ref", "jax_fast", "csr", "sharded"),
+               fit_device_range=(1, 8))
+    est = r.estimate_us_per_graph
+    # more devices -> cheaper big dense units, never more expensive
+    assert est("sharded", 1024, 0.3, 32, device_count=8) < \
+        est("sharded", 1024, 0.3, 32, device_count=1)
+    # single-device, sharded never undercuts the plain jit path it wraps
+    assert est("sharded", 256, 0.1, 8, device_count=1) >= \
+        est("jax_fast", 256, 0.1, 8)
+
+
+def test_fit_cost_model_learns_device_terms():
+    true = BackendCost(dispatch_us=120, per_graph_us=2, n_us=0.4,
+                       n2_us=0.01, dev_us=15, max_devices=8)
+    samples = [
+        ("sharded", n, 0.1, b, d, true.us_per_graph(n, 0.1, b, d))
+        for n in (64, 256, 1024) for b in (8, 32) for d in (1, 2, 4, 8)
+    ]
+    fitted = fit_cost_model(samples)["sharded"]
+    assert fitted.max_devices == 8
+    for n, b, d in ((128, 16, 1), (512, 8, 4), (1024, 32, 8)):
+        assert fitted.us_per_graph(n, 0.1, b, d) == pytest.approx(
+            true.us_per_graph(n, 0.1, b, d), rel=0.05)
+    # legacy 5-field rows still fit (at device_count=1, max_devices=1)
+    legacy = fit_cost_model(
+        [("jax_fast", n, 0.1, 8, DEFAULT_COST_MODEL["jax_fast"]
+          .us_per_graph(n, 0.1, 8)) for n in (64, 128, 256, 512)])
+    assert legacy["jax_fast"].max_devices == 1
+
+
+def test_refit_clamps_device_support_to_observed_single_device():
+    # Live logs from a single-device session must narrow the device
+    # support to (1, 1) — even on a router that started mesh-capable.
+    eng = ChordalityEngine(
+        backend="auto", max_batch=8,
+        router=Router(fit_device_range=(1, 8)))
+    _run_streams(eng)
+    assert eng.refit_router(min_samples=2)
+    assert eng.router.fit_device_range == (1, 1)
+    assert eng.router.clamp_features(256, 0.1, 8, 8)[3] == 1

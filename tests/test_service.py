@@ -785,9 +785,9 @@ def test_priority_classes_drain_weighted_fair():
     try:
         unit_orders = []
         orig = svc._execute
-        svc._execute = lambda au: (
+        svc._execute = lambda au, lane=0: (
             unit_orders.append([r.priority for r in au.requests]),
-            orig(au))[1]
+            orig(au, lane))[1]
         # Both classes queued before any drain: two full units follow.
         with svc._lock:
             futs = [_inject_locked(svc, G.cycle(9), priority=p)
@@ -883,3 +883,117 @@ def test_deadline_free_requests_are_never_shed():
         assert all(f.result(1).verdict is False for f in futs)
     finally:
         svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Executor lanes (PR 10): weighted dispatch, work-stealing, lane isolation.
+# ---------------------------------------------------------------------------
+def test_service_config_validates_lanes():
+    with pytest.raises(ValueError, match="n_lanes"):
+        ServiceConfig(n_lanes=0)
+    with pytest.raises(ValueError, match="lane_weights length"):
+        ServiceConfig(n_lanes=2, lane_weights=(1.0,))
+    with pytest.raises(ValueError, match="positive"):
+        ServiceConfig(n_lanes=2, lane_weights=(1.0, -1.0))
+    assert ServiceConfig(n_lanes=1).lane_weights is None
+
+
+def test_lane_dispatch_is_weighted_least_loaded():
+    """Units land on the lane with the smallest backlog-per-weight, so a
+    weight-2 lane accumulates twice the units of a weight-1 lane."""
+    cfg = _quiet_config(n_lanes=3, lane_weights=(1.0, 1.0, 2.0))
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    svc.shutdown()      # lanes exited: the queues are ours to inspect
+    for _ in range(8):
+        svc._dispatch_unit(object())
+    assert [len(q) for q in svc._lane_queues] == [2, 2, 4]
+
+
+def test_idle_lane_steals_weighted_from_victim_tail():
+    cfg = _quiet_config(n_lanes=2, lane_weights=(1.0, 3.0))
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    svc.shutdown()
+    svc._lane_queues[0].extend([1, 2, 3, 4, 5])
+    # Lane 1 (weight 3) is idle: steals 3 units from lane 0's tail,
+    # runs the oldest of the stolen (3), keeps 4 and 5 on its own queue.
+    with svc._lane_cv:
+        got = svc._take_unit_locked(1)
+    assert got == 3
+    assert list(svc._lane_queues[1]) == [4, 5]
+    assert list(svc._lane_queues[0]) == [1, 2]
+    # The owner still drains its own head first.
+    with svc._lane_cv:
+        assert svc._take_unit_locked(0) == 1
+    svc._lane_queues[0].clear()
+    svc._lane_queues[1].clear()
+    with svc._lane_cv:
+        assert svc._take_unit_locked(0) is None
+
+
+def test_slow_lane_does_not_stall_other_lanes():
+    """One lane stuck mid-unit must not block admission or the other
+    lane: later submissions complete while the first unit is wedged —
+    the work-stealing rescue the lane scheduler exists for."""
+    release, started = threading.Event(), threading.Event()
+    flag_lock = threading.Lock()
+    state = {"first": True}
+    cfg = ServiceConfig(max_batch=1, max_wait_ms=0.0, n_lanes=2)
+    svc = AsyncChordalityEngine(config=cfg, backend="numpy_ref")
+    orig = svc._execute
+
+    def gated(au, lane=0):
+        with flag_lock:
+            first, state["first"] = state["first"], False
+        if first:
+            started.set()
+            release.wait(timeout=60)
+        return orig(au, lane)
+
+    svc._execute = gated
+    try:
+        slow = svc.submit(G.cycle(9))
+        assert started.wait(timeout=30)
+        fast = [svc.submit(G.clique(4)) for _ in range(4)]
+        for f in fast:
+            assert f.result(timeout=60).verdict
+        assert not slow.done()
+        release.set()
+        assert slow.result(timeout=60).verdict is False
+    finally:
+        release.set()
+        svc.shutdown()
+
+
+def test_multilane_service_matches_sync_engine(sync_verdicts):
+    cfg = ServiceConfig(max_batch=4, max_wait_ms=1.0, n_lanes=4)
+    with AsyncChordalityEngine(config=cfg, backend="numpy_ref") as svc:
+        got = [r.verdict for r in
+               gather(svc.submit_many(_stream()), timeout=120)]
+    np.testing.assert_array_equal(got, sync_verdicts)
+
+
+def test_multilane_autotuner_sees_lane_feedback():
+    cfg = ServiceConfig(max_batch=2, max_wait_ms=0.5, n_lanes=2,
+                        autotune=AutotuneConfig())
+    with AsyncChordalityEngine(config=cfg, backend="numpy_ref") as svc:
+        gather(svc.submit_many([G.cycle(9)] * 8), timeout=120)
+        tel = svc.telemetry()
+        snap = svc._autotuner.lane_snapshot()
+    assert tel["lanes"]["n_lanes"] == 2
+    assert tel["lanes"]["weights"] == [1.0, 1.0]
+    assert snap, "no lane reported an exec EMA"
+    for lane, st in snap.items():
+        assert lane in (0, 1)
+        assert st["exec_ema_ms"] > 0
+        assert 0.0 < st["occupancy_ema"] <= 1.0
+
+
+def test_units_metric_carries_device_label():
+    from repro import obs
+
+    cfg = ServiceConfig(max_batch=2, max_wait_ms=0.5)
+    with AsyncChordalityEngine(config=cfg, backend="numpy_ref") as svc:
+        svc.submit(G.cycle(9)).result(timeout=60)
+    series = obs.registry.snapshot()["repro_units_total"]["series"]
+    host = [s for s in series if s["labels"].get("device") == "host"]
+    assert host and sum(s["value"] for s in host) >= 1

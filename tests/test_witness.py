@@ -287,7 +287,7 @@ def test_sharded_backend_falls_back_for_witnesses():
     for g, w in zip(graphs, res.witnesses):
         assert W.verify_witness(_adj(g), w) is None
     # and the fallback rode the cache under its own name
-    assert any(k[0] == "jax_faithful" and k[1] == "witness"
+    assert any(k[0] == "jax_faithful" and k[2] == "witness"
                for k in eng.cache._fns)
 
 
